@@ -1,0 +1,29 @@
+"""Paper Table 1 (small bottom model) and Table 7 (large/ResNet bottom):
+accuracy comparison across the five datasets and five methods."""
+from __future__ import annotations
+
+from repro.core.runtime import ExperimentConfig, run_experiment
+from repro.data.synthetic import DATASETS
+
+from benchmarks.common import EPOCHS, SCALE, SEED, emit
+
+METHODS = ("vfl", "vfl_ps", "avfl", "avfl_ps", "pubsub")
+
+
+def run(large: bool = False) -> None:
+    table = "table7" if large else "table1"
+    for ds in DATASETS:
+        for m in METHODS:
+            r = run_experiment(ExperimentConfig(
+                method=m, dataset=ds, scale=SCALE, n_epochs=EPOCHS,
+                batch_size=64, seed=SEED, resnet=large,
+                depth=18 if large else 10))
+            us = r["sim_s_per_epoch"] * 1e6
+            emit(f"{table}/{ds}/{m}", us,
+                 f"{r['metric']}={r['final']:.4f}")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+    emit_header()
+    run()

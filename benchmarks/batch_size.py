@@ -1,0 +1,26 @@
+"""Paper Table 3: effect of batch size (w_a = w_p = 8)."""
+from __future__ import annotations
+
+from repro.core.runtime import ExperimentConfig, run_experiment
+
+from benchmarks.common import EPOCHS, SCALE, SEED, emit
+
+BATCHES = [16, 32, 64, 128, 256, 512, 1024]
+
+
+def run() -> None:
+    for B in BATCHES:
+        r = run_experiment(ExperimentConfig(
+            method="pubsub", dataset="synthetic",
+            scale=max(SCALE * 0.1, 0.002), n_epochs=EPOCHS,
+            batch_size=B, w_a=8, w_p=8, seed=SEED))
+        emit(f"table3/B={B}", r["sim_s_per_epoch"] * 1e6,
+             f"auc={r['final']:.4f};sim_s={r['sim_s']:.2f};"
+             f"util={r['cpu_util']*100:.2f}%;"
+             f"wait={r['waiting_per_epoch']:.4f};comm_mb={r['comm_mb']:.1f}")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+    emit_header()
+    run()

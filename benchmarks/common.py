@@ -1,0 +1,33 @@
+"""Shared benchmark helpers: CSV emission + scaled defaults.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
+contract) where `us_per_call` is the simulated per-iteration latency in
+microseconds and `derived` carries the table's headline quantity.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Iterable, List
+
+# dataset scale for benchmarks (1.0 = paper-size; CI default small)
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.05"))
+EPOCHS = int(os.environ.get("REPRO_BENCH_EPOCHS", "5"))
+SEED = int(os.environ.get("REPRO_BENCH_SEED", "0"))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def emit_header() -> None:
+    print("name,us_per_call,derived", flush=True)
+
+
+def us_per_iter(result: dict) -> float:
+    """Simulated seconds/epoch -> us per training iteration."""
+    n_iters = max(len(result.get("losses", [1])), 1)
+    per_epoch = result["sim_s_per_epoch"]
+    n_batches = max(result.get("n_batches", 1), 1)
+    return per_epoch * 1e6 / max(n_batches, 1)

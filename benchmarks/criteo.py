@@ -1,0 +1,33 @@
+"""Paper Table 9 (Appendix H): scalability on the Criteo-style dataset.
+
+The paper uses Criteo 1TB (4.5B samples); no network access here, so the
+generator mirrors its shape (39 features, sparse-ish, noisy labels) at
+REPRO_BENCH_SCALE x 4.5M samples (a further /1000 of the paper's run,
+flagged in the row name).  Metrics mirror Table 9: AUC, runtime,
+utilization, waiting, comm.
+"""
+from __future__ import annotations
+
+from repro.core.runtime import ExperimentConfig, run_experiment
+
+from benchmarks.common import EPOCHS, SCALE, SEED, emit
+
+METHODS = ("vfl", "vfl_ps", "avfl", "avfl_ps", "pubsub")
+
+
+def run() -> None:
+    scale = max(SCALE * 0.01, 5e-4)           # criteo is 4.5B rows
+    for m in METHODS:
+        r = run_experiment(ExperimentConfig(
+            method=m, dataset="criteo", scale=scale, n_epochs=EPOCHS,
+            batch_size=64, w_a=8, w_p=10, seed=SEED))
+        emit(f"table9/criteo/{m}", r["sim_s_per_epoch"] * 1e6,
+             f"auc={r['final']:.4f};sim_s={r['sim_s']:.2f};"
+             f"util={r['cpu_util']*100:.1f}%;"
+             f"wait={r['waiting_per_epoch']:.3f};comm_mb={r['comm_mb']:.1f}")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+    emit_header()
+    run()

@@ -1,0 +1,71 @@
+"""Beyond-paper: cut-layer placement as a planning dimension.
+
+In the paper the parties' workloads are fixed (given bottom models) and
+the planner balances with (w_a, w_p, B).  When the backbone is a deep
+LLM, the *cut index* itself controls the active/passive compute split —
+so the planner gains a fourth knob.  This benchmark sweeps the cut
+through an assigned architecture, derives each party's per-batch compute
+from the split parameter counts, and runs the PubSub DES: the balanced
+cut minimizes simulated step time, exactly as Eq. 4 predicts.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.cost_model import PartyProfile, SystemProfile
+from repro.core.des import RunConfig, simulate
+from repro.models.transformer import split_stages
+
+from benchmarks.common import emit
+
+ARCH = "qwen2-0.5b"
+FRACTIONS = (0.125, 0.25, 0.5, 0.75, 0.875)
+
+
+def _stage_params(cfg, stages) -> int:
+    sub = cfg.replace(stages=stages,
+                      n_layers=sum(r * len(p) for r, p in stages),
+                      cut_layer=None)
+    # per-layer params only (exclude embed/head): count via layer_specs
+    n = 0
+    d, hd = sub.d_model, sub.resolved_head_dim
+    for mixer, ffn in sub.layer_specs:
+        if mixer in ("attn", "local_attn"):
+            n += d * sub.n_heads * hd + 2 * d * sub.n_kv_heads * hd \
+                + sub.n_heads * hd * d
+        if ffn == "dense":
+            n += 3 * d * sub.d_ff
+    return n
+
+
+def run() -> None:
+    cfg = get_config(ARCH)
+    results = []
+    for frac in FRACTIONS:
+        cut = max(1, min(cfg.n_layers - 1, int(cfg.n_layers * frac)))
+        bottom, top = split_stages(cfg.resolved_stages, cut)
+        n_b, n_t = _stage_params(cfg, bottom), _stage_params(cfg, top)
+        # per-party compute scales with its share of backbone params
+        # (the active party additionally runs f_a + the head, folded into
+        # the top share); feature_dim is the cost model's scale knob
+        total = n_b + n_t
+        prof = SystemProfile(
+            active=PartyProfile(cores=32, feature_dim=max(int(
+                250 * 2 * n_t / total), 1), ref_feature_dim=250),
+            passive=PartyProfile(cores=32, feature_dim=max(int(
+                250 * 2 * n_b / total), 1), ref_feature_dim=250))
+        r = simulate(RunConfig(method="pubsub", n_samples=16384,
+                               batch_size=256, n_epochs=2, w_a=8, w_p=8,
+                               profile=prof))
+        results.append((frac, r))
+        emit(f"cut/{ARCH}/frac={frac:g}", r.total_time / 2 * 1e6,
+             f"sim_s={r.total_time:.3f};util={r.cpu_util * 100:.1f}%;"
+             f"bottom_share={n_b / total:.2f}")
+    best = min(results, key=lambda fr: fr[1].total_time)
+    emit(f"cut/{ARCH}/best", 0.0,
+         f"frac={best[0]:g} (balanced cut minimizes step time)")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+    emit_header()
+    run()

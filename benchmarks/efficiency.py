@@ -1,0 +1,41 @@
+"""Paper Fig. 3: computation & communication efficiency on the synthetic
+dataset — running time to target accuracy, CPU utilization, waiting time,
+and communication cost, per method (B=256, w_a=8, w_p=10)."""
+from __future__ import annotations
+
+from repro.core.runtime import (ExperimentConfig, run_experiment,
+                                time_to_target)
+
+from benchmarks.common import EPOCHS, SCALE, SEED, emit
+
+METHODS = ("vfl", "vfl_ps", "avfl", "avfl_ps", "pubsub")
+TARGET_AUC = 0.91            # the paper's target accuracy (91%)
+
+
+def run() -> None:
+    results = {}
+    for m in METHODS:
+        r = run_experiment(ExperimentConfig(
+            method=m, dataset="synthetic", scale=max(SCALE * 0.1, 0.002),
+            n_epochs=EPOCHS, batch_size=256, w_a=8, w_p=10, seed=SEED))
+        results[m] = r
+        ttt = time_to_target(r, TARGET_AUC)
+        emit(f"fig3/time/{m}", r["sim_s_per_epoch"] * 1e6,
+             f"sim_s={r['sim_s']:.3f};to_{TARGET_AUC}auc={ttt:.3f}s")
+        emit(f"fig3/util/{m}", r["sim_s_per_epoch"] * 1e6,
+             f"cpu_util={r['cpu_util'] * 100:.2f}%")
+        emit(f"fig3/wait/{m}", r["sim_s_per_epoch"] * 1e6,
+             f"waiting_per_epoch={r['waiting_per_epoch']:.4f}s")
+        emit(f"fig3/comm/{m}", r["sim_s_per_epoch"] * 1e6,
+             f"comm_mb={r['comm_mb']:.2f}")
+    speedup = results["vfl"]["sim_s"] / results["pubsub"]["sim_s"]
+    best_base = min(results[m]["sim_s"] for m in METHODS if m != "pubsub")
+    emit("fig3/speedup", 0.0,
+         f"vs_vfl={speedup:.2f}x;vs_best_baseline="
+         f"{best_base / results['pubsub']['sim_s']:.2f}x")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+    emit_header()
+    run()

@@ -1,0 +1,83 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference path on this
+CPU (the TPU kernel is validated in interpret mode; wall-clock TPU numbers
+require hardware).  `derived` reports achieved GFLOP/s / GB/s on CPU."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cut_layer.ref import cut_layer_ref
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rglru_scan.ref import rglru_scan_assoc_ref
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+from benchmarks.common import emit
+
+
+def _bench(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    B, S, Hq, Hk, D = 1, 1024, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hk, D))
+    v = jax.random.normal(ks[2], (B, S, Hk, D))
+    fa = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True,
+                                                     window=None))
+    t = _bench(fa, q, k, v)
+    flops = 4 * B * Hq * S * S * D
+    emit("kernel/flash_attention_ref", t * 1e6,
+         f"gflops={flops / t / 1e9:.2f}")
+
+    B, S, H, D = 1, 512, 4, 32
+    r = jax.random.normal(ks[3], (B, S, H, D))
+    kk = jax.random.normal(ks[4], (B, S, H, D))
+    vv = jax.random.normal(ks[5], (B, S, H, D))
+    w = jax.nn.sigmoid(jax.random.normal(ks[6], (B, S, H, D)))
+    u = jax.random.normal(ks[7], (H, D))
+    s0 = jnp.zeros((B, H, D, D))
+    rw = jax.jit(rwkv6_scan_ref)
+    t = _bench(rw, r, kk, vv, w, u, s0)
+    flops = 4 * B * S * H * D * D
+    emit("kernel/rwkv6_scan_ref", t * 1e6,
+         f"gflops={flops / t / 1e9:.2f}")
+
+    B, S, W = 4, 2048, 512
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W)))
+    uu = jax.random.normal(ks[1], (B, S, W))
+    h0 = jnp.zeros((B, W))
+    rg = jax.jit(rglru_scan_assoc_ref)
+    t = _bench(rg, a, uu, h0)
+    emit("kernel/rglru_scan_assoc", t * 1e6,
+         f"gbps={B * S * W * 4 * 3 / t / 1e9:.2f}")
+
+    M, K, N = 512, 512, 128
+    x = jax.random.normal(ks[2], (M, K))
+    wm = jax.random.normal(ks[3], (K, N)) * 0.05
+    b = jnp.zeros((N,))
+    nz = jax.random.normal(ks[4], (M, N))
+    cl = jax.jit(lambda x, w, b, n: cut_layer_ref(x, w, b, n, clip=1.0,
+                                                  sigma=0.1))
+    t = _bench(cl, x, wm, b, nz)
+    emit("kernel/cut_layer_ref", t * 1e6,
+         f"gflops={2 * M * K * N / t / 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+    emit_header()
+    run()

@@ -1,0 +1,61 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+runs/dryrun.jsonl.  Usage:
+    PYTHONPATH=src python -m benchmarks.report [runs/dryrun.jsonl]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.configs import SHAPES
+from benchmarks.roofline import load_records, roofline_terms
+
+
+def gb(x):
+    return f"{x / 1e9:.2f}"
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun.jsonl"
+    recs = load_records(path)
+    by_mesh = {"single": [], "multi": []}
+    for r in recs:
+        by_mesh.setdefault(r["mesh"], []).append(r)
+
+    print("### §Dry-run — lower+compile status "
+          "(per-device memory_analysis)\n")
+    print("| arch | shape | mesh | status | args GB/dev | peak GB/dev | "
+          "compile s | note |")
+    print("|---|---|---|---|---|---|---|---|")
+    for mesh in ("single", "multi"):
+        for r in sorted(by_mesh[mesh], key=lambda x: (x["arch"],
+                                                      x["shape"])):
+            mem = r.get("memory", {})
+            args = mem.get("argument_size_in_bytes", 0)
+            peak = mem.get("peak_memory_in_bytes", 0)
+            print(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                  f"{r.get('status')} | {gb(args)} | {gb(peak)} | "
+                  f"{r.get('compile_s', '')} | {r.get('note', '')} |")
+
+    print("\n### §Roofline — three terms per (arch x shape), single-pod "
+          "(v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)\n")
+    print("| arch | shape | compute s | memory s | collective s | "
+          "dominant | bound s | MODEL_FLOPS/dev | useful ratio |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(by_mesh["single"], key=lambda x: (x["arch"],
+                                                      x["shape"])):
+        if r.get("status") == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | skipped |"
+                  f" — | — | {r.get('note', '')} |")
+            continue
+        t = roofline_terms(r)
+        if t is None:
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {t['compute']:.3e} | "
+              f"{t['memory']:.3e} | {t['collective']:.3e} | "
+              f"{t['dominant']} | {t['bound_s']:.3e} | "
+              f"{t['model_flops']:.3e} | {t['useful_ratio']:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

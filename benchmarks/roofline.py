@@ -1,0 +1,105 @@
+"""§Roofline: three-term roofline per (arch x shape) on the single-pod
+mesh, derived from the compiled dry-run artifacts (runs/dryrun.jsonl).
+
+  compute term    = HLO_FLOPs(corrected) / peak_FLOPs_chip      [s]
+  memory term     = HLO_bytes(corrected) / HBM_bw_chip          [s]
+  collective term = collective_bytes(corrected) / ICI_bw_chip   [s]
+
+(dry-run numbers are already per-device; "corrected" = scan trip-count
+reconstruction, see launch/dryrun._probe_stage).  Also reports
+MODEL_FLOPS = 6*N*D (6*N_active*D for MoE) and the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+from benchmarks.common import emit
+
+RUNS = os.environ.get("REPRO_DRYRUN_FILE", "runs/dryrun.jsonl")
+N_CHIPS = {"single": 256, "multi": 512}
+
+
+def load_records(path: str = RUNS) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    # keep the LAST record per combo key (re-runs supersede)
+    dedup = {}
+    for r in out:
+        dedup[(r.get("arch"), r.get("shape"), r.get("mesh"),
+               r.get("zero", False))] = r
+    return list(dedup.values())
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    flops = rec.get("corrected_flops") or rec.get("cost", {}).get("flops",
+                                                                  0.0)
+    byts = rec.get("corrected_bytes") or rec.get("cost", {}).get(
+        "bytes accessed", 0.0)
+    coll = rec.get("corrected_collectives") or rec.get("collectives", {})
+    coll_bytes = sum(v for k, v in coll.items() if k != "count")
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = byts / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    shape = SHAPES[rec["shape"]]
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+        mult = 2.0                                  # forward only
+    else:
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0 if shape.kind == "train" else 2.0
+    n = rec.get("n_active_params") or rec.get("n_params", 0)
+    model_flops = mult * n * tokens / N_CHIPS[rec["mesh"]]
+    ratio = model_flops / flops if flops else 0.0
+    return {
+        **terms, "dominant": dominant, "model_flops": model_flops,
+        "useful_ratio": ratio, "flops": flops, "bytes": byts,
+        "coll_bytes": coll_bytes,
+        "bound_s": max(terms.values()),
+    }
+
+
+def run() -> None:
+    recs = [r for r in load_records() if r.get("mesh") == "single"
+            and not r.get("zero", False)]
+    if not recs:
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all --out "
+             "runs/dryrun.jsonl` first")
+        return
+    recs.sort(key=lambda r: (r["arch"], r["shape"]))
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if r.get("status") == "skipped":
+            emit(name, 0.0, f"skipped:{r.get('note', '')}")
+            continue
+        t = roofline_terms(r)
+        if t is None:
+            emit(name, 0.0, f"error:{r.get('error', '?')[:80]}")
+            continue
+        emit(name, t["bound_s"] * 1e6,
+             f"compute={t['compute']:.3e}s;memory={t['memory']:.3e}s;"
+             f"collective={t['collective']:.3e}s;dominant={t['dominant']};"
+             f"useful={t['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+    emit_header()
+    run()

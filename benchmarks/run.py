@@ -1,0 +1,41 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Scale via REPRO_BENCH_SCALE
+(default 0.05 of the paper's dataset sizes; REPRO_BENCH_EPOCHS epochs).
+
+  PYTHONPATH=src python -m benchmarks.run [suite ...]
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks.common import emit_header
+
+SUITES = ("kernels", "accuracy", "efficiency", "heterogeneity", "privacy",
+          "workers", "batch_size", "ablation", "multiparty", "criteo",
+          "cut_placement", "roofline")
+
+
+def main() -> None:
+    want = sys.argv[1:] or list(SUITES)
+    emit_header()
+    for name in want:
+        if name not in SUITES:
+            print(f"# unknown suite {name!r}; known: {SUITES}",
+                  file=sys.stderr)
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run()
+        except Exception:
+            print(f"# suite {name} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+        print(f"# suite {name} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

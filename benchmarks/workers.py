@@ -1,0 +1,26 @@
+"""Paper Table 2: effect of the number of workers (w_a = w_p, B=32)."""
+from __future__ import annotations
+
+from repro.core.runtime import ExperimentConfig, run_experiment
+
+from benchmarks.common import EPOCHS, SCALE, SEED, emit
+
+WORKERS = [4, 5, 8, 10, 20, 30, 50]
+
+
+def run() -> None:
+    for w in WORKERS:
+        r = run_experiment(ExperimentConfig(
+            method="pubsub", dataset="synthetic",
+            scale=max(SCALE * 0.1, 0.002), n_epochs=EPOCHS,
+            batch_size=32, w_a=w, w_p=w, seed=SEED))
+        emit(f"table2/w={w}", r["sim_s_per_epoch"] * 1e6,
+             f"auc={r['final']:.4f};sim_s={r['sim_s']:.2f};"
+             f"util={r['cpu_util']*100:.2f}%;"
+             f"wait={r['waiting_per_epoch']:.4f};comm_mb={r['comm_mb']:.1f}")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+    emit_header()
+    run()

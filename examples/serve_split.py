@@ -1,0 +1,27 @@
+"""Split-inference serving example: batched autoregressive decode through
+the two-party split with per-layer KV/recurrent caches.
+
+    PYTHONPATH=src python examples/serve_split.py --arch recurrentgemma-9b
+"""
+import argparse
+import subprocess
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    # delegate to the launch driver (the public serving entry point)
+    sys.argv = ["serve", "--arch", args.arch, "--batch", str(args.batch),
+                "--gen", str(args.gen)]
+    from repro.launch.serve import main as serve_main
+    serve_main()
+
+
+if __name__ == "__main__":
+    main()

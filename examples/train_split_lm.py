@@ -1,0 +1,84 @@
+"""End-to-end driver: train a split LLM backbone (the paper's technique
+applied to an assigned architecture) for a few hundred steps.
+
+The passive party holds the token stream and the bottom stack; the cut
+layer applies the L2-clip + Gaussian-DP mechanism; the active party holds
+f_a + the top stack + head.  Default is a CPU-sized config; --full trains
+the ~0.5B qwen2-0.5b (hours on CPU; the dry-run covers the full mesh).
+
+    PYTHONPATH=src python examples/train_split_lm.py --arch rwkv6-1.6b \
+        --steps 100
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax                                              # noqa: E402
+import jax.numpy as jnp                                  # noqa: E402
+import numpy as np                                       # noqa: E402
+
+from repro.configs import get_config                     # noqa: E402
+from repro.launch.steps import make_model, make_train_step  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--dp-sigma", type=float, default=0.0)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (not reduced) architecture")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    model = make_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params / 1e6:.1f}M "
+          f"layers={cfg.n_layers} cut@{cfg.resolved_cut}")
+
+    opt, train_step = make_train_step(model, lr=3e-4,
+                                      dp_sigma=args.dp_sigma,
+                                      dp_clip=1.0 if args.dp_sigma else 1e9)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(train_step)
+
+    # synthetic structured stream: next token = (3*tok + 7) % V with noise,
+    # so the loss has a learnable signal and should clearly decrease
+    rng = np.random.default_rng(0)
+    V = cfg.vocab_size
+    B, S = args.batch, args.seq
+    t0 = time.time()
+    first = None
+    for step in range(args.steps):
+        key, sub = jax.random.split(key)
+        start = rng.integers(0, V, size=(B, 1))
+        seq = [start]
+        for _ in range(S):
+            nxt = (3 * seq[-1] + 7) % V
+            flip = rng.random((B, 1)) < 0.05
+            nxt = np.where(flip, rng.integers(0, V, size=(B, 1)), nxt)
+            seq.append(nxt)
+        toks = np.concatenate(seq, axis=1)
+        batch = {"tokens_p": jnp.asarray(toks[:, :S], jnp.int32),
+                 "labels": jnp.asarray(toks[:, :S], jnp.int32),
+                 "x_a": jnp.zeros((B, S, cfg.d_active), jnp.float32)}
+        params, opt_state, loss = step_fn(params, opt_state, batch, sub)
+        if first is None:
+            first = float(loss)
+        if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    print(f"loss: {first:.3f} -> {float(loss):.3f} "
+          f"({'improved' if float(loss) < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""PubSub-VFL (NeurIPS 2025) reproduction + multi-pod JAX framework."""
+__version__ = "1.0.0"

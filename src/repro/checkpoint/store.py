@@ -1,0 +1,59 @@
+"""msgpack-based pytree checkpointing (no orbax in this container)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import msgpack
+import numpy as np
+import jax
+
+
+def _pack(obj):
+    if isinstance(obj, (np.ndarray, np.generic)) or hasattr(obj, "dtype"):
+        a = np.asarray(obj)
+        return {b"__nd__": True, b"d": a.tobytes(), b"t": str(a.dtype),
+                b"s": list(a.shape)}
+    raise TypeError(type(obj))
+
+
+def _unpack(obj):
+    if b"__nd__" in obj:
+        return np.frombuffer(obj[b"d"], dtype=obj[b"t"]).reshape(obj[b"s"])
+    return obj
+
+
+def save(path: str, tree: Any, *, step: Optional[int] = None) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "leaves": [np.asarray(l) for l in leaves],
+        "treedef": str(treedef),
+        "step": step,
+    }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, default=_pack))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (treedef string is verified)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), object_hook=_unpack,
+                                  strict_map_key=False)
+    leaves, treedef = jax.tree.flatten(like)
+    assert payload["treedef"] == str(treedef), "checkpoint structure mismatch"
+    new = payload["leaves"]
+    assert len(new) == len(leaves)
+    import jax.numpy as jnp
+    new = [jnp.asarray(n, dtype=l.dtype).reshape(l.shape)
+           for n, l in zip(new, leaves)]
+    return jax.tree.unflatten(treedef, new)
+
+
+def load_step(path: str) -> Optional[int]:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), object_hook=_unpack,
+                                  strict_map_key=False)
+    return payload.get("step")

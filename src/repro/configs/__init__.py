@@ -1,0 +1,53 @@
+"""Config registry + ShapeDtypeStruct input specs (no device allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ArchConfig, ShapeConfig, SHAPES,
+                                shape_applicability, long_context_variant)
+from repro.configs.archs import REGISTRY, ASSIGNED, get_config
+
+__all__ = [
+    "ArchConfig", "ShapeConfig", "SHAPES", "REGISTRY", "ASSIGNED",
+    "get_config", "input_specs", "shape_applicability", "long_context_variant",
+]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, *, batch=None,
+                seq_len=None) -> dict:
+    """ShapeDtypeStruct stand-ins for every raw model input.
+
+    The modality frontend for [audio]/[vlm] is a stub: the passive party's
+    input is precomputed frame/patch embeddings of shape (B, S, d_model)
+    rather than raw waveforms/pixels (DESIGN.md §6).
+    """
+    B = batch if batch is not None else shape.global_batch
+    S = seq_len if seq_len is not None else shape.seq_len
+    act = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        S_in = 1
+    else:
+        S_in = S
+    specs = {}
+    if cfg.frontend == "audio_frames":
+        specs["tokens_p"] = _sds((B, S_in, cfg.d_model), act)
+    elif cfg.frontend == "vision_patches":
+        if shape.kind == "decode":
+            # decode consumes text tokens; the vision prefix lives in the cache
+            specs["tokens_p"] = _sds((B, S_in), "int32")
+        else:
+            n_vis = max(1, S_in // 4)
+            specs["tokens_p"] = _sds((B, S_in - n_vis), "int32")
+            specs["patches_p"] = _sds((B, n_vis, cfg.d_model), act)
+    else:
+        specs["tokens_p"] = _sds((B, S_in), "int32")
+    # active party's private per-position features (f_a input)
+    specs["x_a"] = _sds((B, S_in, cfg.d_active), act)
+    if shape.kind == "train":
+        specs["labels"] = _sds((B, S_in), "int32")
+    return specs

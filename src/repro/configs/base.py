@@ -1,0 +1,259 @@
+"""Architecture + input-shape configuration system.
+
+Every assigned architecture is expressed as an :class:`ArchConfig`.  The
+model stack (``repro.models``) consumes only this dataclass, so adding an
+architecture means adding one file in ``repro/configs/``.
+
+A config describes the *joint* model of the two-party split-learning setup
+(paper Fig. 1): the passive party holds the bottom stack (layers
+``[0, cut_layer)``), the active party holds its private feature encoder
+``f_a`` plus the top stack (layers ``[cut_layer, n_layers)``) and the head.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer specs
+# ---------------------------------------------------------------------------
+# A layer is (mixer, ffn):
+#   mixer ∈ {"attn", "mla", "local_attn", "rglru", "rwkv"}
+#   ffn   ∈ {"dense", "moe", "rwkv_cm", "none"}
+LayerSpec = Tuple[str, str]
+# A stage is (repeat, pattern): scan `repeat` times over the layer pattern.
+Stage = Tuple[int, Tuple[LayerSpec, ...]]
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    source: str                      # citation for the architecture
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    act: str = "silu"                # "silu" (SwiGLU) | "gelu" (GeGLU)
+    causal: bool = True              # False => encoder-only (hubert)
+    tie_embeddings: bool = False
+
+    # Stage layout.  If empty, defaults to n_layers x ("attn","dense").
+    stages: Tuple[Stage, ...] = ()
+    sliding_window: Optional[int] = None   # window for "local_attn" layers
+
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_dense_layers: int = 0          # leading dense-FFN layers (deepseek)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+
+    # --- MLA (DeepSeek-V2) ---
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- RWKV6 ---
+    rwkv_head_dim: int = 64
+    rwkv_lora_dim: int = 32
+
+    # --- RG-LRU (RecurrentGemma) ---
+    lru_width: Optional[int] = None
+    conv_width: int = 4
+
+    # --- modality frontend stub ([audio] / [vlm]) ---
+    frontend: Optional[str] = None   # None | "audio_frames" | "vision_patches"
+    mrope: bool = False
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+
+    # --- split-learning placement ---
+    cut_layer: Optional[int] = None  # default n_layers // 2
+    d_active: int = 64               # active party's raw feature dim (f_a input)
+
+    # --- numerics ---
+    dtype: str = "float32"           # activation/compute dtype
+    param_dtype: str = "float32"
+    remat: bool = False              # checkpoint each scanned layer group
+    remat_policy: str = "full"       # "full" | "dots" (save matmul outs)
+    ce_chunk: int = 0                # >0: chunked cross-entropy (§Perf)
+    moe_dispatch_i8: bool = False    # int8 one-hot in MoE dispatch (§Perf)
+    act_spec: Tuple[str, ...] = ()   # batch axes to pin activations to
+                                     # (kills XLA resharding churn; §Perf)
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def resolved_cut(self) -> int:
+        return self.cut_layer if self.cut_layer is not None else self.n_layers // 2
+
+    @property
+    def resolved_lru_width(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def resolved_stages(self) -> Tuple[Stage, ...]:
+        if self.stages:
+            return self.stages
+        return ((self.n_layers, (("attn", "dense"),)),)
+
+    @property
+    def layer_specs(self) -> Tuple[LayerSpec, ...]:
+        out = []
+        for repeat, pattern in self.resolved_stages:
+            out.extend(list(pattern) * repeat)
+        return tuple(out)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True iff no layer needs an unbounded full-attention KV cache."""
+        for mixer, _ in self.layer_specs:
+            if mixer in ("attn", "mla") and self.sliding_window is None:
+                return False
+        return True
+
+    @property
+    def supports_decode(self) -> bool:
+        return self.causal
+
+    def validate(self) -> None:
+        assert len(self.layer_specs) == self.n_layers, (
+            f"{self.name}: stages sum to {len(self.layer_specs)} != n_layers "
+            f"{self.n_layers}")
+        cut = self.resolved_cut
+        assert 0 < cut < self.n_layers
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: 2 layers, d_model<=512, <=4 experts."""
+        d = min(self.d_model, 256)
+        heads = max(2, min(self.n_heads, 4))
+        kv = max(1, min(self.n_kv_heads, heads))
+        hd = max(8, d // heads)
+        pattern = self.resolved_stages[-1][1][:1]  # representative layer kind
+        # keep the family's signature layer; 2 layers of it
+        stages = ((2, pattern),)
+        if self.family == "hybrid":
+            stages = ((1, (("rglru", "dense"), ("attn", "dense"))),)
+        kw = dict(
+            n_layers=sum(r * len(p) for r, p in stages),
+            d_model=d, n_heads=heads, n_kv_heads=kv, head_dim=hd,
+            d_ff=min(self.d_ff, 4 * d), vocab_size=min(self.vocab_size, 512),
+            stages=stages, cut_layer=1, lru_width=d if self.lru_width else None,
+            dtype="float32", param_dtype="float32", remat=False,
+        )
+        if self.n_experts:
+            kw.update(n_experts=4, top_k=min(self.top_k, 2),
+                      n_shared_experts=min(self.n_shared_experts, 1),
+                      moe_d_ff=min(self.moe_d_ff, d), n_dense_layers=0)
+        if self.kv_lora_rank:
+            kw.update(kv_lora_rank=64, qk_nope_dim=hd, qk_rope_dim=16,
+                      v_head_dim=hd)
+        if self.sliding_window is not None:
+            kw.update(sliding_window=min(self.sliding_window, 64))
+        if self.rwkv_head_dim:
+            kw.update(rwkv_head_dim=min(self.rwkv_head_dim, 32),
+                      rwkv_lora_dim=8)
+        if self.mrope:
+            half = hd // 2
+            a = half // 4
+            b = (half - a) // 2
+            kw.update(mrope_sections=(half - 2 * b, b, b))
+        return self.replace(**kw)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Approximate parameter count N (for MODEL_FLOPS = 6*N*D)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        n = self.vocab_size * d                       # embed
+        if not self.tie_embeddings:
+            n += d * self.vocab_size                  # head
+        for mixer, ffn in self.layer_specs:
+            if mixer in ("attn", "local_attn"):
+                n += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                n += self.n_heads * hd * d
+            elif mixer == "mla":
+                n += d * (self.kv_lora_rank + self.qk_rope_dim)
+                n += self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+                n += d * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                n += self.n_heads * self.v_head_dim * d
+            elif mixer == "rwkv":
+                n += 4 * d * d + d * d                # r,k,v,g,o
+            elif mixer == "rglru":
+                w = self.resolved_lru_width
+                n += 2 * d * w + w * d + self.conv_width * w + 2 * w
+            if ffn == "dense":
+                n += 3 * d * self.d_ff
+            elif ffn == "moe":
+                n += self.n_experts * 3 * d * self.moe_d_ff
+                n += self.n_shared_experts * 3 * d * self.moe_d_ff
+                n += d * self.n_experts
+            elif ffn == "rwkv_cm":
+                n += 2 * d * self.d_ff
+        n += 2 * self.n_layers * d + d                # norms
+        return n
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params for MoE rooflines."""
+        if not self.n_experts:
+            return self.param_count()
+        n = self.param_count()
+        # subtract inactive expert FFNs
+        per_exp = 3 * self.d_model * self.moe_d_ff
+        n_moe_layers = sum(1 for _, f in self.layer_specs if f == "moe")
+        n -= n_moe_layers * (self.n_experts - self.top_k) * per_exp
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicability(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runnable, note).  Encodes the DESIGN.md skip rules."""
+    if shape.kind == "decode":
+        if not cfg.supports_decode:
+            return False, "encoder-only: no decode step (DESIGN.md §6)"
+        if shape.name == "long_500k" and not cfg.is_subquadratic:
+            return True, "sliding-window variant (window=4096)"
+    return True, ""
+
+
+def long_context_variant(cfg: ArchConfig) -> ArchConfig:
+    """Sub-quadratic variant used for long_500k on full-attention archs."""
+    if cfg.is_subquadratic:
+        return cfg
+    return cfg.replace(sliding_window=4096)

@@ -1,0 +1,4 @@
+"""deepseek-v2-lite-16b [moe] 27L d_model=2048 16H d_ff(moe)=1408 vocab=102400, MoE 64e top-6, MLA kv_lora=512, 2 shared experts [arXiv:2405.04434]"""
+from repro.configs.archs import DEEPSEEK_V2_LITE as CONFIG
+
+REDUCED = CONFIG.reduced()

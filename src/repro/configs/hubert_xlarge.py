@@ -1,0 +1,4 @@
+"""hubert-xlarge [audio] 48L d_model=1280 16H d_ff=5120 vocab=504 — encoder-only [arXiv:2106.07447]; conv frontend stubbed"""
+from repro.configs.archs import HUBERT_XLARGE as CONFIG
+
+REDUCED = CONFIG.reduced()

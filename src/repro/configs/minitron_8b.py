@@ -1,0 +1,4 @@
+"""minitron-8b [dense] 32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000 — pruned nemotron [arXiv:2407.14679]"""
+from repro.configs.archs import MINITRON_8B as CONFIG
+
+REDUCED = CONFIG.reduced()

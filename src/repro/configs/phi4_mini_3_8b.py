@@ -1,0 +1,4 @@
+"""phi4-mini-3.8b [dense] 32L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=200064 — RoPE SwiGLU GQA [arXiv:2412.08905]"""
+from repro.configs.archs import PHI4_MINI as CONFIG
+
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,4 @@
+"""qwen2-0.5b [dense] 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936 — GQA, QKV bias [arXiv:2407.10671]"""
+from repro.configs.archs import QWEN2_05B as CONFIG
+
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,4 @@
+"""qwen2.5-14b [dense] 48L d_model=5120 40H (GQA kv=8) d_ff=13824 vocab=152064 — GQA, QKV bias [hf:Qwen/Qwen2.5 family]"""
+from repro.configs.archs import QWEN25_14B as CONFIG
+
+REDUCED = CONFIG.reduced()

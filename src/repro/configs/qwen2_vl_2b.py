@@ -1,0 +1,4 @@
+"""qwen2-vl-2b [vlm] 28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936 — M-RoPE [arXiv:2409.12191]; ViT frontend stubbed"""
+from repro.configs.archs import QWEN2_VL_2B as CONFIG
+
+REDUCED = CONFIG.reduced()

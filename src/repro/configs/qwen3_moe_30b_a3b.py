@@ -1,0 +1,4 @@
+"""qwen3-moe-30b-a3b [moe] 48L d_model=2048 32H (GQA kv=4) d_ff=768 vocab=151936, MoE 128e top-8 [hf:Qwen/Qwen3-30B-A3B]"""
+from repro.configs.archs import QWEN3_MOE as CONFIG
+
+REDUCED = CONFIG.reduced()

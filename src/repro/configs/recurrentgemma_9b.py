@@ -1,0 +1,4 @@
+"""recurrentgemma-9b [hybrid] 38L d_model=4096 16H (GQA kv=1) d_ff=12288 vocab=256000 — RG-LRU + local attn 1:2 [arXiv:2402.19427]"""
+from repro.configs.archs import RECURRENTGEMMA_9B as CONFIG
+
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,4 @@
+"""rwkv6-1.6b [ssm] 24L d_model=2048 (attn-free) d_ff=7168 vocab=65536 — Finch data-dependent decay [arXiv:2404.05892]"""
+from repro.configs.archs import RWKV6_16B as CONFIG
+
+REDUCED = CONFIG.reduced()

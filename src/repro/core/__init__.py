@@ -1,0 +1,13 @@
+"""PubSub-VFL core: the paper's contribution as a composable JAX system.
+
+  channels     pub/sub broker (FIFO buffers p/q, waiting deadline) + the
+               jit-safe ring-buffer twin
+  semi_async   Eq. 5 ΔT_t schedule + PS aggregation
+  cost_model   Eqs. 6-13 power-law delay/memory model (+ Table 8 fits)
+  profiler     fits the model from timed probes of the real jitted ops
+  planner      Algorithm 2 DP search (+ beyond-paper throughput objective)
+  sim / des    deterministic discrete-event engine + the five runtimes
+  trainer      replays DES event logs with real JAX updates
+  jit_pipeline the whole two-party exchange inside one lax.scan
+  runtime      one-call experiment API used by benchmarks/ and examples/
+"""

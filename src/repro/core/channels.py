@@ -1,0 +1,142 @@
+"""Pub/Sub embedding & gradient channels (paper §4.1).
+
+Two twins:
+
+1. `PubSubBroker` — the runtime broker used by the discrete-event runtimes:
+   per-batch-ID channels, FIFO buffers of capacity p (embeddings) / q
+   (gradients) with oldest-entry eviction, timestamps, and the waiting-
+   deadline mechanism (T_ddl).
+
+2. `ChannelState` + pure functions — a jit-safe fixed-size ring-buffer
+   pytree usable inside lax.scan (the multi-pod dry-run lowers this twin).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# runtime twin
+# ---------------------------------------------------------------------------
+@dataclass
+class Message:
+    batch_id: int
+    payload: Any
+    t_publish: float
+    meta: dict = field(default_factory=dict)
+
+
+class Channel:
+    """FIFO buffer of bounded capacity; overflow evicts the OLDEST entry
+    (stale-update protection, paper's Buffer Mechanism)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.buf: Deque[Message] = collections.deque()
+        self.n_evicted = 0
+
+    def publish(self, msg: Message) -> None:
+        if len(self.buf) >= self.capacity:
+            self.buf.popleft()          # FIFO eviction of the oldest
+            self.n_evicted += 1
+        self.buf.append(msg)
+
+    def poll(self) -> Optional[Message]:
+        return self.buf.popleft() if self.buf else None
+
+    def peek_age(self, now: float) -> Optional[float]:
+        return (now - self.buf[0].t_publish) if self.buf else None
+
+    def __len__(self):
+        return len(self.buf)
+
+
+class PubSubBroker:
+    """Topic space = {embedding, gradient} x batch_id."""
+
+    def __init__(self, p: int = 5, q: int = 5, t_ddl: float = 10.0):
+        self.p, self.q, self.t_ddl = p, q, t_ddl
+        self.emb: Dict[int, Channel] = {}
+        self.grad: Dict[int, Channel] = {}
+        self.n_deadline_drops = 0
+        self.bytes_published = 0.0
+
+    def _get(self, kind: str, batch_id: int) -> Channel:
+        store = self.emb if kind == "emb" else self.grad
+        if batch_id not in store:
+            store[batch_id] = Channel(self.p if kind == "emb" else self.q)
+        return store[batch_id]
+
+    def publish(self, kind: str, batch_id: int, payload: Any, now: float,
+                nbytes: float = 0.0, **meta) -> None:
+        self._get(kind, batch_id).publish(Message(batch_id, payload, now,
+                                                  meta))
+        self.bytes_published += nbytes
+
+    def poll(self, kind: str, batch_id: int) -> Optional[Message]:
+        return self._get(kind, batch_id).poll()
+
+    def ready(self, kind: str, batch_id: int) -> bool:
+        return len(self._get(kind, batch_id)) > 0
+
+    def deadline_expired(self, wait_started: float, now: float) -> bool:
+        """Waiting-deadline mechanism: subscriber gives up after T_ddl and
+        the batch is re-assigned (counted; caller handles reassignment)."""
+        if now - wait_started > self.t_ddl:
+            self.n_deadline_drops += 1
+            return True
+        return False
+
+    def stats(self) -> dict:
+        return {
+            "evicted": sum(c.n_evicted for c in list(self.emb.values()) +
+                           list(self.grad.values())),
+            "deadline_drops": self.n_deadline_drops,
+            "bytes_published": self.bytes_published,
+        }
+
+
+# ---------------------------------------------------------------------------
+# jit twin: fixed-size ring buffer as a pytree
+# ---------------------------------------------------------------------------
+def channel_init(capacity: int, item_shape: Tuple[int, ...],
+                 dtype=jnp.float32) -> dict:
+    return {
+        "data": jnp.zeros((capacity,) + tuple(item_shape), dtype),
+        "batch_id": jnp.full((capacity,), -1, jnp.int32),
+        "t_pub": jnp.zeros((capacity,), jnp.float32),
+        "head": jnp.zeros((), jnp.int32),   # oldest
+        "size": jnp.zeros((), jnp.int32),
+    }
+
+
+def channel_publish(state: dict, item, batch_id, now) -> dict:
+    cap = state["data"].shape[0]
+    full = state["size"] >= cap
+    # tail slot; if full we advance head (FIFO eviction)
+    tail = (state["head"] + state["size"]) % cap
+    data = jax.lax.dynamic_update_index_in_dim(state["data"], item, tail, 0)
+    bids = state["batch_id"].at[tail].set(batch_id)
+    tpub = state["t_pub"].at[tail].set(now)
+    head = jnp.where(full, (state["head"] + 1) % cap, state["head"])
+    size = jnp.where(full, state["size"], state["size"] + 1)
+    return {"data": data, "batch_id": bids, "t_pub": tpub, "head": head,
+            "size": size}
+
+
+def channel_poll(state: dict):
+    """Returns (new_state, item, batch_id, valid)."""
+    cap = state["data"].shape[0]
+    valid = state["size"] > 0
+    item = jax.lax.dynamic_index_in_dim(state["data"], state["head"], 0,
+                                        keepdims=False)
+    bid = state["batch_id"][state["head"]]
+    head = jnp.where(valid, (state["head"] + 1) % cap, state["head"])
+    size = jnp.where(valid, state["size"] - 1, state["size"])
+    new = dict(state, head=head, size=size)
+    return new, item, jnp.where(valid, bid, -1), valid

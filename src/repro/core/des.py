@@ -1,0 +1,370 @@
+"""Discrete-event runtimes for PubSub-VFL and the four baselines.
+
+Methods (paper §5.1 baselines + ours):
+  vfl      — pure two-party split learning, one worker pair, fully serial
+  vfl_ps   — PS data parallelism, strict ID-aligned pairing, per-round barrier
+  avfl     — asynchronous P2P pairing (1-deep pipeline), no PS
+  avfl_ps  — avfl + per-epoch PS aggregation of worker replicas
+  pubsub   — PubSub-VFL: per-batch channels (buffers p/q, FIFO eviction),
+             waiting deadline T_ddl, pooled (decoupled) worker matching and
+             intra-party semi-async PS on the Eq. 5 schedule
+
+The engine produces (a) system metrics — simulated wall time, CPU
+utilization, waiting/epoch, comm MB — and (b) an event log in completion
+order that `core.trainer` replays with real JAX updates, so learning
+dynamics (staleness included) are real, only *time* is modeled (DESIGN §3).
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import CostModel, SystemProfile
+from repro.core.semi_async import delta_t
+from repro.core.sim import Engine, Store
+
+METHODS = ("vfl", "vfl_ps", "avfl", "avfl_ps", "pubsub")
+
+
+@dataclass
+class RunConfig:
+    method: str
+    n_samples: int
+    batch_size: int
+    n_epochs: int
+    w_a: int
+    w_p: int
+    profile: SystemProfile
+    p: int = 5
+    q: int = 5
+    t_ddl: float = 10.0
+    dt0: int = 5
+    jitter: float = 0.10          # lognormal per-task compute jitter
+    seed: int = 0
+    agg_overhead: float = 0.02    # PS aggregate+broadcast (intra-party)
+
+    @property
+    def n_batches(self) -> int:
+        return max(self.n_samples // self.batch_size, 1)
+
+
+@dataclass
+class SimResult:
+    method: str
+    total_time: float
+    cpu_util: float
+    waiting_per_epoch: float
+    comm_mb: float
+    events: List[Tuple]           # (t, kind, payload)
+    stats: Dict = field(default_factory=dict)
+
+
+class Barrier:
+    def __init__(self, engine: Engine, n: int):
+        self.engine, self.n = engine, n
+        self.waiting: List = []
+
+    def arrive(self):
+        """Yieldable: blocks until n processes arrive."""
+        store = Store(self.engine)
+        self.waiting.append(store)
+        if len(self.waiting) == self.n:
+            for s in self.waiting:
+                s.put(True)
+            self.waiting = []
+        return store
+
+
+def _speeds(rng, n, jitter):
+    return np.exp(rng.normal(0.0, jitter, size=n))
+
+
+def simulate(cfg: RunConfig) -> SimResult:
+    if cfg.method not in METHODS:
+        raise ValueError(f"method {cfg.method!r} not in {METHODS}")
+    eng = Engine()
+    cm = CostModel(cfg.profile)
+    rng = np.random.default_rng(cfg.seed)
+    B = cfg.batch_size
+    w_a, w_p = cfg.w_a, cfg.w_p
+    if cfg.method == "vfl":
+        w_a = w_p = 1
+    if cfg.method in ("vfl_ps", "avfl", "avfl_ps"):
+        # strict ID alignment forces 1:1 pairing (Appendix A)
+        w_a = w_p = min(w_a, w_p)
+
+    t_fp = cm.t_f_p(B, w_p)
+    t_bp = cm.t_b_p(B, w_p)
+    t_a = cm.t_f_a(B, w_a) + cm.t_top_a(B, w_a) + cm.t_b_a(B, w_a)
+    t_emb, t_grad = cm.t_emb(B), cm.t_grad(B)
+    emb_mb = cfg.profile.emb_bytes_per_sample * B / 1e6
+    grad_mb = cfg.profile.grad_bytes_per_sample * B / 1e6
+
+    speed_p = _speeds(rng, w_p, cfg.jitter)
+    speed_a = _speeds(rng, w_a, cfg.jitter)
+    # t_ddl <= 0 or inf disables the waiting-deadline mechanism (the
+    # "w/o T_all" ablation): subscribers block forever instead of dropping
+    no_ddl = (cfg.t_ddl <= 0) or math.isinf(cfg.t_ddl)
+
+    def recv(store):
+        if no_ddl:
+            return ("get", store)
+        return ("get_timeout", store, cfg.t_ddl)
+    busy = {"a": 0.0, "p": 0.0}
+    wait = {"a": 0.0, "p": 0.0}
+    comm = {"mb": 0.0, "msgs": 0}
+    drops = {"deadline": 0, "evicted": 0}
+
+    def deliver(store: Store, item, delay: float, mb: float):
+        comm["mb"] += mb
+        comm["msgs"] += 1
+
+        def _put():
+            store.put(item)
+            return
+            yield  # pragma: no cover
+
+        eng._push(eng.now + delay, ("resume", _put()), None)
+
+    # ---------------------------------------------------------------- pubsub
+    if cfg.method == "pubsub":
+        # pooled embedding channel (union of per-batch channels; capacity
+        # p per passive worker) and per-batch gradient delivery
+        emb_pool = Store(eng, capacity=cfg.p * w_p)
+        grad_stores = [Store(eng) for _ in range(w_p)]
+        job_queue: deque = deque()
+        ctr = {"published": 0, "consumed": 0}
+        sync_marks = _pubsub_sync_epochs(cfg)
+
+        def passive_worker(j):
+            inflight = 0
+            while True:
+                ok, g = grad_stores[j].try_get()
+                if ok:
+                    dt = t_bp * speed_p[j]
+                    yield ("sleep", dt)
+                    busy["p"] += dt
+                    eng.log("p_bwd", w=j, bid=g)
+                    inflight -= 1
+                    continue
+                if job_queue and inflight < cfg.p:
+                    bid, ep = job_queue.popleft()
+                    dt = t_fp * speed_p[j]
+                    yield ("sleep", dt)
+                    busy["p"] += dt
+                    eng.log("p_fwd", w=j, bid=bid, ep=ep)
+                    ctr["published"] += 1
+                    deliver(emb_pool, (bid, j, ep), t_emb, emb_mb)
+                    inflight += 1
+                    continue
+                if inflight == 0 and not job_queue:
+                    return
+                t0 = eng.now
+                g = yield recv(grad_stores[j])
+                wait["p"] += eng.now - t0
+                if g is None:
+                    drops["deadline"] += 1
+                    eng.log("drop", w=j, side="p")
+                    inflight = max(inflight - 1, 0)
+                    continue
+                dt = t_bp * speed_p[j]
+                yield ("sleep", dt)
+                busy["p"] += dt
+                eng.log("p_bwd", w=j, bid=g)
+                inflight -= 1
+
+        def active_worker(i):
+            while True:
+                t0 = eng.now
+                msg = yield recv(emb_pool)
+                if msg is None:
+                    outstanding = (ctr["published"] - ctr["consumed"]
+                                   - emb_pool.n_evicted)
+                    if not job_queue and outstanding <= 0:
+                        return          # terminal wait: not starvation
+                    wait["a"] += eng.now - t0
+                    drops["deadline"] += 1
+                    eng.log("drop", w=i, side="a")
+                    continue
+                wait["a"] += eng.now - t0
+                bid, j, ep = msg
+                ctr["consumed"] += 1
+                dt = t_a * speed_a[i]
+                yield ("sleep", dt)
+                busy["a"] += dt
+                eng.log("a_step", w=i, bid=bid, ep=ep)
+                deliver(grad_stores[j], bid, t_grad, grad_mb)
+
+        # all work is enqueued up front (the broker decouples production
+        # from consumption; epoch identity travels with each job).  PS
+        # aggregation points (Eq. 5 schedule) are replayed by the trainer
+        # from completed-step counts, not simulated as barriers — that is
+        # exactly the semi-asynchronous semantics.
+        for ep in range(cfg.n_epochs):
+            for b in range(cfg.n_batches):
+                job_queue.append((ep * cfg.n_batches + b, ep))
+        for j in range(w_p):
+            eng.process(passive_worker(j))
+        for i in range(w_a):
+            eng.process(active_worker(i))
+        eng.run()
+        drops["evicted"] = emb_pool.n_evicted
+        del sync_marks  # schedule consumed by the trainer, not the DES
+
+    # ------------------------------------------------------- paired methods
+    else:
+        # pipeline depth: sync methods and AVFL's blocking P2P handshake
+        # admit no overlap (the passive worker cannot start batch b+1 until
+        # batch b's gradient lands); AVFL-PS's replica decoupling gives a
+        # 1-deep overlap (Table 5/10 of the paper: AVFL has the worst
+        # waiting/utilization, AVFL-PS recovers most of it)
+        pipeline = 2 if cfg.method == "avfl_ps" else 1
+        per_round_barrier = cfg.method in ("vfl", "vfl_ps")
+        per_epoch_barrier = cfg.method == "avfl_ps"    # PS epoch aggregation
+        # never spawn more pairs than there are batches per epoch
+        n_pairs = max(1, min(w_a, cfg.n_batches))
+        w_a = w_p = n_pairs
+        # per-(epoch, round) barriers sized by the pairs actually holding a
+        # batch in that round (the final round of an epoch may be partial)
+        full_rounds = cfg.n_batches // n_pairs
+        rem = cfg.n_batches % n_pairs
+        round_barriers: Dict[Tuple[int, int], Barrier] = {}
+        epoch_barriers: Dict[int, Barrier] = {}
+
+        def round_barrier(ep: int, rnd: int) -> Barrier:
+            key = (ep, rnd)
+            if key not in round_barriers:
+                n = n_pairs if rnd < full_rounds else rem
+                round_barriers[key] = Barrier(eng, 2 * n)
+            return round_barriers[key]
+
+        def round_of(bid: int) -> Tuple[int, int]:
+            ep = bid // cfg.n_batches
+            return ep, (bid % cfg.n_batches) // n_pairs
+
+        def epoch_barrier(ep: int) -> Barrier:
+            if ep not in epoch_barriers:
+                epoch_barriers[ep] = Barrier(eng, 2 * n_pairs)
+            return epoch_barriers[ep]
+
+        emb_stores = [Store(eng) for _ in range(n_pairs)]
+        grad_stores = [Store(eng) for _ in range(n_pairs)]
+
+        def quota_pe(k: int) -> int:
+            return full_rounds + (1 if k < rem else 0)
+
+        def pair_passive(k, batches):
+            inflight = 0
+            done_in_epoch: Dict[int, int] = {}
+            todo = deque(batches)
+
+            def after_bwd(g):
+                ep = g // cfg.n_batches
+                done_in_epoch[ep] = done_in_epoch.get(ep, 0) + 1
+                need_round = per_round_barrier
+                need_epoch = (per_epoch_barrier and
+                              done_in_epoch[ep] == quota_pe(k))
+                return need_round, need_epoch, ep
+
+            while todo or inflight:
+                ok, g = grad_stores[k].try_get()
+                if not ok and todo and inflight < pipeline:
+                    bid, ep = todo.popleft()
+                    dt = t_fp * speed_p[k]
+                    yield ("sleep", dt)
+                    busy["p"] += dt
+                    eng.log("p_fwd", w=k, bid=bid, ep=ep)
+                    deliver(emb_stores[k], (bid, ep), t_emb, emb_mb)
+                    inflight += 1
+                    continue
+                if not ok:
+                    t0 = eng.now
+                    g = yield ("get", grad_stores[k])
+                    wait["p"] += eng.now - t0
+                dt = t_bp * speed_p[k]
+                yield ("sleep", dt)
+                busy["p"] += dt
+                eng.log("p_bwd", w=k, bid=g)
+                inflight -= 1
+                need_round, need_epoch, ep = after_bwd(g)
+                if need_round:
+                    st = round_barrier(*round_of(g)).arrive()
+                    t0 = eng.now
+                    yield ("get", st)
+                    wait["p"] += eng.now - t0
+                if need_epoch:
+                    st = epoch_barrier(ep).arrive()
+                    t0 = eng.now
+                    yield ("get", st)
+                    wait["p"] += eng.now - t0
+
+        def pair_active(k, batches):
+            done_in_epoch: Dict[int, int] = {}
+            for _ in range(len(batches)):
+                t0 = eng.now
+                msg = yield ("get", emb_stores[k])
+                wait["a"] += eng.now - t0
+                bid, ep = msg
+                dt = t_a * speed_a[k]
+                yield ("sleep", dt)
+                busy["a"] += dt
+                eng.log("a_step", w=k, bid=bid, ep=ep)
+                deliver(grad_stores[k], bid, t_grad, grad_mb)
+                done_in_epoch[ep] = done_in_epoch.get(ep, 0) + 1
+                if per_round_barrier:
+                    st = round_barrier(*round_of(bid)).arrive()
+                    t0 = eng.now
+                    yield ("get", st)
+                    wait["a"] += eng.now - t0
+                if per_epoch_barrier and done_in_epoch[ep] == quota_pe(k):
+                    st = epoch_barrier(ep).arrive()
+                    t0 = eng.now
+                    yield ("get", st)
+                    wait["a"] += eng.now - t0
+
+        # assign batches round-robin to pairs, epoch by epoch; the final
+        # round of an epoch may be partial (its barrier is sized to the
+        # participating pairs).
+        assignments: List[List] = [[] for _ in range(n_pairs)]
+        for ep in range(cfg.n_epochs):
+            for b in range(cfg.n_batches):
+                assignments[b % n_pairs].append((ep * cfg.n_batches + b, ep))
+
+        for k in range(n_pairs):
+            eng.process(pair_passive(k, assignments[k]))
+            eng.process(pair_active(k, assignments[k]))
+        eng.run()
+
+    # total time = last completed unit of real work (not the deadline tail
+    # active workers spend noticing the run is over)
+    work = [t for t, kind, _ in eng.trace
+            if kind in ("p_fwd", "a_step", "p_bwd")]
+    total_time = max(work) if work else eng.now
+    C_a = cfg.profile.active.cores
+    C_p = cfg.profile.passive.cores
+    core_seconds = busy["a"] * (C_a / w_a) + busy["p"] * (C_p / w_p)
+    util = core_seconds / max(total_time * (C_a + C_p), 1e-9)
+    waiting = (wait["a"] + wait["p"]) / max(cfg.n_epochs, 1)
+    events = sorted(eng.trace, key=lambda e: e[0])
+    return SimResult(
+        method=cfg.method, total_time=total_time, cpu_util=util,
+        waiting_per_epoch=waiting, comm_mb=comm["mb"], events=events,
+        stats={"drops": drops, "msgs": comm["msgs"],
+               "busy_a": busy["a"], "busy_p": busy["p"],
+               "wait_a": wait["a"], "wait_p": wait["p"],
+               "w_a": w_a, "w_p": w_p},
+    )
+
+
+def _pubsub_sync_epochs(cfg: RunConfig) -> set:
+    marks, t = set(), 0
+    while t < cfg.n_epochs:
+        t += delta_t(t, cfg.dt0)
+        marks.add(t)
+    return marks
+
+

@@ -1,0 +1,86 @@
+"""The Pub/Sub mechanism as a pure-JAX composable (deliverable (a)).
+
+`pipelined_train` runs the whole two-party semi-asynchronous exchange
+INSIDE one jitted lax.scan: the passive party publishes cut-layer
+embeddings into a fixed-size ring buffer (the jit twin of the embedding
+channel, `core.channels.channel_*`); the active party consumes the entry
+published `lag` steps earlier (bounded staleness = the paper's buffer
+depth p); the gradient channel is the symmetric ring.  This is the
+TPU-native rendering of Algorithm 1: on hardware the two halves live on
+the two pods and the rings are the only pod-crossing traffic.
+
+Semantics match core.trainer's replay: the active step differentiates
+w.r.t. the STALE embedding; the passive backward applies that cotangent
+through a fresh forward at its CURRENT params (delayed-gradient descent,
+Assumption D.4 of the paper's proof).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import tabular
+from repro.optim.optimizers import adam, apply_updates
+
+
+def pipelined_train(theta_a, theta_p, xa_steps, xp_steps, y_steps, *,
+                    lag: int = 2, lr: float = 1e-3, task: str,
+                    dp_sigma: float = 0.0, dp_clip: float = 1e9,
+                    rng=None):
+    """xa/xp/y_steps: (n_steps, B, ·) pre-batched streams.
+
+    Returns (theta_a, theta_p, losses (n_steps,)) — losses are NaN for the
+    first `lag` warmup steps (channel not yet filled)."""
+    n_steps, B = xp_steps.shape[0], xp_steps.shape[1]
+    d_emb = tabular.passive_forward(theta_p, xp_steps[0]).shape[-1]
+    opt = adam(lr)
+    opt_a = opt.init(theta_a)
+    opt_p = opt.init(theta_p)
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+
+    # embedding channel ring: z + the step index it belongs to
+    ring_z = jnp.zeros((lag, B, d_emb), jnp.float32)
+
+    def step(carry, inp):
+        theta_a, theta_p, opt_a, opt_p, ring_z, t, rng = carry
+        xa, xp, y = inp
+        rng, sub = jax.random.split(rng)
+
+        # --- passive worker: forward + publish (Algorithm 1 l.6-10) ---
+        z = tabular.passive_forward(theta_p, xp)
+        nrm = jnp.linalg.norm(z, axis=-1, keepdims=True)
+        z_pub = z * jnp.minimum(1.0, dp_clip / jnp.maximum(nrm, 1e-12))
+        if dp_sigma > 0:
+            z_pub = z_pub + dp_sigma * jax.random.normal(sub, z.shape)
+        slot = t % lag
+        ring_z_new = jax.lax.dynamic_update_index_in_dim(
+            ring_z, z_pub, slot, 0)
+
+        # --- active worker: consume the entry published `lag-1` ago ---
+        stale_slot = (t + 1) % lag            # oldest surviving entry
+        z_stale = jax.lax.dynamic_index_in_dim(ring_z_new, stale_slot, 0,
+                                               keepdims=False)
+        loss, g_a, g_z = tabular.active_step(theta_a, xa, z_stale, y,
+                                             task=task)
+        ups_a, opt_a = opt.update(g_a, opt_a, theta_a)
+        theta_a = apply_updates(theta_a, ups_a)
+
+        # --- passive backward: delayed cotangent at CURRENT params ---
+        g_p = tabular.passive_backward(theta_p, xp, g_z)
+        ups_p, opt_p = opt.update(g_p, opt_p, theta_p)
+        theta_p = apply_updates(theta_p, ups_p)
+
+        warm = t >= lag - 1
+        loss = jnp.where(warm, loss, jnp.nan)
+        return (theta_a, theta_p, opt_a, opt_p, ring_z_new, t + 1, rng), \
+            loss
+
+    (theta_a, theta_p, *_), losses = jax.lax.scan(
+        step,
+        (theta_a, theta_p, opt_a, opt_p, ring_z, jnp.zeros((), jnp.int32),
+         rng),
+        (xa_steps, xp_steps, y_steps))
+    return theta_a, theta_p, losses

@@ -1,0 +1,98 @@
+"""System-planning phase (paper §4.3, Algorithm 2).
+
+Tabulated ("dynamic programming" in the paper's terminology) search over
+the discrete state space (i, j, r) = (w_a, w_p, B) minimizing
+
+    Cost(i,j,r) = max(T_comp_active, T_comp_passive) + (E+G)/B_b   (Eq. 14/15)
+
+subject to the Eq. 13 memory bound B <= B_max.  Privacy: only each party's
+*profile* (fitted constants, core counts, memory) enters — never data.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import CostModel, SystemProfile
+
+DEFAULT_BATCHES = (16, 32, 64, 128, 256, 512, 1024)
+
+
+@dataclass(frozen=True)
+class Plan:
+    w_a: int
+    w_p: int
+    batch_size: int
+    cost: float
+    b_max: float
+    table: Optional[np.ndarray] = None   # (n_wa, n_wp, n_B) cost table
+
+    def summary(self) -> str:
+        return (f"plan: w_a={self.w_a} w_p={self.w_p} B={self.batch_size} "
+                f"cost/iter={self.cost:.4f}s (B_max={self.b_max:.0f})")
+
+
+def plan(profile: SystemProfile, *,
+         w_a_range: Tuple[int, int] = (2, 50),
+         w_p_range: Tuple[int, int] = (2, 50),
+         batch_sizes: Sequence[int] = DEFAULT_BATCHES,
+         keep_table: bool = False,
+         objective: str = "paper") -> Plan:
+    """Algorithm 2: exhaustive DP tabulation + argmin.
+
+    objective="paper": the literal Eq. 14/15 per-iteration cost.  NOTE:
+    this prefers the smallest feasible batch (per-iteration latency falls
+    with B even though epoch time rises) — a limitation of the printed
+    formulation.
+    objective="throughput" (beyond-paper, EXPERIMENTS.md §Perf): minimize
+    steady-state pipelined *per-sample* time
+        max(T_A(w_a,B)/w_a, T_P(w_p,B)/w_p) / B,
+    which matches what the Pub/Sub runtime actually sustains and recovers
+    the paper's own chosen configs (B=256-ish, mid-size worker pools).
+    """
+    cm = CostModel(profile)
+    b_max = cm.b_max()
+    feasible = [b for b in batch_sizes if b <= b_max]
+    if not feasible:
+        feasible = [min(batch_sizes)]
+    was = range(w_a_range[0], w_a_range[1] + 1)
+    wps = range(w_p_range[0], w_p_range[1] + 1)
+    table = np.full((len(list(was)), len(list(wps)), len(feasible)), np.inf)
+    was = list(range(w_a_range[0], w_a_range[1] + 1))
+    wps = list(range(w_p_range[0], w_p_range[1] + 1))
+    best = (np.inf, None)
+    for i, wa in enumerate(was):
+        if wa > profile.active.cores:
+            continue
+        for j, wp in enumerate(wps):
+            if wp > profile.passive.cores:
+                continue
+            for r, B in enumerate(feasible):
+                if objective == "paper":
+                    cost = cm.objective(wa, wp, B)
+                else:   # steady-state pipelined per-sample time
+                    t_a = (cm.t_f_a(B, wa) + cm.t_b_a(B, wa) +
+                           cm.t_top_a(B, wa))
+                    t_p = cm.t_f_p(B, wp) + cm.t_b_p(B, wp)
+                    cost = max(t_a / wa, t_p / wp) / B
+                    # PS coordination overhead grows with the pool size
+                    # (aggregation fan-in + staleness control)
+                    cost *= 1.0 + 0.01 * (wa + wp)
+                table[i, j, r] = cost
+                if cost < best[0]:
+                    best = (cost, (wa, wp, B))
+    assert best[1] is not None, "no feasible configuration"
+    wa, wp, B = best[1]
+    return Plan(wa, wp, B, best[0], b_max,
+                table if keep_table else None)
+
+
+def plan_multiparty(profiles: List[SystemProfile], **kw) -> Plan:
+    """Appendix-H extension: plan jointly against the *weakest* passive
+    party (the bottleneck insight from the paper's multi-party discussion)."""
+    def weakness(p: SystemProfile) -> float:
+        return CostModel(p).t_passive(256, 8)
+    weakest = max(profiles, key=weakness)
+    return plan(weakest, **kw)

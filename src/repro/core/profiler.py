@@ -1,0 +1,86 @@
+"""System profiling (paper §4.2 + Appendix H empirical experiments).
+
+Times the actual jitted VFL ops over a batch-size grid on this host and
+fits the per-sample power law  t/B = lambda * B^gamma  by least squares in
+log-log space — the same procedure that produced the paper's Table 8.
+Each party profiles only its OWN ops; only the fitted constants (the
+"system profile") are shared, never data (privacy constraint §4.2).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import CostConstants
+from repro.models import tabular
+
+
+def fit_power_law(batch_sizes: Sequence[int], per_batch_times:
+                  Sequence[float]) -> Tuple[float, float]:
+    """Fit t_batch = lam * B^(1+gam)  (i.e. per-sample t/B = lam * B^gam).
+
+    Returns (lam, gam)."""
+    B = np.asarray(batch_sizes, dtype=np.float64)
+    t = np.asarray(per_batch_times, dtype=np.float64)
+    y = np.log(np.maximum(t / B, 1e-12))
+    x = np.log(B)
+    A = np.stack([np.ones_like(x), x], axis=1)
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    return float(np.exp(coef[0])), float(coef[1])
+
+
+def _time_fn(fn, *args, reps: int = 3, **kw) -> float:
+    fn(*args, **kw)                     # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def profile_host(d_a: int = 24, d_p: int = 24, depth: int = 10,
+                 batch_sizes: Sequence[int] = (16, 32, 64, 128, 256),
+                 seed: int = 0) -> Tuple[CostConstants, Dict]:
+    """Measure forward/backward times of the real ops on this host and
+    return fitted CostConstants (+ the raw probe table for Fig. 8)."""
+    key = jax.random.PRNGKey(seed)
+    ka, kp, kt = jax.random.split(key, 3)
+    theta_p = tabular.init_bottom(kp, d_p, depth=depth)
+    theta_a = {"bottom": tabular.init_bottom(ka, d_a, depth=depth),
+               "top": tabular.init_top(kt)}
+    rows: Dict[str, List[float]] = {"B": [], "t_f_p": [], "t_b_p": [],
+                                    "t_f_a": [], "t_top": []}
+    for B in batch_sizes:
+        xa = jnp.ones((B, d_a), jnp.float32)
+        xp = jnp.ones((B, d_p), jnp.float32)
+        y = jnp.zeros((B,), jnp.float32)
+        z = tabular.passive_forward(theta_p, xp)
+        g_z = jnp.ones_like(z)
+        t_fp = _time_fn(tabular.passive_forward, theta_p, xp)
+        t_bp = _time_fn(tabular.passive_backward, theta_p, xp, g_z)
+        t_as = _time_fn(tabular.active_step, theta_a, xa, z, y,
+                        task="regression")
+        rows["B"].append(B)
+        rows["t_f_p"].append(t_fp)
+        rows["t_b_p"].append(t_bp)
+        # split the active step into bottom-forward ~ t_fp-like and the rest
+        rows["t_f_a"].append(t_fp)          # same bottom architecture
+        rows["t_top"].append(max(t_as - t_fp - t_bp, 1e-6))
+    lam_p, gam_p = fit_power_law(rows["B"], rows["t_f_p"])
+    phi_p, bet_p = fit_power_law(rows["B"], rows["t_b_p"])
+    lam_a, gam_a = fit_power_law(rows["B"], rows["t_f_a"])
+    phi_t, bet_t = fit_power_law(rows["B"], rows["t_top"])
+    consts = CostConstants(
+        lambda_a=lam_a, gamma_a=gam_a, lambda_p=lam_p, gamma_p=gam_p,
+        varphi_a=phi_p, beta_a=bet_p, varphi_p=phi_p, beta_p=bet_p,
+        lambda_a_top=phi_t / 2, gamma_a_top=bet_t,
+        varphi_a_top=phi_t / 2, beta_a_top=bet_t,
+    )
+    return consts, rows

@@ -1,0 +1,56 @@
+"""Intra-party semi-asynchronous PS mechanism (paper §4.1, Eq. 5).
+
+    Delta_T_t = ceil( DT0/2 * tanh(2t/DT0 - 2) + DT0/2 )
+
+Early in training the interval is small (~0-1 epochs: frequent sync for
+stability); it ramps to DT0 (sparse sync for throughput).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Sequence
+
+import jax
+import numpy as np
+
+
+def delta_t(t: int, dt0: int) -> int:
+    """Synchronization interval at epoch t (Eq. 5)."""
+    if dt0 <= 0:
+        return 1
+    v = dt0 / 2 * math.tanh(2 * t / dt0 - 2) + dt0 / 2
+    return max(int(math.ceil(v)), 1)
+
+
+def sync_epochs(total_epochs: int, dt0: int) -> List[int]:
+    """Epochs at which the PS performs a global aggregation."""
+    out, t = [], 0
+    while t < total_epochs:
+        step = delta_t(t, dt0)
+        t += step
+        if t <= total_epochs:
+            out.append(t)
+    return out
+
+
+def aggregate(replicas: Sequence, weights=None):
+    """PS aggregation: (weighted) average of worker replicas' pytrees."""
+    n = len(replicas)
+    if weights is None:
+        weights = [1.0 / n] * n
+    else:
+        s = sum(weights)
+        weights = [w / s for w in weights]
+
+    def combine(*leaves):
+        acc = leaves[0] * weights[0]
+        for lf, w in zip(leaves[1:], weights[1:]):
+            acc = acc + lf * w
+        return acc
+
+    return jax.tree.map(combine, *replicas)
+
+
+def broadcast(agg, n: int) -> List:
+    """PS broadcast: every worker receives the aggregated params."""
+    return [jax.tree.map(lambda a: a, agg) for _ in range(n)]

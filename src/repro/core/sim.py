@@ -1,0 +1,115 @@
+"""Tiny deterministic discrete-event engine (simpy-lite, generator based).
+
+Processes are generators that yield commands:
+    ("sleep", dt)                     -> resumed with None after dt
+    ("get", store)                    -> resumed with the item (blocking)
+    ("get_timeout", store, timeout)   -> resumed with item or None (deadline)
+Stores are FIFO buffers with optional capacity; a full put EVICTS the
+oldest entry (the paper's channel-buffer semantics).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import deque
+from typing import Any, Deque, Generator, List, Optional, Tuple
+
+
+class Store:
+    def __init__(self, engine: "Engine", capacity: Optional[int] = None):
+        self.engine = engine
+        self.capacity = capacity
+        self.buf: Deque[Any] = deque()
+        self.waiters: Deque[list] = deque()   # [gen, timeout_token]
+        self.n_evicted = 0
+
+    def put(self, item: Any) -> None:
+        while self.waiters:
+            waiter = self.waiters.popleft()
+            gen, token = waiter
+            if token is not None and token.get("fired"):
+                continue                       # timed out already
+            if token is not None:
+                token["cancelled"] = True
+            self.engine._resume_soon(gen, item)
+            return
+        if self.capacity is not None and len(self.buf) >= self.capacity:
+            self.buf.popleft()
+            self.n_evicted += 1
+        self.buf.append(item)
+
+    def try_get(self) -> Tuple[bool, Any]:
+        if self.buf:
+            return True, self.buf.popleft()
+        return False, None
+
+    def __len__(self):
+        return len(self.buf)
+
+
+class Engine:
+    def __init__(self):
+        self.now = 0.0
+        self._heap: List = []
+        self._seq = itertools.count()
+        self.trace: List[Tuple] = []           # (time, tag, payload) log
+
+    # -- scheduling ------------------------------------------------------
+    def _push(self, t: float, fn, arg=None):
+        heapq.heappush(self._heap, (t, next(self._seq), fn, arg))
+
+    def _resume_soon(self, gen, value):
+        self._push(self.now, ("resume", gen), value)
+
+    def process(self, gen: Generator) -> None:
+        self._push(self.now, ("resume", gen), None)
+
+    def log(self, tag: str, **payload):
+        self.trace.append((self.now, tag, payload))
+
+    # -- run -------------------------------------------------------------
+    def run(self, until: float = float("inf")) -> float:
+        while self._heap:
+            t, _, action, arg = heapq.heappop(self._heap)
+            if t > until:
+                self.now = until
+                return self.now
+            self.now = t
+            kind, obj = action
+            if kind == "timeout_fire":
+                gen, token = obj
+                if token.get("cancelled"):
+                    continue
+                token["fired"] = True
+                self._step(gen, None)
+            else:                               # resume
+                self._step(obj, arg)
+        return self.now
+
+    def _step(self, gen, value):
+        try:
+            cmd = gen.send(value)
+        except StopIteration:
+            return
+        op = cmd[0]
+        if op == "sleep":
+            self._push(self.now + cmd[1], ("resume", gen), None)
+        elif op == "get":
+            store = cmd[1]
+            ok, item = store.try_get()
+            if ok:
+                self._resume_soon(gen, item)
+            else:
+                store.waiters.append([gen, None])
+        elif op == "get_timeout":
+            store, timeout = cmd[1], cmd[2]
+            ok, item = store.try_get()
+            if ok:
+                self._resume_soon(gen, item)
+            else:
+                token = {"fired": False, "cancelled": False}
+                store.waiters.append([gen, token])
+                self._push(self.now + timeout, ("timeout_fire",
+                                                (gen, token)), None)
+        else:
+            raise ValueError(op)

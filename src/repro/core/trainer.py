@@ -1,0 +1,256 @@
+"""Replays a DES event log with REAL JAX updates (Algorithm 1).
+
+The DES decides *when* things happen; this trainer executes *what* happens
+— passive forwards at stale replica params, active steps on buffered
+embeddings, delayed passive backwards, PS aggregations — so convergence
+under staleness/DP is measured, not assumed (DESIGN.md §3).
+
+Aggregation policy by method (paper semantics):
+  vfl      — single pair, no aggregation
+  vfl_ps   — synchronous: aggregate replicas every round (w batches)
+  avfl     — no PS: single shared params per party (hogwild updates)
+  avfl_ps  — aggregate replicas every epoch
+  pubsub   — semi-async: aggregate at the Eq. 5 Delta_T_t epoch marks
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.des import RunConfig, SimResult
+from repro.core.semi_async import aggregate, sync_epochs
+from repro.data.synthetic import Dataset
+from repro.data.vertical import VerticalView, batch_ids
+from repro.dp.gdp import GDPConfig, noise_sigma
+from repro.models import tabular
+from repro.optim.optimizers import adam, apply_updates
+
+
+@dataclass
+class TrainResult:
+    metric_name: str
+    history: List[float]              # per-epoch test metric
+    losses: List[float]               # mean train loss per epoch
+    final_metric: float
+    staleness_mean: float
+    n_updates: int
+
+    def epochs_to_target(self, target: float, higher_better: bool) -> int:
+        for i, v in enumerate(self.history):
+            if (v >= target) if higher_better else (v <= target):
+                return i + 1
+        return len(self.history)
+
+
+def _auc(y_true: np.ndarray, scores: np.ndarray) -> float:
+    # Mann-Whitney with average ranks for ties
+    uniq, inv, counts = np.unique(scores, return_inverse=True,
+                                  return_counts=True)
+    avg_rank = np.cumsum(counts) - (counts - 1) / 2.0
+    ranks = avg_rank[inv]
+    pos = y_true == 1
+    n_pos, n_neg = pos.sum(), (~pos).sum()
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[pos].sum() - n_pos * (n_pos + 1) / 2) /
+                 (n_pos * n_neg))
+
+
+class VFLTrainer:
+    def __init__(self, cfg: RunConfig, active: VerticalView,
+                 passive: VerticalView, test_active: VerticalView,
+                 test_passive: VerticalView, task: str, *,
+                 lr: float = 1e-3, seed: int = 0, resnet: bool = False,
+                 gdp: Optional[GDPConfig] = None, depth: int = 10,
+                 disable_semi_async: bool = False):
+        self.cfg = cfg
+        self.task = task
+        self.resnet = resnet
+        self.depth = depth
+        self.gdp = gdp
+        self.sigma = noise_sigma(gdp) if gdp else 0.0
+        self.clip = gdp.clip if gdp else math.inf
+        self.disable_semi_async = disable_semi_async
+        self.Xa, self.Xp, self.y = active.X, passive.X, active.y
+        self.tXa, self.tXp, self.ty = (test_active.X, test_passive.X,
+                                       test_active.y)
+        self.rng = np.random.default_rng(seed)
+        key = jax.random.PRNGKey(seed)
+        ka, kp, kt = jax.random.split(key, 3)
+
+        # replica counts per method
+        m = cfg.method
+        self.n_rep_a = 1 if m in ("vfl", "avfl") else cfg.w_a
+        self.n_rep_p = 1 if m in ("vfl", "avfl") else cfg.w_p
+        if m in ("vfl_ps", "avfl_ps"):
+            self.n_rep_a = self.n_rep_p = min(cfg.w_a, cfg.w_p)
+
+        def mk_a(k):
+            kb, kt_ = jax.random.split(k)
+            return {"bottom": tabular.init_bottom(kb, self.Xa.shape[1],
+                                                  depth=depth),
+                    "top": tabular.init_top(kt_)}
+
+        # the PS broadcasts ONE initialization to all workers (replica
+        # averaging of independently-initialized nets would be destructive)
+        theta_a0 = mk_a(ka)
+        theta_p0 = tabular.init_bottom(kp, self.Xp.shape[1], depth=depth)
+        self.theta_a = [jax.tree.map(lambda x: x, theta_a0)
+                        for _ in range(self.n_rep_a)]
+        self.theta_p = [jax.tree.map(lambda x: x, theta_p0)
+                        for _ in range(self.n_rep_p)]
+        self.opt = adam(lr)
+        self.opt_a = [self.opt.init(t) for t in self.theta_a]
+        self.opt_p = [self.opt.init(t) for t in self.theta_p]
+        self.version_p = [0] * self.n_rep_p
+        self.staleness: List[int] = []
+        self._emb_buf: Dict[int, tuple] = {}   # bid -> (z_p, rows, rep_p, ver)
+        self._grad_buf: Dict[int, tuple] = {}  # bid -> (g_zp, rows, rep_p)
+        self._epoch_ids: Dict[int, np.ndarray] = {}
+        self.n_updates = 0
+
+    # ------------------------------------------------------------------
+    def _rows(self, bid: int) -> np.ndarray:
+        ep = bid // self.cfg.n_batches
+        b = bid % self.cfg.n_batches
+        if ep not in self._epoch_ids:
+            self._epoch_ids[ep] = batch_ids(
+                len(self.y), self.cfg.batch_size, seed=self.cfg.seed,
+                epoch=ep)
+        return self._epoch_ids[ep][b % len(self._epoch_ids[ep])]
+
+    def _rep(self, w: int, party: str) -> int:
+        n = self.n_rep_a if party == "a" else self.n_rep_p
+        return w % n
+
+    # ------------------------------------------------------------------
+    def replay(self, sim: SimResult, *, eval_every_epoch: bool = True
+               ) -> TrainResult:
+        cfg = self.cfg
+        m = cfg.method
+        sync_marks = set(sync_epochs(cfg.n_epochs, cfg.dt0))
+        if self.disable_semi_async:                    # ablation: w/o ΔT
+            sync_marks = set(range(1, cfg.n_epochs + 1))
+        history, losses = [], []
+        ep_loss, ep_count = 0.0, 0
+        a_steps_total = 0
+        round_size = min(cfg.w_a, cfg.w_p)
+        epoch_of_step = lambda s: min(s // max(cfg.n_batches, 1),
+                                      cfg.n_epochs - 1)
+        cur_epoch = 0
+
+        for t, kind, pl in sim.events:
+            if kind == "p_fwd":
+                bid, w = pl["bid"], pl["w"]
+                rep = self._rep(w, "p")
+                rows = self._rows(bid)
+                z = tabular.passive_forward(
+                    self.theta_p[rep], jnp.asarray(self.Xp[rows]),
+                    resnet=self.resnet)
+                if self.sigma > 0 or math.isfinite(self.clip):
+                    zf = np.asarray(z)
+                    nrm = np.linalg.norm(zf, axis=-1, keepdims=True)
+                    zf = zf * np.minimum(1.0, self.clip /
+                                         np.maximum(nrm, 1e-12))
+                    if self.sigma > 0:
+                        zf = zf + self.sigma * self.rng.normal(
+                            size=zf.shape).astype(zf.dtype)
+                    z = jnp.asarray(zf)
+                self._emb_buf[bid] = (z, rows, rep, self.version_p[rep])
+            elif kind == "a_step":
+                bid, w = pl["bid"], pl["w"]
+                if bid not in self._emb_buf:
+                    continue                            # dropped upstream
+                z, rows, rep_p, fwd_ver = self._emb_buf.pop(bid)
+                rep = self._rep(w, "a")
+                loss, g_a, g_z = tabular.active_step(
+                    self.theta_a[rep], jnp.asarray(self.Xa[rows]), z,
+                    jnp.asarray(self.y[rows]), task=self.task,
+                    resnet=self.resnet)
+                ups, self.opt_a[rep] = self.opt.update(
+                    g_a, self.opt_a[rep], self.theta_a[rep])
+                self.theta_a[rep] = apply_updates(self.theta_a[rep], ups)
+                self._grad_buf[bid] = (g_z, rows, rep_p, fwd_ver)
+                ep_loss += float(loss)
+                ep_count += 1
+                a_steps_total += 1
+                self.n_updates += 1
+                # --- synchronous VFL-PS: aggregate every round ---
+                if m == "vfl_ps" and a_steps_total % round_size == 0:
+                    self._aggregate_a()
+            elif kind == "p_bwd":
+                bid = pl["bid"]
+                if bid not in self._grad_buf:
+                    continue
+                g_z, rows, rep_p, fwd_ver = self._grad_buf.pop(bid)
+                self.staleness.append(self.version_p[rep_p] - fwd_ver)
+                g_p = tabular.passive_backward(
+                    self.theta_p[rep_p], jnp.asarray(self.Xp[rows]), g_z,
+                    resnet=self.resnet)
+                ups, self.opt_p[rep_p] = self.opt.update(
+                    g_p, self.opt_p[rep_p], self.theta_p[rep_p])
+                self.theta_p[rep_p] = apply_updates(self.theta_p[rep_p],
+                                                    ups)
+                self.version_p[rep_p] += 1
+                if m == "vfl_ps" and self.version_p[rep_p] % \
+                        max(round_size, 1) == 0:
+                    self._aggregate_p()
+
+            # epoch boundary bookkeeping (driven by completed a_steps)
+            new_epoch = epoch_of_step(a_steps_total)
+            if new_epoch > cur_epoch or (t == sim.events[-1][0] and
+                                         kind == sim.events[-1][1]):
+                for ep_done in range(cur_epoch + 1, new_epoch + 1):
+                    if m == "avfl_ps" or (m == "pubsub" and
+                                          ep_done in sync_marks):
+                        self._aggregate_a()
+                        self._aggregate_p()
+                    losses.append(ep_loss / max(ep_count, 1))
+                    ep_loss, ep_count = 0.0, 0
+                    if eval_every_epoch:
+                        history.append(self.evaluate())
+                cur_epoch = new_epoch
+
+        while len(losses) < cfg.n_epochs:
+            losses.append(ep_loss / max(ep_count, 1))
+            ep_loss, ep_count = 0.0, 0
+            history.append(self.evaluate())
+        if not history:
+            history.append(self.evaluate())
+
+        metric = "auc" if self.task == "classification" else "rmse"
+        return TrainResult(
+            metric_name=metric, history=history, losses=losses,
+            final_metric=history[-1],
+            staleness_mean=(float(np.mean(self.staleness))
+                            if self.staleness else 0.0),
+            n_updates=self.n_updates)
+
+    # ------------------------------------------------------------------
+    def _aggregate_a(self):
+        agg = aggregate(self.theta_a)
+        self.theta_a = [jax.tree.map(lambda x: x, agg)
+                        for _ in range(self.n_rep_a)]
+
+    def _aggregate_p(self):
+        agg = aggregate(self.theta_p)
+        self.theta_p = [jax.tree.map(lambda x: x, agg)
+                        for _ in range(self.n_rep_p)]
+
+    # ------------------------------------------------------------------
+    def evaluate(self) -> float:
+        theta_a = aggregate(self.theta_a) if self.n_rep_a > 1 \
+            else self.theta_a[0]
+        theta_p = aggregate(self.theta_p) if self.n_rep_p > 1 \
+            else self.theta_p[0]
+        scores = np.asarray(tabular.predict(
+            theta_a, theta_p, jnp.asarray(self.tXa), jnp.asarray(self.tXp),
+            task=self.task, resnet=self.resnet))
+        if self.task == "classification":
+            return _auc(np.asarray(self.ty), scores)
+        return float(np.sqrt(np.mean((scores - self.ty) ** 2)))

@@ -1,0 +1,64 @@
+"""Gaussian Differential Privacy for cut-layer embeddings (paper Appendix C).
+
+sigma_dp = N_m * sqrt(K) / (mu * N)        (Eq. 17)
+
+where N_m = worker minibatch size, N = global batch size, K = number of
+queries (batches processed per worker), mu = GDP privacy parameter.
+`mu = inf` disables noise.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class GDPConfig:
+    mu: float = math.inf      # privacy loss parameter (smaller = stronger)
+    clip: float = 1.0         # L2 sensitivity bound on embeddings
+    minibatch: int = 32       # N_m
+    global_batch: int = 256   # N
+    n_queries: int = 1000     # K
+
+
+def noise_sigma(cfg: GDPConfig) -> float:
+    if not math.isfinite(cfg.mu) or cfg.mu <= 0:
+        return 0.0
+    return cfg.minibatch * math.sqrt(cfg.n_queries) / (cfg.mu *
+                                                       cfg.global_batch)
+
+
+def compose_mu(mus) -> float:
+    """GDP composition: mu_total = sqrt(sum mu_i^2) (Dong et al. 2019)."""
+    return math.sqrt(sum(m * m for m in mus))
+
+
+def mu_to_epsilon_delta(mu: float, delta: float = 1e-5) -> float:
+    """Convert mu-GDP to (eps, delta)-DP via the dual formula (numeric)."""
+    from math import erf, exp, log, sqrt
+
+    def Phi(x):
+        return 0.5 * (1 + erf(x / sqrt(2)))
+
+    # delta(eps) = Phi(-eps/mu + mu/2) - e^eps Phi(-eps/mu - mu/2)
+    lo, hi = 0.0, 100.0
+    for _ in range(200):
+        eps = 0.5 * (lo + hi)
+        d = Phi(-eps / mu + mu / 2) - exp(eps) * Phi(-eps / mu - mu / 2)
+        if d > delta:
+            lo = eps
+        else:
+            hi = eps
+    return 0.5 * (lo + hi)
+
+
+def add_noise(rng: np.ndarray, emb: np.ndarray, cfg: GDPConfig) -> np.ndarray:
+    """Numpy-side GDP mechanism (the jitted path uses kernels.cut_layer)."""
+    sigma = noise_sigma(cfg)
+    norm = np.linalg.norm(emb, axis=-1, keepdims=True)
+    emb = emb * np.minimum(1.0, cfg.clip / np.maximum(norm, 1e-12))
+    if sigma > 0:
+        emb = emb + sigma * rng.normal(size=emb.shape).astype(emb.dtype)
+    return emb

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel lives in its own subpackage with:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (kernel vs. pure-jnp path selection)
+  ref.py    — pure-jnp oracle used for allclose validation
+
+On this CPU-only container kernels run in ``interpret=True`` mode; the
+XLA-lowered dry-run uses the jnp path (Mosaic does not lower on host
+platform), which is numerically identical per the kernel tests.
+"""
+import os
+
+
+def default_interpret() -> bool:
+    """interpret=True on CPU; off automatically when a TPU is present."""
+    import jax
+    if os.environ.get("REPRO_PALLAS_INTERPRET"):
+        return os.environ["REPRO_PALLAS_INTERPRET"] == "1"
+    return jax.default_backend() != "tpu"

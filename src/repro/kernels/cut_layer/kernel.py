@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: fused cut-layer projection + tanh + L2 clip + DP noise.
+
+TPU adaptation: grid (m_blocks, k_blocks); K is streamed on the minor
+sequential axis into an fp32 (block_m, N) VMEM accumulator (the full
+embedding row must be resident for the row-wise L2 clip, and cut-layer
+widths — the model's d_model, <= 5120 here — fit VMEM comfortably).  The
+epilogue (bias, tanh, clip, noise) runs once on the last k step, so the
+pre-noise embedding never exists in HBM: what leaves the kernel is already
+differentially private.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cut_layer_kernel(x_ref, w_ref, b_ref, n_ref, o_ref, acc,
+                      *, n_k: int, clip: float, sigma: float):
+    kj = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                        w_ref[...].astype(jnp.float32))
+
+    @pl.when(kj == n_k - 1)
+    def _epilogue():
+        y = jnp.tanh(acc[...] + b_ref[...].astype(jnp.float32))
+        norm = jnp.sqrt(jnp.sum(y * y, axis=-1, keepdims=True))
+        y = y * jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+        y = y + sigma * n_ref[...].astype(jnp.float32)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("clip", "sigma", "block_m",
+                                             "block_k", "interpret"))
+def cut_layer_pallas(x, w, b, noise, *, clip: float, sigma: float,
+                     block_m: int = 128, block_k: int = 512,
+                     interpret: bool = True):
+    M, K = x.shape
+    N = w.shape[1]
+    block_m, block_k = min(block_m, M), min(block_k, K)
+    assert M % block_m == 0 and K % block_k == 0
+    n_k = K // block_k
+    return pl.pallas_call(
+        functools.partial(_cut_layer_kernel, n_k=n_k, clip=clip,
+                          sigma=sigma),
+        grid=(M // block_m, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec((block_k, N), lambda i, j: (j, 0)),
+            pl.BlockSpec((N,), lambda i, j: (0,)),
+            pl.BlockSpec((block_m, N), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, N), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, N), jnp.float32)],
+        interpret=interpret,
+    )(x, w, b, noise)

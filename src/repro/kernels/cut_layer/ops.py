@@ -1,0 +1,35 @@
+"""Public jit'd wrapper for the fused cut-layer op."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import default_interpret
+from repro.kernels.cut_layer.ref import cut_layer_ref
+from repro.kernels.cut_layer.kernel import cut_layer_pallas
+
+
+def cut_layer(x, w, b, *, clip: float, sigma: float, key=None, noise=None,
+              use_pallas: bool = False):
+    """Fused projection + tanh + L2 clip + Gaussian DP noise.
+
+    Either `noise` (standard normal, shape (M, N)) or a PRNG `key` must be
+    given when sigma > 0.
+    """
+    if noise is None:
+        if sigma > 0.0:
+            assert key is not None, "need key or noise when sigma > 0"
+            noise = jax.random.normal(key, (x.shape[0], w.shape[1]), x.dtype)
+        else:
+            import jax.numpy as jnp
+            noise = jnp.zeros((x.shape[0], w.shape[1]), x.dtype)
+    if use_pallas:
+        M, K = x.shape
+        bm, bk = 128, 512
+        while M % bm:
+            bm //= 2
+        while K % bk:
+            bk //= 2
+        return cut_layer_pallas(x, w, b, noise, clip=clip, sigma=sigma,
+                                block_m=max(bm, 1), block_k=max(bk, 1),
+                                interpret=default_interpret())
+    return cut_layer_ref(x, w, b, noise, clip=clip, sigma=sigma)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused cut-layer op.
+
+The cut layer is the trust boundary of PubSub-VFL: the passive party's
+embedding is projected, squashed, L2-clipped (DP sensitivity bound) and
+Gaussian-DP noised before it is published to the embedding channel
+(paper §4.1 + Appendix C).  Fusing these avoids materializing the
+pre-noise embedding in HBM.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cut_layer_ref(x, w, b, noise, *, clip: float, sigma: float):
+    """x: (M,K); w: (K,N); b: (N,); noise: (M,N) standard normal.
+
+    y = tanh(x @ w + b);  y *= min(1, clip/||y||2) rowwise;  y += sigma*noise
+    """
+    y = jnp.tanh(x.astype(jnp.float32) @ w.astype(jnp.float32)
+                 + b.astype(jnp.float32))
+    norm = jnp.linalg.norm(y, axis=-1, keepdims=True)
+    y = y * jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    y = y + sigma * noise.astype(jnp.float32)
+    return y.astype(x.dtype)

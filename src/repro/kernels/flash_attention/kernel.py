@@ -1,0 +1,108 @@
+"""Pallas TPU flash attention (online softmax), causal / sliding-window / GQA.
+
+TPU adaptation: grid = (batch, q_heads, q_blocks, kv_blocks); the kv axis is
+the minor sequential axis so the fp32 (block_q, D) accumulator plus the
+running max/denominator stay in VMEM scratch across kv blocks.  Blocks are
+MXU-aligned (128 x 128 by default).  GQA is handled in the k/v index_map
+(kv head = q head // group), so no repeated-KV materialization in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s,
+                  *, block_q: int, block_k: int, n_kv: int,
+                  causal: bool, window: Optional[int], q_offset: int,
+                  scale: float):
+    qi, kj = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+    s = jnp.dot(q, k.T)                                  # (bq, bk)
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m_s[...], l_s[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    # fully-masked rows: keep everything at zero
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+    acc[...] = acc[...] * alpha[:, None] + jnp.dot(
+        p, v_ref[0, 0].astype(jnp.float32))
+    m_s[...], l_s[...] = m_new, l_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_s[...], 1e-30)
+        o_ref[0, 0] = (acc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_offset", "block_q",
+                              "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None, q_offset: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True):
+    """q: (B,S,Hq,D); k,v: (B,T,Hk,D)."""
+    B, S, Hq, D = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = Hq // Hk
+    block_q, block_k = min(block_q, S), min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0
+    n_q, n_kv = S // block_q, T // block_k
+    qh = q.transpose(0, 2, 1, 3)                         # (B,Hq,S,D)
+    kh = k.transpose(0, 2, 1, 3)                         # (B,Hk,T,D)
+    vh = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, block_q=block_q, block_k=block_k, n_kv=n_kv,
+            causal=causal, window=window, q_offset=q_offset,
+            scale=D ** -0.5),
+        grid=(B, Hq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,19 @@
+"""Public jit'd wrapper for tiled attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.kernels import default_interpret
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, q_offset: int = 0,
+                    use_pallas: bool = False):
+    if use_pallas:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            interpret=default_interpret())
+    return flash_attention_ref(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for tiled attention: causal / sliding-window / GQA."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None, q_offset: int = 0):
+    """q: (B,S,Hq,D); k,v: (B,T,Hk,D) with Hq % Hk == 0."""
+    B, S, Hq, D = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = Hq // Hk
+    qf = (q.astype(jnp.float32) * D ** -0.5).reshape(B, S, Hk, G, D)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qf, k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, D).astype(q.dtype)

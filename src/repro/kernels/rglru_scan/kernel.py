@@ -1,0 +1,65 @@
+"""Pallas TPU kernel for the RG-LRU diagonal gated linear recurrence.
+
+TPU adaptation: channels are embarrassingly parallel (diagonal recurrence),
+so the grid tiles (batch, channel_blocks) on the major axes and streams time
+chunks on the minor sequential axis; the per-channel fp32 state vector stays
+in VMEM scratch across chunks.  Channel blocks are lane-aligned (128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, u_ref, h0_ref, h_ref, hlast_ref, state,
+                  *, block_t: int, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = h0_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a_ref[0, t].astype(jnp.float32) * h + \
+            u_ref[0, t].astype(jnp.float32)
+        h_ref[0, t] = h.astype(h_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, step, state[...])
+    state[...] = h
+
+    @pl.when(c == n_chunks - 1)
+    def _finish():
+        hlast_ref[0] = h
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "block_w", "interpret"))
+def rglru_scan_pallas(a, u, h0, *, block_t: int = 128, block_w: int = 128,
+                      interpret: bool = True):
+    """a,u: (B,S,W); h0: (B,W) -> (h: (B,S,W), h_last: (B,W) fp32)."""
+    B, S, W = a.shape
+    block_t = min(block_t, S)
+    block_w = min(block_w, W)
+    assert S % block_t == 0 and W % block_w == 0, (S, W, block_t, block_w)
+    n_chunks = S // block_t
+
+    t_spec = pl.BlockSpec((1, block_t, block_w), lambda b, wi, c: (b, c, wi))
+    h_spec = pl.BlockSpec((1, block_w), lambda b, wi, c: (b, wi))
+    h, h_last = pl.pallas_call(
+        functools.partial(_rglru_kernel, block_t=block_t, n_chunks=n_chunks),
+        grid=(B, W // block_w, n_chunks),
+        in_specs=[t_spec, t_spec, h_spec],
+        out_specs=[t_spec, h_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), u.dtype),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_w,), jnp.float32)],
+        interpret=interpret,
+    )(a, u, h0.astype(jnp.float32))
+    return h, h_last

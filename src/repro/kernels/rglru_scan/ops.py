@@ -1,0 +1,24 @@
+"""Public jit'd wrapper for the RG-LRU scan."""
+from __future__ import annotations
+
+from repro.kernels import default_interpret
+from repro.kernels.rglru_scan.ref import rglru_scan_ref, rglru_scan_assoc_ref
+from repro.kernels.rglru_scan.kernel import rglru_scan_pallas
+
+
+def rglru_scan(a, u, h0, *, use_pallas: bool = False, assoc: bool = False,
+               block_t: int = 128):
+    if use_pallas:
+        B, S, W = a.shape
+        bt = block_t
+        while S % bt:
+            bt //= 2
+        bw = 128
+        while W % bw:
+            bw //= 2
+        return rglru_scan_pallas(a, u, h0, block_t=max(bt, 1),
+                                 block_w=max(bw, 1),
+                                 interpret=default_interpret())
+    if assoc:
+        return rglru_scan_assoc_ref(a, u, h0)
+    return rglru_scan_ref(a, u, h0)

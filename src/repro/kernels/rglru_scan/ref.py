@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the RG-LRU diagonal gated linear recurrence:
+
+    h_t = a_t * h_{t-1} + u_t
+
+where `a_t` is the data-dependent per-channel decay and `u_t` the gated
+input (sqrt(1-a_t^2) * i_t * x_t, computed by the caller).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, u, h0):
+    """a, u: (B,S,W); h0: (B,W) fp32 -> (h: (B,S,W), h_last: (B,W))."""
+    dtype = u.dtype
+    af, uf = a.astype(jnp.float32), u.astype(jnp.float32)
+
+    def step(h, inp):
+        a_t, u_t = inp
+        h = a_t * h + u_t
+        return h, h
+
+    xs = (jnp.moveaxis(af, 1, 0), jnp.moveaxis(uf, 1, 0))
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(dtype), h_last
+
+
+def rglru_scan_assoc_ref(a, u, h0):
+    """Associative-scan formulation (identical math, O(log S) depth)."""
+    dtype = u.dtype
+    af, uf = a.astype(jnp.float32), u.astype(jnp.float32)
+    uf = uf.at[:, 0].add(af[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, a2 * u1 + u2
+
+    aa, hh = jax.lax.associative_scan(combine, (af, uf), axis=1)
+    return hh.astype(dtype), hh[:, -1].astype(jnp.float32)

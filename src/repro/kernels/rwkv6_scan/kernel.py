@@ -1,0 +1,84 @@
+"""Pallas TPU kernel for the RWKV6 wkv recurrence.
+
+TPU adaptation (DESIGN.md §4): one (batch, head) pair per major grid step;
+the D x D fp32 state stays resident in VMEM scratch while time is streamed
+through in chunks of ``block_t`` along the minor (sequential) grid axis.
+The inner chunk loop is a fori_loop over single steps — the recurrence is
+inherently sequential in t, but all D x D work per step is vectorized on
+the VPU and the state never round-trips to HBM between chunks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                  y_ref, sout_ref, state, *, block_t: int, n_chunks: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(jnp.float32)
+
+    def step(t, S):
+        r_t = r_ref[0, t].astype(jnp.float32)          # (D,)
+        k_t = k_ref[0, t].astype(jnp.float32)
+        v_t = v_ref[0, t].astype(jnp.float32)
+        w_t = w_ref[0, t].astype(jnp.float32)
+        u = u_ref[0].astype(jnp.float32)               # (D,)
+        a = k_t[:, None] * v_t[None, :]                # (D,D)
+        y = jnp.sum((S + u[:, None] * a) * r_t[:, None], axis=0)
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return w_t[:, None] * S + a
+
+    S = jax.lax.fori_loop(0, block_t, step, state[...])
+    state[...] = S
+
+    @pl.when(c == n_chunks - 1)
+    def _finish():
+        sout_ref[0] = S
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def rwkv6_scan_pallas(r, k, v, w, u, state, *, block_t: int = 128,
+                      interpret: bool = True):
+    """r,k,v,w: (B,S,H,D); u: (H,D); state: (B,H,D,D) fp32."""
+    B, S, H, D = r.shape
+    block_t = min(block_t, S)
+    assert S % block_t == 0, (S, block_t)
+    n_chunks = S // block_t
+    # (B*H, S, D) layout: one row of the major grid per (b,h)
+    def bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    rr, kk, vv, ww = bh(r), bh(k), bh(v), bh(w)
+    uu = jnp.broadcast_to(u[None], (B, H, D)).reshape(B * H, D)
+    s0 = state.reshape(B * H, D, D).astype(jnp.float32)
+
+    t_spec = pl.BlockSpec((1, block_t, D), lambda i, c: (i, c, 0))
+    y, s_out = pl.pallas_call(
+        functools.partial(_rwkv6_kernel, block_t=block_t, n_chunks=n_chunks),
+        grid=(B * H, n_chunks),
+        in_specs=[
+            t_spec, t_spec, t_spec, t_spec,
+            pl.BlockSpec((1, D), lambda i, c: (i, 0)),
+            pl.BlockSpec((1, D, D), lambda i, c: (i, 0, 0)),
+        ],
+        out_specs=[
+            t_spec,
+            pl.BlockSpec((1, D, D), lambda i, c: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, D), r.dtype),
+            jax.ShapeDtypeStruct((B * H, D, D), jnp.float32),
+        ],
+        # fp32 running state, VMEM-resident across time chunks
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(rr, kk, vv, ww, uu, s0)
+    y = y.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    return y, s_out.reshape(B, H, D, D)

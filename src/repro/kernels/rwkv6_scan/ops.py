@@ -1,0 +1,26 @@
+"""Public jit'd wrapper for the RWKV6 wkv scan."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import default_interpret
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_pallas
+
+
+def rwkv6_scan(r, k, v, w, u, state, *, use_pallas: bool = False,
+               block_t: int = 128):
+    """Dispatch: Pallas kernel (TPU target / interpret on CPU) or jnp oracle.
+
+    The jnp path is the default inside jitted model code (the XLA dry-run
+    cannot lower Mosaic on the host platform); kernel correctness is pinned
+    to the oracle by tests/test_kernels.py sweeps.
+    """
+    if use_pallas:
+        S = r.shape[1]
+        bt = block_t
+        while S % bt:
+            bt //= 2
+        return rwkv6_scan_pallas(r, k, v, w, u, state, block_t=max(bt, 1),
+                                 interpret=default_interpret())
+    return rwkv6_scan_ref(r, k, v, w, u, state)

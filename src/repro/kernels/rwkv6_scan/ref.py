@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) wkv recurrence.
+
+Per head (state S in R^{D x D}, row index = key dim, col index = value dim):
+    y_t = sum_i r_t[i] * (S_{t-1}[i,:] + u[i] * k_t[i] * v_t[:])
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u, state):
+    """r,k,v,w: (B,S,H,D); u: (H,D); state: (B,H,D,D) fp32.
+
+    Returns (y: (B,S,H,D) in r.dtype, new_state: (B,H,D,D) fp32)."""
+    dtype = r.dtype
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B,H,D) each
+        a = k_t[..., :, None] * v_t[..., None, :]      # (B,H,D,D)
+        y = jnp.sum((S + uf[None, :, :, None] * a) * r_t[..., :, None],
+                    axis=-2)                            # (B,H,D)
+        S_new = w_t[..., :, None] * S + a
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(dtype), state

@@ -1,0 +1,361 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  512 placeholder host devices back the production
+# meshes: (16,16)=256 chips single-pod, (2,16,16)=512 chips multi-pod.
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) and
+emit memory/cost/collective analysis for EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k \
+      --mesh single [--zero] [--no-remat] [--out runs/dryrun.jsonl]
+  python -m repro.launch.dryrun --all --out runs/dryrun.jsonl  # resumable
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED, SHAPES, get_config, input_specs,
+                           long_context_variant, shape_applicability)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (batch_sharding, cache_sharding,
+                                   params_sharding)
+from repro.launch.steps import (make_decode_step, make_model,
+                                make_prefill_step, make_train_step)
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"=\s*(\(?)([a-z0-9\[\],{} ]+?)\s+"
+                       r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                       r"collective-permute)", re.I)
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8}
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all `dtype[d0,d1,...]` shapes in `text`."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in the optimized HLO
+    (per-device; ICI roofline proxy — cost_analysis has no collective
+    field)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "-done(" in ls:
+            continue            # async pair: count only the -start op
+        hit = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start)?\(", ls):
+                hit = c
+                break
+        if hit is None:
+            continue
+        lhs = ls.split("=", 1)[0] if "=" in ls else ""
+        rhs = ls.split("=", 1)[1] if "=" in ls else ls
+        shape_part = rhs.split(hit)[0]
+        b = _shape_bytes(shape_part)
+        if b:
+            out[hit] += b
+            out["count"] += 1
+    return out
+
+
+def _mem_report(compiled) -> Dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:            # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {"unavailable": True}
+    rep = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            rep[attr] = int(v)
+    if not rep:
+        rep["repr"] = str(ma)
+    return rep
+
+
+def _cost_report(compiled) -> Dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:            # pragma: no cover
+        return {"error": str(e)}
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" in k.lower()
+                or k in ("transcendentals",))}
+
+
+def _probe_stage(cfg, stage, shape, mesh, data_axes, kind: str) -> Dict:
+    """HLO flops/bytes/collectives of ONE layer-group of `stage`, compiled
+    under the production sharding.
+
+    XLA's cost_analysis counts a lax.scan body ONCE (trip counts are not
+    multiplied), so per-(arch x shape) totals are reconstructed as
+      corrected = reported + sum_i (repeat_i - 1) * body_i
+    where body_i comes from this probe (embedding/head/optimizer terms are
+    outside the scans and therefore already fully counted)."""
+    import functools
+
+    from repro.models import blocks
+    repeat, pattern = stage
+    B = shape.global_batch
+    S = 1 if kind == "decode" else shape.seq_len
+    act = jnp.dtype(cfg.dtype)
+    x_sds = jax.ShapeDtypeStruct((B, S, cfg.d_model), act)
+    if cfg.mrope:
+        pos_sds = jax.ShapeDtypeStruct((3, B, S), jnp.dtype("int32"))
+    else:
+        pos_sds = jax.ShapeDtypeStruct((B, S), jnp.dtype("int32"))
+
+    def init_group(key):
+        ks = jax.random.split(key, len(pattern))
+        return tuple(blocks.init_layer(k, cfg, spec)
+                     for k, spec in zip(ks, pattern))
+
+    params_sds = jax.eval_shape(init_group, jax.random.PRNGKey(0))
+    from repro.launch.sharding import (batch_sharding, cache_sharding,
+                                       params_sharding)
+    # group params have no stack axis -> plain (unstacked) rules
+    p_shard = params_sharding(params_sds, mesh, data_axes=data_axes)
+    x_shard = batch_sharding({"x": x_sds, "pos": pos_sds}, mesh,
+                             data_axes=data_axes)
+
+    cache_sds = None
+    c_shard = None
+    if kind == "decode":
+        def init_group_cache():
+            return tuple(blocks.init_layer_cache(cfg, spec, B,
+                                                 shape.seq_len)
+                         for spec in pattern)
+        cache_sds = jax.eval_shape(init_group_cache)
+        c_shard = cache_sharding(cache_sds, mesh, data_axes=data_axes)
+
+    def fwd(params, x, positions, cache):
+        for i, spec in enumerate(pattern):
+            c = None if cache is None else cache[i]
+            x, _, _ = blocks.apply_layer(params[i], cfg, spec, x,
+                                         positions, c)
+        return x
+
+    with mesh:
+        if kind == "train":
+            def body(params, x, positions):
+                f = fwd
+                if cfg.remat:
+                    f = jax.checkpoint(f)
+                y = f(params, x, positions, None)
+                return jnp.sum(y.astype(jnp.float32))
+
+            fn = jax.jit(jax.value_and_grad(body, argnums=(0, 1)),
+                         in_shardings=(p_shard, x_shard["x"],
+                                       x_shard["pos"]))
+            compiled = fn.lower(params_sds, x_sds, pos_sds).compile()
+        else:
+            fn = jax.jit(fwd, in_shardings=(p_shard, x_shard["x"],
+                                            x_shard["pos"], c_shard))
+            compiled = fn.lower(params_sds, x_sds, pos_sds,
+                                cache_sds).compile()
+    cost = _cost_report(compiled)
+    return {
+        "repeat": repeat,
+        "pattern": [list(p) for p in pattern],
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "collectives": collective_bytes(compiled.as_text()),
+    }
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *,
+            zero: bool = False, remat: bool = True,
+            dp_sigma: float = 0.0, opts: Optional[Dict] = None) -> Dict:
+    """opts: beyond-paper §Perf levers applied to the config, e.g.
+    {"ce_chunk": 2048, "remat_policy": "dots", "moe_dispatch_i8": True}."""
+    opts = dict(opts or {})
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    runnable, note = shape_applicability(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "zero": zero, "remat": remat, "note": note,
+           "opts": opts}
+    if not runnable:
+        rec["status"] = "skipped"
+        return rec
+    if shape_name == "long_500k":
+        cfg = long_context_variant(cfg)
+    cfg = cfg.replace(dtype="bfloat16", param_dtype="bfloat16",
+                      remat=(remat and shape.kind == "train"), **opts)
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    data_axes = ("pod", "data") if multi else ("data",)
+
+    model = make_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(model.init, key)
+    p_shard = params_sharding(params_shapes, mesh, zero=False,
+                              data_axes=data_axes)
+    specs = input_specs(cfg, shape)
+    b_shard = batch_sharding(specs, mesh, data_axes=data_axes)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt, train_step = make_train_step(model, dp_sigma=dp_sigma)
+            opt_shapes = jax.eval_shape(opt.init, params_shapes)
+            o_shard = params_sharding(opt_shapes, mesh, zero=zero,
+                                      data_axes=data_axes)
+            rng_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            fn = jax.jit(
+                train_step,
+                in_shardings=(p_shard, o_shard, b_shard, None),
+                out_shardings=(p_shard, o_shard, None))
+            lowered = fn.lower(params_shapes, opt_shapes, specs, rng_s)
+        else:
+            capacity = shape.seq_len
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, capacity))
+            c_shard = cache_sharding(cache_shapes, mesh,
+                                     data_axes=data_axes)
+            if shape.kind == "prefill":
+                step = make_prefill_step(model)
+            else:
+                step = make_decode_step(model)
+            fn = jax.jit(step, in_shardings=(p_shard, b_shard, c_shard),
+                         out_shardings=(None, c_shard))
+            lowered = fn.lower(params_shapes, specs, cache_shapes)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    # per-stage body probes -> scan-trip-count correction (see _probe_stage)
+    stages = list(model.bottom_stages) + list(model.top_stages)
+    probes = []
+    for stage in stages:
+        try:
+            probes.append(_probe_stage(cfg, stage, shape, mesh, data_axes,
+                                       shape.kind))
+        except Exception as e:       # pragma: no cover
+            probes.append({"repeat": stage[0], "error": str(e)})
+
+    cost = _cost_report(compiled)
+    coll = collective_bytes(compiled.as_text())
+    extra_flops = sum((p["repeat"] - 1) * p.get("flops", 0.0)
+                      for p in probes)
+    extra_bytes = sum((p["repeat"] - 1) * p.get("bytes", 0.0)
+                      for p in probes)
+    extra_coll = {}
+    for key in _COLLECTIVES:
+        extra_coll[key] = coll.get(key, 0) + sum(
+            (p["repeat"] - 1) * p.get("collectives", {}).get(key, 0)
+            for p in probes)
+
+    rec.update(
+        status="ok", lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory=_mem_report(compiled),
+        cost=cost,
+        collectives=coll,
+        corrected_flops=cost.get("flops", 0.0) + extra_flops,
+        corrected_bytes=cost.get("bytes accessed", 0.0) + extra_bytes,
+        corrected_collectives=extra_coll,
+        stage_probes=probes,
+        n_params=cfg.param_count(),
+        n_active_params=cfg.active_param_count(),
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--zero", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--opt", action="append", default=[],
+                    help="k=v config override, e.g. ce_chunk=2048")
+    args = ap.parse_args()
+    opts = {}
+    for kv in args.opt:
+        k, v = kv.split("=", 1)
+        opts[k] = (int(v) if v.lstrip("-").isdigit()
+                   else v == "true" if v in ("true", "false") else v)
+
+    combos = []
+    if args.all:
+        for mesh_kind in ("single", "multi"):
+            for arch in ASSIGNED:
+                for shape in SHAPES:
+                    combos.append((arch, shape, mesh_kind))
+    else:
+        assert args.arch and args.shape
+        combos = [(args.arch, args.shape, args.mesh)]
+
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["mesh"],
+                                  r.get("zero", False)))
+                except json.JSONDecodeError:
+                    pass
+
+    for arch, shape, mesh_kind in combos:
+        key = (arch, shape, mesh_kind, args.zero)
+        if key in done:
+            print(f"[skip-done] {key}")
+            continue
+        print(f"[dryrun] {arch} x {shape} x {mesh_kind} ...", flush=True)
+        try:
+            rec = run_one(arch, shape, mesh_kind, zero=args.zero,
+                          remat=not args.no_remat, opts=opts)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                   "zero": args.zero, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        line = json.dumps(rec)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(line + "\n")
+        print(line[:400], flush=True)
+
+
+if __name__ == "__main__":
+    main()

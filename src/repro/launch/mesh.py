@@ -1,0 +1,29 @@
+"""Production mesh construction (TPU v5e target).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state.  Single-pod: (data=16, model=16) = 256 chips.
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; in PubSub-VFL the two
+pods map to the two parties (DESIGN.md §3) and the only pod-crossing
+traffic is the cut-layer embedding/gradient channels.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, model: int = 1):
+    """Degenerate mesh for CPU smoke tests (1 device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link

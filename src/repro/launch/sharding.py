@@ -1,0 +1,145 @@
+"""Partition rules: param/activation PartitionSpecs for the production mesh.
+
+Megatron-style tensor parallelism over the "model" axis:
+  - attention q/k/v projections, FFN up/gate, RG-LRU/RWKV input projections,
+    LM head: column-sharded (last dim over "model")
+  - attention output, FFN down, recurrent output: row-sharded
+  - MoE expert weights: expert-parallel (expert dim over "model")
+  - embeddings: vocab-sharded
+Batch/activations shard over "data" (and "pod" when multi-pod).  A dim is
+sharded only if divisible by the axis size (e.g. hubert's 504-way head
+stays replicated).  `zero=True` additionally shards optimizer moments over
+"data" (ZeRO-1) — a §Perf hillclimb lever.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# last-dim ("column") sharded weights
+_COL = {"wq", "wk", "wv", "wg", "wu", "wy", "wx", "wa", "wi", "head",
+        "w_uk", "w_uv", "conv_w"}
+# first-dim ("row") sharded weights
+_ROW = {"wo", "wd"}
+# sharded vectors (outputs of column-sharded projections)
+_VEC = {"bq", "bk", "bv", "conv_b", "lam"}
+_EMBED = {"embed"}
+
+
+def _spec_for(name: str, rank: int, stacked: bool) -> Tuple:
+    base_rank = rank - (1 if stacked else 0)
+    spec: list = [None] * base_rank
+    if name in _EMBED and base_rank == 2:
+        spec[0] = "model"                      # vocab-sharded
+    elif base_rank == 3 and name in ("wg", "wu", "wd"):
+        spec[0] = "model"                      # expert-parallel MoE
+    elif name in _COL and base_rank >= 2:
+        spec[-1] = "model"
+    elif name in _ROW and base_rank == 2:
+        spec[0] = "model"
+    elif name in _VEC and base_rank == 1:
+        spec[0] = "model"
+    elif name == "u" and base_rank == 2:
+        spec[0] = "model"                      # wkv u: heads over model
+    if stacked:
+        spec = [None] + spec
+    return tuple(spec)
+
+
+def _fit_divisibility(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh
+                      ) -> P:
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in
+                            (ax if isinstance(ax, tuple) else (ax,))]))
+        out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+def params_sharding(params, mesh: Mesh, *, zero: bool = False,
+                    data_axes: Tuple[str, ...] = ("data",)):
+    """NamedSharding pytree matching `params` (works for opt moments too
+    since they mirror the param tree)."""
+    def walk(node, stacked: bool, name: str):
+        if isinstance(node, dict):
+            return {k: walk(v, stacked or k in ("bottom", "top"), k)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            return t(walk(v, stacked, name) for v in node)
+        # leaf
+        spec = _spec_for(name, np.ndim(node), stacked)
+        pspec = _fit_divisibility(spec, np.shape(node), mesh)
+        if zero:
+            pspec = _apply_zero(pspec, np.shape(node), mesh, data_axes)
+        return NamedSharding(mesh, pspec)
+
+    return walk(params, False, "")
+
+
+def _apply_zero(pspec: P, shape, mesh: Mesh, data_axes) -> P:
+    """ZeRO: also shard the largest unsharded dim over the data axes."""
+    size = int(np.prod([mesh.shape[a] for a in data_axes]))
+    spec = list(pspec) + [None] * (len(shape) - len(pspec))
+    best, best_dim = None, 0
+    for i, (d, ax) in enumerate(zip(shape, spec)):
+        if ax is None and d % size == 0 and d > best_dim:
+            best, best_dim = i, d
+        if ax is not None and not isinstance(ax, tuple):
+            pass
+    if best is not None and best_dim >= size:
+        ax = data_axes[0] if len(data_axes) == 1 else tuple(data_axes)
+        spec[best] = ax
+    return P(*spec)
+
+
+def batch_sharding(tree, mesh: Mesh,
+                   data_axes: Tuple[str, ...] = ("data",)):
+    """Shard the leading (batch) dim of every input leaf over data axes."""
+    ax = data_axes[0] if len(data_axes) == 1 else tuple(data_axes)
+
+    def leaf(x):
+        shape = x.shape
+        size = int(np.prod([mesh.shape[a] for a in data_axes]))
+        if len(shape) >= 1 and shape[0] % size == 0:
+            return NamedSharding(mesh, P(ax, *([None] * (len(shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(leaf, tree)
+
+
+def cache_sharding(cache, mesh: Mesh,
+                   data_axes: Tuple[str, ...] = ("data",)):
+    """KV/recurrent caches: batch dim over "data", feature (last) dim over
+    "model" — head_dim/latent-rank sharding keeps 32k-500k decode caches
+    within per-chip HBM (attention contracts over the sharded dim, which
+    XLA lowers to a reduce-scatter/all-reduce).  Stacked stage caches have
+    a leading layer axis, then batch; scalars replicate."""
+    ax = data_axes[0] if len(data_axes) == 1 else tuple(data_axes)
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    msize = mesh.shape.get("model", 1)
+
+    def leaf(x):
+        shape = x.shape
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * len(shape)
+        # batch dim: first (unstacked) or second (stacked stage cache)
+        for bdim in ((1, 0) if len(shape) > 1 else (0,)):
+            if shape[bdim] % dsize == 0 and shape[bdim] > 1:
+                spec[bdim] = ax
+                break
+        # feature dim: last, over model (never the batch dim)
+        last = len(shape) - 1
+        if spec[last] is None and len(shape) >= 3 and \
+                shape[last] % msize == 0 and shape[last] >= msize:
+            spec[last] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, cache)

@@ -1,0 +1,46 @@
+"""jit-able train / prefill / decode steps for any assigned architecture."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import SplitModel
+from repro.optim.optimizers import adam, apply_updates
+
+
+def make_model(cfg: ArchConfig) -> SplitModel:
+    return SplitModel(cfg)
+
+
+def make_train_step(model: SplitModel, lr: float = 3e-4,
+                    dp_sigma: float = 0.0, dp_clip: float = 1e9):
+    opt = adam(lr)
+
+    def train_step(params, opt_state, batch, rng):
+        def loss_fn(p):
+            return model.loss(p, batch, dp_sigma=dp_sigma, dp_clip=dp_clip,
+                              rng=rng)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        ups, opt_state2 = opt.update(grads, opt_state, params)
+        params2 = apply_updates(params, ups)
+        return params2, opt_state2, loss
+
+    return opt, train_step
+
+
+def make_prefill_step(model: SplitModel):
+    def prefill_step(params, batch, cache):
+        logits, cache, _ = model.forward(params, batch, cache=cache)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_decode_step(model: SplitModel):
+    def decode_step(params, batch, cache):
+        return model.decode_step(params, batch, cache)
+
+    return decode_step

@@ -1,0 +1,3 @@
+"""Model stack: backbones for all assigned architectures + the paper's
+tabular models, wrapped by transformer.SplitModel into the two-party
+split (bottom | cut layer | f_a + top + head)."""

@@ -1,0 +1,315 @@
+"""Attention mixers: GQA (RoPE/M-RoPE, QKV-bias, sliding window) and
+DeepSeek-V2 MLA (latent-compressed KV with absorbed decode path).
+
+All functions are cache-carrying:
+  forward(params, cfg, x, positions, cache) -> (y, new_cache)
+`cache=None` means train/prefill without cache emission; a cache dict means
+either prefill-fill (S>1) or single-token decode (S==1).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import (apply_mrope, apply_rope, dense, normal_init,
+                                 rms_norm)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# core scaled-dot-product with GQA groups + causal / sliding-window masks
+# ---------------------------------------------------------------------------
+def sdpa(q, k, v, *, causal: bool, window: Optional[int],
+         q_offset, kv_len=None, scale=None):
+    """q: (B,S,Hq,Dh), k/v: (B,T,Hk,Dh).  q_offset is the absolute position
+    of q[:,0]; kv_len (scalar) masks unfilled cache slots."""
+    B, S, Hq, Dh = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = Hq // Hk
+    scale = scale if scale is not None else Dh ** -0.5
+    qf = (q * scale).astype(jnp.float32).reshape(B, S, Hk, G, Dh)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qf, kf)          # (B,Hk,G,S,T)
+
+    q_pos = q_offset + jnp.arange(S)[:, None]                  # (S,1)
+    k_pos = jnp.arange(T)[None, :]                             # (1,T)
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, v.shape[-1]).astype(q.dtype)
+
+
+# threshold above which the XLA path switches to blockwise (flash-style)
+# attention.  §Perf finding: at S=T=4096 the dense path materializes the
+# (B,Hk,G,S,T) fp32 score tensor and its backward all-reduces it (7.5 GB
+# per layer on qwen2-0.5b train_4k) — so anything >= 2k x 2k goes blockwise.
+_BLOCKWISE_AREA = 2048 * 2048
+
+
+def blockwise_sdpa(q, k, v, *, causal: bool, window: Optional[int],
+                   q_offset, kv_len=None, scale=None,
+                   q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Online-softmax attention with lax.scan over q and kv chunks.
+
+    Pure-jnp twin of kernels/flash_attention for the compiled dry-run
+    (Mosaic does not lower on the host platform).  Same math, O(chunk^2)
+    transient memory."""
+    B, S, Hq, D = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = Hq // Hk
+    Dv = v.shape[-1]
+    scale = scale if scale is not None else D ** -0.5
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    assert S % q_chunk == 0 and T % kv_chunk == 0
+    nq, nk = S // q_chunk, T // kv_chunk
+
+    # bf16 dot inputs + fp32 accumulation (MXU-style); halves chunk traffic
+    cdt = jnp.bfloat16 if q.dtype == jnp.bfloat16 else jnp.float32
+    qf = (q.astype(jnp.float32) * scale).astype(cdt).reshape(
+        B, nq, q_chunk, Hk, G, D)
+    qf = jnp.moveaxis(qf, 1, 0)                        # (nq,B,qc,Hk,G,D)
+    kf = jnp.moveaxis(k.astype(cdt).reshape(B, nk, kv_chunk, Hk, D), 1, 0)
+    vf = jnp.moveaxis(v.astype(cdt).reshape(B, nk, kv_chunk, Hk, Dv), 1, 0)
+
+    def q_block(carry, inp):
+        qi, qb = inp                                   # qb: (B,qc,Hk,G,D)
+
+        def kv_block(st, kinp):
+            kj, kb, vb = kinp
+            acc, m, l = st
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32)
+            q_pos = q_offset + qi * q_chunk + \
+                jnp.arange(q_chunk)[:, None]
+            k_pos = kj * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= k_pos <= q_pos
+            if window is not None:
+                mask &= k_pos > q_pos - window
+            if kv_len is not None:
+                mask &= k_pos < kv_len
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + \
+                jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(cdt), vb,
+                           preferred_element_type=jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        init = (
+            jnp.zeros((B, Hk, G, q_chunk, Dv), jnp.float32),
+            jnp.full((B, Hk, G, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hk, G, q_chunk), jnp.float32),
+        )
+        (acc, m, l), _ = jax.lax.scan(
+            kv_block, init, (jnp.arange(nk), kf, vf))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,Hk,G,qc,Dv)
+        return carry, jnp.moveaxis(out, 3, 1)          # (B,qc,Hk,G,Dv)
+
+    _, outs = jax.lax.scan(q_block, None, (jnp.arange(nq), qf))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, Hq, Dv)
+    return out.astype(q.dtype)
+
+
+def dispatch_sdpa(q, k, v, **kw):
+    """Dense for small problems, blockwise beyond the area threshold."""
+    S, T = q.shape[1], k.shape[1]
+    if S * T >= _BLOCKWISE_AREA and S > 1 and \
+            S % 1024 == 0 and T % 1024 == 0:
+        return blockwise_sdpa(q, k, v, **kw)
+    return sdpa(q, k, v, **kw)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+def init_attn(key, cfg: ArchConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hk = cfg.n_heads, cfg.n_kv_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": normal_init(ks[0], (d, hq * hd), dt),
+        "wk": normal_init(ks[1], (d, hk * hd), dt),
+        "wv": normal_init(ks[2], (d, hk * hd), dt),
+        "wo": normal_init(ks[3], (hq * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dt)
+        p["bk"] = jnp.zeros((hk * hd,), dt)
+        p["bv"] = jnp.zeros((hk * hd,), dt)
+    return p
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, capacity: int):
+    hd, hk = cfg.resolved_head_dim, cfg.n_kv_heads
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((batch, capacity, hk, hd), dt),
+        "v": jnp.zeros((batch, capacity, hk, hd), dt),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def attn_forward(params, cfg: ArchConfig, x, positions, cache,
+                 *, local: bool = False):
+    B, S, _ = x.shape
+    hd, hq, hk = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = dense(x, params["wq"], params.get("bq")).reshape(B, S, hq, hd)
+    k = dense(x, params["wk"], params.get("bk")).reshape(B, S, hk, hd)
+    v = dense(x, params["wv"], params.get("bv")).reshape(B, S, hk, hd)
+
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        pos1d = positions[0]
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        pos1d = positions
+
+    window = cfg.sliding_window if (local or cfg.sliding_window) else None
+    if cache is None:
+        q_off = pos1d[0, 0]
+        out = dispatch_sdpa(q, k, v, causal=cfg.causal, window=window,
+                            q_offset=q_off)
+    else:
+        idx = cache["idx"]
+        cap = cache["k"].shape[1]
+        if S == 1:
+            # decode: ring-buffer write at idx % cap (rope pre-applied)
+            slot = idx % cap
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+            kv_len = jnp.minimum(idx + 1, cap)
+            # with rope pre-applied all filled slots are attendable; the
+            # window is enforced by the ring capacity itself.
+            out = sdpa(q, ck, cv, causal=False, window=None,
+                       q_offset=idx, kv_len=kv_len)
+        else:
+            # prefill-fill: write the (last `cap`) keys into the cache
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k[:, -cap:], (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v[:, -cap:], (0, 0, 0, 0))
+            out = dispatch_sdpa(q, k, v, causal=cfg.causal, window=window,
+                                q_offset=pos1d[0, 0])
+        cache = {"k": ck, "v": cv, "idx": idx + S}
+    y = dense(out.reshape(B, S, hq * hd), params["wo"])
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): KV compressed to kv_lora_rank + shared RoPE key
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg: ArchConfig):
+    d, r = cfg.d_model, cfg.kv_lora_rank
+    h = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": normal_init(ks[0], (d, h * (nope + rope)), dt),
+        "w_dkv": normal_init(ks[1], (d, r + rope), dt),       # down + k_pe
+        "kv_norm": jnp.zeros((r,), dt),
+        "w_uk": normal_init(ks[2], (r, h * nope), dt),        # up: k_nope
+        "w_uv": normal_init(ks[3], (r, h * vd), dt),          # up: v
+        "wo": normal_init(ks[4], (h * vd, d), dt),
+    }
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, capacity: int):
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ckv": jnp.zeros((batch, capacity, cfg.kv_lora_rank), dt),
+        "kpe": jnp.zeros((batch, capacity, cfg.qk_rope_dim), dt),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def _mla_project(params, cfg, x, positions):
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = dense(x, params["wq"]).reshape(B, S, h, nope + rope)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    dkv = dense(x, params["w_dkv"])
+    ckv = rms_norm(dkv[..., :cfg.kv_lora_rank], params["kv_norm"],
+                   cfg.norm_eps)
+    k_pe = apply_rope(dkv[..., None, cfg.kv_lora_rank:], positions,
+                      cfg.rope_theta)[:, :, 0]                 # (B,S,rope)
+    return q_nope, q_pe, ckv, k_pe
+
+
+def mla_forward(params, cfg: ArchConfig, x, positions, cache):
+    B, S, _ = x.shape
+    h, nope, rope, vd = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                         cfg.v_head_dim)
+    scale = (nope + rope) ** -0.5
+    q_nope, q_pe, ckv, k_pe = _mla_project(params, cfg, x, positions)
+
+    if S > 1:
+        # naive (non-absorbed) path for train/prefill
+        T = S
+        k_nope = dense(ckv, params["w_uk"]).reshape(B, T, h, nope)
+        v = dense(ckv, params["w_uv"]).reshape(B, T, h, vd)
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None], (B, T, h, rope))],
+            axis=-1)
+        window = cfg.sliding_window
+        out = dispatch_sdpa(q, k, v, causal=cfg.causal, window=window,
+                            q_offset=positions[0, 0], scale=scale)
+        new_cache = None
+        if cache is not None:
+            cap = cache["ckv"].shape[1]
+            cc = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv[:, -cap:], (0, 0, 0))
+            cp = jax.lax.dynamic_update_slice(
+                cache["kpe"], k_pe[:, -cap:], (0, 0, 0))
+            new_cache = {"ckv": cc, "kpe": cp, "idx": cache["idx"] + S}
+    else:
+        # absorbed decode: attend in the latent space
+        idx = cache["idx"]
+        cap = cache["ckv"].shape[1]
+        slot = idx % cap
+        cc = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, slot, 0))
+        cp = jax.lax.dynamic_update_slice(cache["kpe"], k_pe, (0, slot, 0))
+        kv_len = jnp.minimum(idx + 1, cap)
+        w_uk = params["w_uk"].reshape(cfg.kv_lora_rank, h, nope)
+        # q̃ = q_nope absorbed through W_uk:   (B,S,h,r)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        scores = (jnp.einsum("bshr,btr->bhst", q_lat,
+                             cc.astype(jnp.float32))
+                  + jnp.einsum("bshp,btp->bhst", q_pe.astype(jnp.float32),
+                               cp.astype(jnp.float32))) * scale
+        t_pos = jnp.arange(cap)[None, :]
+        mask = t_pos < kv_len
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out_lat = jnp.einsum("bhst,btr->bshr", probs,
+                             cc.astype(jnp.float32))           # (B,S,h,r)
+        w_uv = params["w_uv"].reshape(cfg.kv_lora_rank, h, vd)
+        out = jnp.einsum("bshr,rhv->bshv", out_lat,
+                         w_uv.astype(jnp.float32)).astype(x.dtype)
+        new_cache = {"ckv": cc, "kpe": cp, "idx": idx + S}
+    y = dense(out.reshape(B, S, h * vd), params["wo"])
+    return y, new_cache

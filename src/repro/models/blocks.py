@@ -1,0 +1,120 @@
+"""Per-layer assembly: (mixer, ffn) dispatch, init + apply + cache init."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.common import init_glu_mlp, glu_mlp, layer_norm, rms_norm
+
+
+# ---------------------------------------------------------------------------
+def init_layer(key, cfg: ArchConfig, spec: LayerSpec):
+    mixer, ffn = spec
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    km, kf = jax.random.split(key)
+    p = {"n1": jnp.zeros((d,), dt)}
+    if mixer in ("attn", "local_attn"):
+        p["mixer"] = attn.init_attn(km, cfg)
+    elif mixer == "mla":
+        p["mixer"] = attn.init_mla(km, cfg)
+    elif mixer == "rwkv":
+        p["n1b"] = jnp.zeros((d,), dt)
+        p["mixer"] = rwkv_mod.init_rwkv_tm(km, cfg)
+    elif mixer == "rglru":
+        p["mixer"] = rglru_mod.init_rglru(km, cfg)
+    else:
+        raise ValueError(mixer)
+    if ffn != "none":
+        p["n2"] = jnp.zeros((d,), dt)
+        if ffn == "dense":
+            p["ffn"] = init_glu_mlp(kf, d, cfg.d_ff, dt)
+        elif ffn == "moe":
+            p["ffn"] = moe_mod.init_moe(kf, cfg)
+        elif ffn == "rwkv_cm":
+            p["n2b"] = jnp.zeros((d,), dt)
+            p["ffn"] = rwkv_mod.init_rwkv_cm(kf, cfg)
+        else:
+            raise ValueError(ffn)
+    return p
+
+
+def init_layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int,
+                     capacity: int):
+    mixer, _ = spec
+    if mixer in ("attn", "local_attn"):
+        cap = capacity
+        if cfg.sliding_window is not None:
+            cap = min(cap, cfg.sliding_window)
+        return attn.init_attn_cache(cfg, batch, cap)
+    if mixer == "mla":
+        cap = capacity
+        if cfg.sliding_window is not None:
+            cap = min(cap, cfg.sliding_window)
+        return attn.init_mla_cache(cfg, batch, cap)
+    if mixer == "rwkv":
+        return rwkv_mod.init_rwkv_state(cfg, batch)
+    if mixer == "rglru":
+        return rglru_mod.init_rglru_state(cfg, batch)
+    raise ValueError(mixer)
+
+
+# ---------------------------------------------------------------------------
+def _norm1(p, cfg, x):
+    if "n1b" in p:
+        return layer_norm(x, 1.0 + p["n1"], p["n1b"], cfg.norm_eps)
+    return rms_norm(x, p["n1"], cfg.norm_eps)
+
+
+def _norm2(p, cfg, x):
+    if "n2b" in p:
+        return layer_norm(x, 1.0 + p["n2"], p["n2b"], cfg.norm_eps)
+    return rms_norm(x, p["n2"], cfg.norm_eps)
+
+
+def _pin(cfg, x):
+    """Pin the residual stream to (batch-sharded, replicated) — stops SPMD
+    resharding churn between mixer/FFN sub-blocks (§Perf lever)."""
+    if cfg.act_spec:
+        from jax.sharding import PartitionSpec as P
+        x = jax.lax.with_sharding_constraint(
+            x, P(tuple(cfg.act_spec), None, None))
+    return x
+
+
+def apply_layer(p, cfg: ArchConfig, spec: LayerSpec, x, positions, cache):
+    """Returns (x, new_cache, aux_loss)."""
+    mixer, ffn = spec
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm1(p, cfg, x)
+    if mixer == "attn":
+        y, cache = attn.attn_forward(p["mixer"], cfg, h, positions, cache)
+    elif mixer == "local_attn":
+        y, cache = attn.attn_forward(p["mixer"], cfg, h, positions, cache,
+                                     local=True)
+    elif mixer == "mla":
+        y, cache = attn.mla_forward(p["mixer"], cfg, h, positions, cache)
+    elif mixer == "rwkv":
+        y, cache = rwkv_mod.rwkv_time_mix(p["mixer"], cfg, h, cache)
+    elif mixer == "rglru":
+        y, cache = rglru_mod.rglru_block(p["mixer"], cfg, h, cache)
+    else:
+        raise ValueError(mixer)
+    x = _pin(cfg, x + y)
+    if ffn != "none":
+        h = _norm2(p, cfg, x)
+        if ffn == "dense":
+            y = glu_mlp(p["ffn"], h, cfg.act)
+        elif ffn == "moe":
+            y, aux = moe_mod.moe_forward(p["ffn"], cfg, h)
+        elif ffn == "rwkv_cm":
+            y, cache = rwkv_mod.rwkv_channel_mix(p["ffn"], cfg, h, cache)
+        x = _pin(cfg, x + y)
+    return x, cache, aux

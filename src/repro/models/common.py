@@ -1,0 +1,185 @@
+"""Shared layer primitives: init, norms, dense, activations, RoPE/M-RoPE."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def normal_init(key, shape, dtype, stddev=None):
+    if stddev is None:
+        fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+        stddev = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+
+def zeros_init(key, shape, dtype, **_):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def init_stacked(key, repeat: int, init_fn):
+    """vmap an init function over `repeat` keys -> stacked param pytree."""
+    keys = jax.random.split(key, repeat)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x, scale, eps: float):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def group_norm(x, scale, bias, n_groups: int, eps: float = 64e-5):
+    """GroupNorm over the last dim (used by RWKV6 wkv output)."""
+    dtype = x.dtype
+    *lead, d = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, n_groups, d // n_groups)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = ((x - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, d)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+def dense(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu, "tanh": jnp.tanh}[name]
+
+
+def glu_mlp(params, x, act: str):
+    """SwiGLU / GeGLU: (act(x Wg) * x Wu) Wd."""
+    g = act_fn(act)(dense(x, params["wg"]))
+    u = dense(x, params["wu"])
+    return dense(g * u, params["wd"])
+
+
+def init_glu_mlp(key, d_model, d_ff, dtype):
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "wg": normal_init(kg, (d_model, d_ff), dtype),
+        "wu": normal_init(ku, (d_model, d_ff), dtype),
+        "wd": normal_init(kd, (d_ff, d_model), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, Dh); positions: (B, S) int32.
+
+    Interleaved (GPT-J) pairing: rotation pairs are ADJACENT elements, so
+    the reshape/slice stays device-local under any even sharding of the
+    head_dim — the half-split convention forces cross-device
+    collective-permutes when head_dim is model-sharded (§Perf finding)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                     # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs     # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    xr = x.astype(jnp.float32).reshape(*x.shape[:-1], half, 2)
+    x1, x2 = xr[..., 0], xr[..., 1]
+    out = jnp.stack([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: Tuple[int, int, int]):
+    """Multimodal rotary (Qwen2-VL): positions3 (3, B, S) for (t, h, w);
+    the frequency axis is partitioned into `sections` (in half-dim units)."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                     # (half,)
+    # (3, B, S, half)
+    ang_all = positions3.astype(jnp.float32)[..., None] * freqs
+    # pick the section owner per freq index
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=half)              # (half,)
+    ang = jnp.take_along_axis(
+        ang_all, sec_id[None, None, :].astype(jnp.int32)[None], axis=0)[0]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    xr = x.astype(jnp.float32).reshape(*x.shape[:-1], half, 2)
+    x1, x2 = xr[..., 0], xr[..., 1]
+    out = jnp.stack([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def chunked_cross_entropy(h, w_head, labels, *, chunk: int = 1024,
+                          ignore_index: int = -100):
+    """Vocab-safe CE: logits are materialized per sequence-chunk inside a
+    rematerialized scan body, so the (B,S,V) fp32 logits tensor never
+    exists (a §Perf memory-term optimization; numerically identical to
+    `cross_entropy(h @ w_head, labels)`)."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.concatenate(
+            [h, jnp.zeros((B, pad, d), h.dtype)], axis=1)
+        labels = jnp.concatenate(
+            [labels, jnp.full((B, pad), ignore_index, labels.dtype)],
+            axis=1)
+    nc = (S + pad) // chunk
+    hc = jnp.moveaxis(h.reshape(B, nc, chunk, d), 1, 0)
+    yc = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h_c, y_c = xs
+        logits = jnp.einsum("bcd,dv->bcv", h_c.astype(jnp.float32),
+                            w_head.astype(jnp.float32))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.clip(y_c, 0)[..., None].astype(jnp.int32),
+            axis=-1)[..., 0]
+        mask = (y_c != ignore_index).astype(jnp.float32)
+        nll, cnt = carry
+        return (nll + ((logz - ll) * mask).sum(), cnt + mask.sum()), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, yc))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def cross_entropy(logits, labels, ignore_index: int = -100):
+    """Mean next-token CE; logits (B,S,V) fp-any, labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    mask = (labels != ignore_index).astype(jnp.float32)
+    nll = (logz - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN with top-k routing, shared experts, capacity-based
+scatter/gather dispatch (TPU-friendly: no (T,E,cap) one-hot; FLOPs scale with
+*active* experts so MoE rooflines are honest), and a load-balance aux loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import init_glu_mlp, normal_init, act_fn
+
+
+def init_moe(key, cfg: ArchConfig):
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    kr, ke, ks = jax.random.split(key, 3)
+    keys = jax.random.split(ke, 3)
+    p = {
+        "router": normal_init(kr, (d, E), dt, stddev=0.02),
+        "wg": normal_init(keys[0], (E, d, ff), dt),
+        "wu": normal_init(keys[1], (E, d, ff), dt),
+        "wd": normal_init(keys[2], (E, ff, d), dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_glu_mlp(ks, d, ff * cfg.n_shared_experts, dt)
+    return p
+
+
+def _positions_in_expert(flat_e, E: int, cfg: ArchConfig):
+    """Rank of each (token, choice) within its expert's arrival order.
+
+    §Perf iteration log (EXPERIMENTS.md):
+    v1  flat cumsum over the (T*k, E) one-hot — lowers to a QUADRATIC
+        reduce-window in XLA (O((Tk)^2): 55 PFLOP/device at 1M tokens).
+    v2  hierarchical block cumsum — O(Tk*E) work (44x flops reduction) but
+        still materializes O(Tk*E) position tensors (memory-dominant).
+    v3  (current) sort-based ranking — O(Tk log Tk), NO E-wide tensor:
+        stable-sort tokens by expert; rank within the sorted segment is
+        arrival order; scatter ranks back."""
+    n = flat_e.shape[0]
+    fe = flat_e.astype(jnp.int32)
+    s = jnp.argsort(fe, stable=True)                      # group by expert
+    sorted_e = fe[s]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=jnp.int32))
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - seg_start[sorted_e]
+    return jnp.zeros((n,), jnp.int32).at[s].set(pos_sorted)
+
+
+def _capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(((cap + 7) // 8) * 8, 8)  # round up to a multiple of 8
+
+
+def moe_forward(params, cfg: ArchConfig, x):
+    """x: (B,S,d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T,E)
+    gate, expert_idx = jax.lax.top_k(probs, k)                 # (T,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(axis=0)                                    # (E,)
+    one_hot_top1 = jax.nn.one_hot(expert_idx[:, 0], E)
+    ce = one_hot_top1.mean(axis=0)
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    cap = _capacity(T, cfg)
+    # position of each (token, choice) within its expert's capacity buffer
+    flat_e = expert_idx.reshape(-1)                            # (T*k,)
+    pos_in_e = _positions_in_expert(flat_e, E, cfg)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, flat_e * cap + pos_in_e, E * cap)   # overflow slot
+
+    # scatter tokens into (E*cap+1, d)
+    src = jnp.repeat(xt, k, axis=0)                            # (T*k,d)
+    buf = jnp.zeros((E * cap + 1, d), x.dtype).at[slot].add(
+        jnp.where(keep[:, None], src, 0))
+    buf = buf[:-1].reshape(E, cap, d)
+    if cfg.act_spec:
+        # §Perf v5: pin the dispatch buffer to BOTH mesh axes — experts
+        # over "model" AND capacity slots over the data axes.  Without
+        # this XLA shards the expert einsum over tokens only (the model
+        # axis idles: 16x more compute per device than the mesh affords).
+        from jax.sharding import PartitionSpec as P
+        dp = tuple(cfg.act_spec)
+        buf = jax.lax.with_sharding_constraint(buf, P("model", dp, None))
+
+    # expert computation (active FLOPs only: E * cap ≈ T*k*capacity_factor)
+    act = act_fn(cfg.act)
+    def _pin_e(t):
+        if cfg.act_spec:
+            from jax.sharding import PartitionSpec as P
+            dp = tuple(cfg.act_spec)
+            return jax.lax.with_sharding_constraint(
+                t, P("model", dp, *([None] * (t.ndim - 2))))
+        return t
+    g = act(_pin_e(jnp.einsum("ecd,edf->ecf", buf,
+                              params["wg"].astype(x.dtype))))
+    u = _pin_e(jnp.einsum("ecd,edf->ecf", buf,
+                          params["wu"].astype(x.dtype)))
+    yb = _pin_e(jnp.einsum("ecf,efd->ecd", g * u,
+                           params["wd"].astype(x.dtype)))
+    yb = jnp.concatenate(
+        [yb.reshape(E * cap, d), jnp.zeros((1, d), x.dtype)], axis=0)
+
+    # gather back and combine with gates
+    gathered = yb[slot].reshape(T, k, d)
+    y = jnp.einsum("tkd,tk->td", gathered,
+                   gate.astype(jnp.float32).astype(x.dtype))
+    if "shared" in params:
+        from repro.models.common import glu_mlp
+        y = y + glu_mlp(params["shared"], xt, cfg.act)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,81 @@
+"""RecurrentGemma recurrent block: GeGLU-gated causal conv + RG-LRU.
+
+State (decode cache): {"h": (B,W) fp32, "conv": (B, conv_width-1, W)}.
+Gate projections are full linear (the reference model uses block-diagonal;
+noted as an approximation in DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense, normal_init
+from repro.kernels.rglru_scan.ops import rglru_scan
+
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin §2.4)
+
+
+def init_rglru(key, cfg: ArchConfig):
+    d, W = cfg.d_model, cfg.resolved_lru_width
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "wy": normal_init(ks[0], (d, W), dt),
+        "wx": normal_init(ks[1], (d, W), dt),
+        "conv_w": normal_init(ks[2], (cfg.conv_width, W), dt, stddev=0.1),
+        "conv_b": jnp.zeros((W,), dt),
+        "wa": normal_init(ks[3], (W, W), dt, stddev=0.02),
+        "wi": normal_init(ks[4], (W, W), dt, stddev=0.02),
+        "lam": jnp.full((W,), 2.0, dt),   # softplus(2) ~ 2.13 -> slow decay
+        "wo": normal_init(ks[5], (W, d), dt),
+    }
+
+
+def init_rglru_state(cfg: ArchConfig, batch: int):
+    W = cfg.resolved_lru_width
+    return {
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, W),
+                          jnp.dtype(cfg.dtype)),
+    }
+
+
+def _causal_conv(z, w, b, conv_state):
+    """Depthwise causal conv, width cw.  z: (B,S,W); w: (cw,W)."""
+    B, S, W = z.shape
+    cw = w.shape[0]
+    prev = (conv_state if conv_state is not None
+            else jnp.zeros((B, cw - 1, W), z.dtype))
+    zp = jnp.concatenate([prev, z], axis=1)          # (B, S+cw-1, W)
+    out = jnp.zeros((B, S, W), jnp.float32)
+    for i in range(cw):
+        out = out + zp[:, i:i + S].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_state = zp[:, S:] if conv_state is not None else None
+    return out.astype(z.dtype), new_state
+
+
+def rglru_block(params, cfg: ArchConfig, x, state):
+    """x: (B,S,d) -> (out, new_state)."""
+    y = jax.nn.gelu(dense(x, params["wy"]))                  # gate branch
+    z = dense(x, params["wx"])
+    conv_state = state["conv"] if state is not None else None
+    z, new_conv = _causal_conv(z, params["conv_w"], params["conv_b"],
+                               conv_state)
+    # RG-LRU
+    r = jax.nn.sigmoid(dense(z, params["wa"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(z, params["wi"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * \
+        z.astype(jnp.float32)
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((x.shape[0], z.shape[-1]), jnp.float32))
+    h, h_last = rglru_scan(a.astype(x.dtype), gated.astype(x.dtype), h0)
+    out = dense(h.astype(x.dtype) * y, params["wo"])
+    new_state = None
+    if state is not None:
+        new_state = {"h": h_last, "conv": new_conv}
+    return out, new_state

@@ -1,0 +1,118 @@
+"""RWKV6 "Finch" blocks: time-mix (data-dependent decay wkv) + channel-mix.
+
+State (the decode cache of the attention-free arch):
+  {"wkv": (B,H,D,D) fp32, "x_tm": (B,d), "x_cm": (B,d)}  (token-shift regs)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense, group_norm, layer_norm, normal_init
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+
+
+def init_rwkv_tm(key, cfg: ArchConfig):
+    d, lora = cfg.d_model, cfg.rwkv_lora_dim
+    H = d // cfg.rwkv_head_dim
+    Dh = cfg.rwkv_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 10)
+    return {
+        "mu_x": jnp.zeros((d,), dt),
+        "mu5": jnp.zeros((5, d), dt),               # w,k,v,r,g lerp bases
+        "maa_w1": normal_init(ks[0], (d, 5 * lora), dt, stddev=1e-4),
+        "maa_w2": normal_init(ks[1], (5, lora, d), dt, stddev=1e-4),
+        "decay_base": jnp.full((d,), -6.0, dt),
+        "td_w1": normal_init(ks[2], (d, lora), dt, stddev=1e-4),
+        "td_w2": normal_init(ks[3], (lora, d), dt, stddev=1e-4),
+        "u": normal_init(ks[4], (H, Dh), dt, stddev=0.5),
+        "wr": normal_init(ks[5], (d, d), dt),
+        "wk": normal_init(ks[6], (d, d), dt),
+        "wv": normal_init(ks[7], (d, d), dt),
+        "wg": normal_init(ks[8], (d, d), dt),
+        "wo": normal_init(ks[9], (d, d), dt),
+        "lnx_s": jnp.ones((d,), dt),
+        "lnx_b": jnp.zeros((d,), dt),
+    }
+
+
+def init_rwkv_cm(key, cfg: ArchConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), dt),
+        "mu_r": jnp.zeros((d,), dt),
+        "wk": normal_init(ks[0], (d, ff), dt),
+        "wv": normal_init(ks[1], (ff, d), dt),
+        "wr": normal_init(ks[2], (d, d), dt),
+    }
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    H, Dh = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wkv": jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        "x_tm": jnp.zeros((batch, d), dt),
+        "x_cm": jnp.zeros((batch, d), dt),
+    }
+
+
+def _token_shift(x, prev):
+    """sx[t] = x[t-1] with sx[0] = prev (the last token of the prior chunk)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def rwkv_time_mix(params, cfg: ArchConfig, x, state):
+    B, S, d = x.shape
+    H, Dh = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    prev = state["x_tm"] if state is not None else jnp.zeros_like(x[:, 0])
+    sx = _token_shift(x, prev)
+    xx = sx - x
+
+    # data-dependent lerp (ddlerp) for the five mixes
+    xxx = x + xx * params["mu_x"].astype(x.dtype)
+    low = jnp.tanh(dense(xxx, params["maa_w1"])).reshape(
+        B, S, 5, cfg.rwkv_lora_dim)
+    deltas = jnp.einsum("bsfl,fld->bsfd", low,
+                        params["maa_w2"].astype(x.dtype))     # (B,S,5,d)
+    mixed = x[:, :, None] + xx[:, :, None] * (
+        params["mu5"].astype(x.dtype)[None, None] + deltas)
+    xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(5)]
+
+    # data-dependent decay  w = exp(-exp(.))  in (0,1)
+    ww = params["decay_base"].astype(jnp.float32) + dense(
+        jnp.tanh(dense(xw, params["td_w1"])), params["td_w2"]
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww)).reshape(B, S, H, Dh)
+
+    r = dense(xr, params["wr"]).reshape(B, S, H, Dh)
+    k = dense(xk, params["wk"]).reshape(B, S, H, Dh)
+    v = dense(xv, params["wv"]).reshape(B, S, H, Dh)
+    g = jax.nn.silu(dense(xg, params["wg"]))
+
+    wkv0 = (state["wkv"] if state is not None
+            else jnp.zeros((B, H, Dh, Dh), jnp.float32))
+    y, wkv = rwkv6_scan(r, k, v, w.astype(x.dtype), params["u"], wkv0)
+    y = group_norm(y.reshape(B, S, d), params["lnx_s"], params["lnx_b"], H)
+    out = dense(y * g, params["wo"])
+    new_state = None
+    if state is not None:
+        new_state = dict(state, wkv=wkv, x_tm=x[:, -1])
+    return out, new_state
+
+
+def rwkv_channel_mix(params, cfg: ArchConfig, x, state):
+    prev = state["x_cm"] if state is not None else jnp.zeros_like(x[:, 0])
+    sx = _token_shift(x, prev)
+    xx = sx - x
+    xk = x + xx * params["mu_k"].astype(x.dtype)
+    xr = x + xx * params["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(dense(xk, params["wk"])))
+    out = jax.nn.sigmoid(dense(xr, params["wr"])) * dense(k, params["wv"])
+    new_state = dict(state, x_cm=x[:, -1]) if state is not None else None
+    return out, new_state

@@ -1,0 +1,108 @@
+"""The paper's own bottom/top models (§5.1) + decomposed VFL compute ops.
+
+Bottom models: ten-layer MLP ("small") and a residual MLP ("large",
+standing in for their ResNet on tabular features).  Top model: two-layer
+MLP at the active party.
+
+The decomposed ops are what the runtimes exchange over channels:
+  passive_forward(theta_p, x_p)                  -> z_p  (embedding)
+  active_step(theta_a, x_a, z_p, y)              -> loss, grads_a, g_zp
+  passive_backward(theta_p, x_p, g_zp)           -> grads_p
+These mirror Algorithm 1 lines 7-10 / 15-18 / 25-26.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import normal_init
+
+
+EMB_DIM = 128
+
+
+def init_bottom(key, d_in: int, *, depth: int = 10, width: int = 128,
+                emb_dim: int = EMB_DIM) -> Dict:
+    ks = jax.random.split(key, depth + 1)
+    dims = [d_in] + [width] * (depth - 1) + [emb_dim]
+    layers = []
+    for i in range(depth):
+        layers.append({
+            "w": normal_init(ks[i], (dims[i], dims[i + 1]), jnp.float32),
+            "b": jnp.zeros((dims[i + 1],), jnp.float32),
+        })
+    return {"layers": layers}
+
+
+def bottom_forward(params: Dict, x, resnet: bool = False) -> jnp.ndarray:
+    h = x
+    for lyr in params["layers"]:
+        z = jnp.tanh(h @ lyr["w"] + lyr["b"])
+        if resnet and z.shape == h.shape:
+            z = z + h
+        h = z
+    return h
+
+
+def init_top(key, *, emb_dim: int = EMB_DIM, hidden: int = 64) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": normal_init(k1, (2 * emb_dim, hidden), jnp.float32),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": normal_init(k2, (hidden, 1), jnp.float32),
+        "b2": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def top_forward(params: Dict, z_a, z_p) -> jnp.ndarray:
+    h = jnp.concatenate([z_a, z_p], axis=-1)
+    h = jnp.tanh(h @ params["w1"] + params["b1"])
+    return (h @ params["w2"] + params["b2"])[..., 0]
+
+
+def loss_fn(logits, y, task: str):
+    if task == "classification":
+        y = y.astype(jnp.float32)
+        # Eq. 1: binary cross-entropy with logits
+        return jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                        jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return jnp.mean(jnp.square(logits - y))           # MSE (RMSE reported)
+
+
+# ---------------------------------------------------------------------------
+# decomposed VFL ops (jitted once per task type)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("resnet",))
+def passive_forward(theta_p, x_p, *, resnet: bool = False):
+    return bottom_forward(theta_p, x_p, resnet)
+
+
+@functools.partial(jax.jit, static_argnames=("task", "resnet"))
+def active_step(theta_a, x_a, z_p, y, *, task: str, resnet: bool = False):
+    """theta_a = {"bottom": ..., "top": ...}; returns loss, grads, g_zp."""
+    def f(theta_a, z_p):
+        z_a = bottom_forward(theta_a["bottom"], x_a, resnet)
+        logits = top_forward(theta_a["top"], z_a, z_p)
+        return loss_fn(logits, y, task)
+
+    loss, grads = jax.value_and_grad(f, argnums=(0, 1))(theta_a, z_p)
+    return loss, grads[0], grads[1]
+
+
+@functools.partial(jax.jit, static_argnames=("resnet",))
+def passive_backward(theta_p, x_p, g_zp, *, resnet: bool = False):
+    _, vjp = jax.vjp(lambda t: bottom_forward(t, x_p, resnet), theta_p)
+    return vjp(g_zp)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("task", "resnet"))
+def predict(theta_a, theta_p, x_a, x_p, *, task: str, resnet: bool = False):
+    z_a = bottom_forward(theta_a["bottom"], x_a, resnet)
+    z_p = bottom_forward(theta_p, x_p, resnet)
+    logits = top_forward(theta_a["top"], z_a, z_p)
+    if task == "classification":
+        return jax.nn.sigmoid(logits)
+    return logits

@@ -1,0 +1,291 @@
+"""SplitModel: any assigned backbone wrapped into the two-party split
+(bottom stack @ passive party | cut layer | f_a + top stack + head @ active).
+
+Layers are scanned per stage (stacked params) so the traced HLO stays small
+for 48-layer configs.  `cut_layer` is the trust boundary (DESIGN.md §3-4):
+projection + tanh + L2-clip + Gaussian-DP noise, fused in the Pallas kernel
+on TPU (jnp-identical path inside jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Stage
+from repro.models import blocks
+from repro.models.common import (chunked_cross_entropy, cross_entropy,
+                                 dense, init_stacked, normal_init,
+                                 rms_norm)
+from repro.kernels.cut_layer.ops import cut_layer as cut_layer_op
+
+
+# ---------------------------------------------------------------------------
+# stage splitting at the cut layer
+# ---------------------------------------------------------------------------
+def split_stages(stages: Tuple[Stage, ...], cut: int
+                 ) -> Tuple[Tuple[Stage, ...], Tuple[Stage, ...]]:
+    """Split a stage list at layer index `cut` (rounded down to the nearest
+    pattern-group boundary of the stage it falls in)."""
+    bottom: List[Stage] = []
+    top: List[Stage] = []
+    start = 0
+    for repeat, pattern in stages:
+        plen = len(pattern)
+        n = repeat * plen
+        end = start + n
+        if end <= cut:
+            bottom.append((repeat, pattern))
+        elif start >= cut:
+            top.append((repeat, pattern))
+        else:
+            g = (cut - start) // plen          # groups into bottom
+            if g > 0:
+                bottom.append((g, pattern))
+            if repeat - g > 0:
+                top.append((repeat - g, pattern))
+        start = end
+    return tuple(bottom), tuple(top)
+
+
+# ---------------------------------------------------------------------------
+class SplitModel:
+    def __init__(self, cfg: ArchConfig):
+        cfg.validate()
+        self.cfg = cfg
+        self.bottom_stages, self.top_stages = split_stages(
+            cfg.resolved_stages, cfg.resolved_cut)
+
+    # -- init ---------------------------------------------------------------
+    def _init_stage(self, key, stage: Stage):
+        repeat, pattern = stage
+        keys = jax.random.split(key, len(pattern))
+        return tuple(
+            init_stacked(keys[i], repeat,
+                         lambda k, spec=spec: blocks.init_layer(
+                             k, self.cfg, spec))
+            for i, spec in enumerate(pattern))
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        ks = iter(jax.random.split(key, 8 + len(cfg.resolved_stages) * 2))
+        params: dict = {}
+        if cfg.frontend != "audio_frames":
+            params["embed"] = normal_init(next(ks), (cfg.vocab_size,
+                                                     cfg.d_model), dt,
+                                          stddev=0.02)
+        params["bottom"] = [self._init_stage(next(ks), s)
+                            for s in self.bottom_stages]
+        params["cut"] = {
+            "w": normal_init(next(ks), (cfg.d_model, cfg.d_model), dt),
+            "b": jnp.zeros((cfg.d_model,), dt),
+        }
+        params["f_a"] = {
+            "w1": normal_init(next(ks), (cfg.d_active, cfg.d_model), dt),
+            "b1": jnp.zeros((cfg.d_model,), dt),
+            "w2": normal_init(next(ks), (cfg.d_model, cfg.d_model), dt),
+            "b2": jnp.zeros((cfg.d_model,), dt),
+        }
+        params["top"] = [self._init_stage(next(ks), s)
+                         for s in self.top_stages]
+        params["final_norm"] = jnp.zeros((cfg.d_model,), dt)
+        if not cfg.tie_embeddings and cfg.frontend != "audio_frames":
+            params["head"] = normal_init(next(ks), (cfg.d_model,
+                                                    cfg.vocab_size), dt,
+                                         stddev=0.02)
+        elif cfg.frontend == "audio_frames":
+            params["head"] = normal_init(next(ks), (cfg.d_model,
+                                                    cfg.vocab_size), dt,
+                                         stddev=0.02)
+        return params
+
+    # -- caches ---------------------------------------------------------------
+    def _init_stage_cache(self, stage: Stage, batch: int, capacity: int):
+        repeat, pattern = stage
+        out = []
+        for spec in pattern:
+            single = blocks.init_layer_cache(self.cfg, spec, batch, capacity)
+            out.append(jax.tree.map(
+                lambda a: jnp.zeros((repeat,) + a.shape, a.dtype), single))
+        return tuple(out)
+
+    def init_cache(self, batch: int, capacity: int) -> dict:
+        return {
+            "t": jnp.zeros((), jnp.int32),
+            "bottom": [self._init_stage_cache(s, batch, capacity)
+                       for s in self.bottom_stages],
+            "top": [self._init_stage_cache(s, batch, capacity)
+                    for s in self.top_stages],
+        }
+
+    # -- stage application ----------------------------------------------------
+    def _apply_stage(self, stage_params, stage: Stage, x, positions, cache,
+                     aux):
+        repeat, pattern = stage
+
+        def body(carry, xs):
+            x, aux = carry
+            layer_params, layer_cache = xs
+            new_caches = []
+            for i, spec in enumerate(pattern):
+                c = None if layer_cache is None else layer_cache[i]
+                x, c2, a = blocks.apply_layer(layer_params[i], self.cfg,
+                                              spec, x, positions, c)
+                aux = aux + a
+                new_caches.append(c2)
+            ys = None if layer_cache is None else tuple(new_caches)
+            return (x, aux), ys
+
+        if self.cfg.remat:
+            if self.cfg.remat_policy == "dots":
+                body = jax.checkpoint(
+                    body,
+                    policy=jax.checkpoint_policies
+                    .dots_with_no_batch_dims_saveable)
+            else:
+                body = jax.checkpoint(body)
+        (x, aux), new_cache = jax.lax.scan(
+            body, (x, aux), (stage_params, cache))
+        return x, new_cache, aux
+
+    def _run_stack(self, stage_params_list, stages, x, positions, caches,
+                   aux):
+        new_caches = []
+        for i, stage in enumerate(stages):
+            c = None if caches is None else caches[i]
+            x, c2, aux = self._apply_stage(stage_params_list[i], stage, x,
+                                           positions, c, aux)
+            new_caches.append(c2)
+        return x, (None if caches is None else new_caches), aux
+
+    # -- positions -------------------------------------------------------------
+    def _positions(self, batch: int, seq: int, t0):
+        cfg = self.cfg
+        pos = t0 + jnp.arange(seq)[None, :].astype(jnp.int32)
+        pos = jnp.broadcast_to(pos, (batch, seq))
+        if cfg.mrope:
+            return jnp.stack([pos, pos, pos])        # text-style default
+        return pos
+
+    def _vlm_positions(self, batch: int, n_vis: int, n_text: int):
+        """M-RoPE stub grid: vision patches at t=0 with (h, w) raster;
+        text continues temporally after the grid (Qwen2-VL §3.2)."""
+        g = max(1, int(math.ceil(math.sqrt(n_vis))))
+        idx = jnp.arange(n_vis, dtype=jnp.int32)
+        vt = jnp.zeros((n_vis,), jnp.int32)
+        vh, vw = idx // g, idx % g
+        t0 = g  # text starts after the max grid extent
+        tt = t0 + jnp.arange(n_text, dtype=jnp.int32)
+        p_t = jnp.concatenate([vt, tt])
+        p_h = jnp.concatenate([vh, tt])
+        p_w = jnp.concatenate([vw, tt])
+        pos = jnp.stack([p_t, p_h, p_w])[:, None, :]
+        return jnp.broadcast_to(pos, (3, batch, n_vis + n_text))
+
+    # -- embedding of the passive party's raw inputs ---------------------------
+    def _embed_passive(self, params, batch: dict, t0):
+        cfg = self.cfg
+        if cfg.frontend == "audio_frames":
+            x = batch["tokens_p"].astype(jnp.dtype(cfg.dtype))
+            B, S = x.shape[:2]
+            return x, self._positions(B, S, t0)
+        toks = batch["tokens_p"]
+        emb = params["embed"]
+        x_tok = emb[toks].astype(jnp.dtype(cfg.dtype))
+        if cfg.frontend == "vision_patches" and "patches_p" in batch:
+            pat = batch["patches_p"].astype(x_tok.dtype)
+            x = jnp.concatenate([pat, x_tok], axis=1)
+            B = x.shape[0]
+            pos = self._vlm_positions(B, pat.shape[1], toks.shape[1])
+            return x, pos
+        B, S = x_tok.shape[:2]
+        return x_tok, self._positions(B, S, t0)
+
+    # -- full forward -----------------------------------------------------------
+    def forward(self, params, batch: dict, *, cache=None, dp_sigma: float = 0.0,
+                dp_clip: float = 1e9, rng=None, use_pallas_cut: bool = False,
+                return_hidden: bool = False):
+        """Returns (logits | hidden, new_cache, aux)."""
+        cfg = self.cfg
+        t0 = cache["t"] if cache is not None else jnp.zeros((), jnp.int32)
+        x, positions = self._embed_passive(params, batch, t0)
+        B, S, _ = x.shape
+        aux = jnp.zeros((), jnp.float32)
+
+        bcache = None if cache is None else cache["bottom"]
+        x, bcache, aux = self._run_stack(params["bottom"],
+                                         self.bottom_stages, x, positions,
+                                         bcache, aux)
+
+        # ---- cut layer: the trust boundary (passive -> active) ----
+        z = cut_layer_op(
+            x.reshape(B * S, cfg.d_model), params["cut"]["w"],
+            params["cut"]["b"], clip=dp_clip, sigma=dp_sigma, key=rng,
+            use_pallas=use_pallas_cut).reshape(B, S, cfg.d_model)
+
+        # ---- active party: f_a on its private features + top stack ----
+        xa = batch["x_a"].astype(z.dtype)
+        fa = jnp.tanh(dense(xa, params["f_a"]["w1"], params["f_a"]["b1"]))
+        fa = dense(fa, params["f_a"]["w2"], params["f_a"]["b2"])
+        h = z + fa
+
+        tcache = None if cache is None else cache["top"]
+        h, tcache, aux = self._run_stack(params["top"], self.top_stages, h,
+                                         positions, tcache, aux)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        if return_hidden:
+            new_cache = None
+            if cache is not None:
+                new_cache = {"t": t0 + S, "bottom": bcache, "top": tcache}
+            return h, new_cache, aux
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", h,
+                                params["embed"].astype(h.dtype))
+        else:
+            logits = dense(h, params["head"])
+        new_cache = None
+        if cache is not None:
+            new_cache = {"t": t0 + S, "bottom": bcache, "top": tcache}
+        return logits, new_cache, aux
+
+    # -- losses -----------------------------------------------------------------
+    def loss(self, params, batch: dict, *, dp_sigma: float = 0.0,
+             dp_clip: float = 1e9, rng=None):
+        cfg = self.cfg
+        if cfg.ce_chunk > 0:
+            h, _, aux = self.forward(params, batch, dp_sigma=dp_sigma,
+                                     dp_clip=dp_clip, rng=rng,
+                                     return_hidden=True)
+            w_head = (params["embed"].T if cfg.tie_embeddings
+                      else params["head"])
+            labels = batch["labels"]
+            if cfg.causal:
+                h, labels = h[:, :-1], labels[:, 1:]
+            if cfg.frontend == "vision_patches":
+                h = h[:, -labels.shape[1]:] \
+                    if h.shape[1] > labels.shape[1] else h
+                labels = labels[:, -h.shape[1]:]
+            return chunked_cross_entropy(h, w_head, labels,
+                                         chunk=cfg.ce_chunk) + aux
+        logits, _, aux = self.forward(params, batch, dp_sigma=dp_sigma,
+                                      dp_clip=dp_clip, rng=rng)
+        labels = batch["labels"]
+        if self.cfg.causal:
+            # next-token prediction; labels are the same stream
+            lo, la = logits[:, :-1], labels[:, 1:]
+        else:
+            lo, la = logits, labels
+        if self.cfg.frontend == "vision_patches":
+            # only the text suffix carries labels
+            lo = lo[:, -la.shape[1]:] if lo.shape[1] > la.shape[1] else lo
+            la = la[:, -lo.shape[1]:]
+        return cross_entropy(lo, la) + aux
+
+    def decode_step(self, params, batch: dict, cache):
+        """One-token serve step: batch has tokens_p (B,1) [+ x_a (B,1,d_a)]."""
+        logits, cache, _ = self.forward(params, batch, cache=cache)
+        return logits[:, -1], cache

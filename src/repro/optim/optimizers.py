@@ -1,0 +1,96 @@
+"""Minimal optax-free optimizers: SGD / momentum / Adam / AdamW.
+
+API mirrors optax: opt = adamw(lr); state = opt.init(params);
+updates, state = opt.update(grads, state, params); params = apply_updates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params,
+                        updates)
+
+
+def _resolve_lr(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+def sgd(lr, momentum: Optional[float] = None):
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum is not None:
+            state["mu"] = jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return state
+
+    def update(grads, state, params=None):
+        del params
+        step = state["step"] + 1
+        lr_t = _resolve_lr(lr, step)
+        if momentum is None:
+            ups = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32),
+                               grads)
+            return ups, {"step": step}
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        ups = jax.tree.map(lambda m: -lr_t * m, mu)
+        return ups, {"step": step, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0):
+    """Adam (weight_decay>0 makes it AdamW; decoupled decay)."""
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(z, params),
+                "nu": jax.tree.map(z, params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _resolve_lr(lr, step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) *
+                          g.astype(jnp.float32), state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                          jnp.square(g.astype(jnp.float32)),
+                          state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        ups = jax.tree.map(upd, mu, nu,
+                           params if params is not None else mu)
+        return ups, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01):
+    return adam(lr, b1, b2, eps, weight_decay)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run on the single real CPU device; only the dry-run forces 512
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,208 @@
+"""Unit tests for the paper's core: channels, semi-async schedule, cost
+model, planner, and DES invariants."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.channels import (Channel, Message, PubSubBroker,
+                                 channel_init, channel_poll,
+                                 channel_publish)
+from repro.core.cost_model import (TABLE8, CostConstants, CostModel,
+                                   PartyProfile, SystemProfile)
+from repro.core.des import METHODS, RunConfig, simulate
+from repro.core.planner import plan, plan_multiparty
+from repro.core.profiler import fit_power_law
+from repro.core.semi_async import aggregate, delta_t, sync_epochs
+
+
+def profile(ca=32, cp=32, **kw):
+    return SystemProfile(active=PartyProfile(cores=ca),
+                         passive=PartyProfile(cores=cp), **kw)
+
+
+# ---------------------------------------------------------------------------
+# channels
+# ---------------------------------------------------------------------------
+def test_channel_fifo_eviction():
+    ch = Channel(capacity=3)
+    for i in range(5):
+        ch.publish(Message(i, f"m{i}", float(i)))
+    assert ch.n_evicted == 2
+    assert [m.batch_id for m in ch.buf] == [2, 3, 4]   # oldest evicted
+    assert ch.poll().batch_id == 2
+
+
+def test_broker_deadline():
+    br = PubSubBroker(p=2, q=2, t_ddl=5.0)
+    assert br.deadline_expired(0.0, 6.0) is True
+    assert br.deadline_expired(0.0, 4.0) is False
+    assert br.stats()["deadline_drops"] == 1
+
+
+def test_broker_topics_independent():
+    br = PubSubBroker(p=1, q=1)
+    br.publish("emb", 0, "a", 0.0)
+    br.publish("emb", 1, "b", 0.0)
+    assert br.poll("emb", 1).payload == "b"
+    assert br.poll("emb", 0).payload == "a"
+    assert br.poll("grad", 0) is None
+
+
+def test_jit_channel_ring_buffer():
+    import jax.numpy as jnp
+    st = channel_init(3, (2,))
+    for i in range(5):
+        st = channel_publish(st, jnp.full((2,), float(i)), i, float(i))
+    assert int(st["size"]) == 3
+    st, item, bid, valid = channel_poll(st)
+    assert bool(valid) and int(bid) == 2          # oldest surviving
+    assert float(item[0]) == 2.0
+    st, _, bid, _ = channel_poll(st)
+    assert int(bid) == 3
+
+
+# ---------------------------------------------------------------------------
+# semi-async schedule (Eq. 5)
+# ---------------------------------------------------------------------------
+def test_delta_t_eq5_values():
+    dt0 = 5
+    vals = [delta_t(t, dt0) for t in range(0, 20)]
+    # starts small, ramps to dt0, never exceeds, never below 1
+    assert vals[0] >= 1
+    assert all(1 <= v <= dt0 for v in vals)
+    assert vals[-1] == dt0
+    assert vals == sorted(vals)                    # monotone ramp
+    # literal Eq. 5 at a few points
+    for t in (0, 3, 10):
+        expected = math.ceil(dt0 / 2 * math.tanh(2 * t / dt0 - 2) + dt0 / 2)
+        assert delta_t(t, dt0) == max(expected, 1)
+
+
+def test_sync_epochs_cover_run():
+    marks = sync_epochs(50, 5)
+    assert marks[0] >= 1 and marks[-1] <= 50
+    assert all(b > a for a, b in zip(marks, marks[1:]))
+
+
+def test_aggregate_mean():
+    import jax.numpy as jnp
+    reps = [{"w": jnp.full((2,), float(i))} for i in range(4)]
+    agg = aggregate(reps)
+    np.testing.assert_allclose(np.asarray(agg["w"]), [1.5, 1.5])
+
+
+# ---------------------------------------------------------------------------
+# cost model + planner
+# ---------------------------------------------------------------------------
+def test_cost_model_balance_at_defaults():
+    cm = CostModel(profile())
+    ta = cm.t_f_a(256, 8) + cm.t_b_a(256, 8) + cm.t_top_a(256, 8)
+    tp = cm.t_f_p(256, 8) + cm.t_b_p(256, 8)
+    assert 0.8 < ta / tp < 1.6        # near-balanced by design (§DESIGN)
+
+
+def test_table8_constants_verbatim():
+    assert TABLE8.lambda_a == 0.018 and TABLE8.gamma_a == -0.8015
+    assert TABLE8.beta_p == -1.0546 and TABLE8.scaling_exp == 1.0
+
+
+def test_b_max_memory_bound():
+    prof = profile()
+    cm = CostModel(prof)
+    bmax = cm.b_max()
+    assert cm.mem_a(bmax) <= prof.active.mem_per_worker_mb + 1e-6
+    # Eq. 13: raising worker memory raises B_max
+    prof2 = SystemProfile(
+        active=PartyProfile(cores=32, mem_per_worker_mb=8192),
+        passive=PartyProfile(cores=32, mem_per_worker_mb=8192))
+    assert CostModel(prof2).b_max() > bmax
+
+
+def test_planner_optimal_vs_bruteforce():
+    prof = profile(16, 8)
+    p = plan(prof, w_a_range=(2, 6), w_p_range=(2, 6),
+             batch_sizes=(16, 64, 256))
+    cm = CostModel(prof)
+    best = min(cm.objective(wa, wp, B)
+               for wa in range(2, 7) for wp in range(2, 7)
+               for B in (16, 64, 256) if B <= cm.b_max())
+    assert abs(p.cost - best) < 1e-12
+
+
+def test_planner_respects_memory():
+    prof = SystemProfile(
+        active=PartyProfile(cores=32, mem_per_worker_mb=300),
+        passive=PartyProfile(cores=32, mem_per_worker_mb=300))
+    p = plan(prof, batch_sizes=(16, 32, 64, 1024))
+    assert p.batch_size <= p.b_max
+
+
+def test_plan_multiparty_targets_weakest():
+    strong = profile(32, 32)
+    weak = profile(32, 4)
+    p = plan_multiparty([strong, weak], w_a_range=(2, 8),
+                        w_p_range=(2, 8))
+    p_weak = plan(weak, w_a_range=(2, 8), w_p_range=(2, 8))
+    assert (p.w_a, p.w_p, p.batch_size) == \
+        (p_weak.w_a, p_weak.w_p, p_weak.batch_size)
+
+
+def test_fit_power_law_recovers():
+    B = np.array([16, 32, 64, 128, 256])
+    lam, gam = 0.02, -0.7
+    t = lam * B ** (1 + gam)
+    lam2, gam2 = fit_power_law(B, t)
+    assert abs(lam2 - lam) < 1e-6 and abs(gam2 - gam) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# DES invariants
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", METHODS)
+def test_des_event_conservation(method):
+    cfg = RunConfig(method=method, n_samples=4096, batch_size=256,
+                    n_epochs=2, w_a=4, w_p=4, profile=profile())
+    r = simulate(cfg)
+    kinds = {}
+    bids_astep = []
+    for t, kind, pl in r.events:
+        kinds[kind] = kinds.get(kind, 0) + 1
+        if kind == "a_step":
+            bids_astep.append(pl["bid"])
+    # every batch is a-stepped at most once
+    assert len(bids_astep) == len(set(bids_astep))
+    # forwards >= a_steps >= backwards-ish; nothing from thin air
+    assert kinds.get("a_step", 0) <= kinds.get("p_fwd", 0)
+    assert kinds.get("p_bwd", 0) <= kinds.get("a_step", 0)
+    assert r.total_time > 0
+    assert 0 < r.cpu_util <= 1.0
+
+
+def test_des_pubsub_processes_all_batches():
+    cfg = RunConfig(method="pubsub", n_samples=4096, batch_size=256,
+                    n_epochs=3, w_a=4, w_p=4, profile=profile())
+    r = simulate(cfg)
+    n_asteps = sum(1 for _, k, _ in r.events if k == "a_step")
+    assert n_asteps == cfg.n_batches * 3          # no trimming, no loss
+
+
+def test_des_ordering_speedup():
+    """PubSub-VFL is at least ~1.5x faster than pure VFL and has the top
+    utilization among methods (paper Fig. 3 ordering)."""
+    res = {}
+    for m in METHODS:
+        cfg = RunConfig(method=m, n_samples=16384, batch_size=256,
+                        n_epochs=2, w_a=8, w_p=8, profile=profile())
+        res[m] = simulate(cfg)
+    assert res["vfl"].total_time / res["pubsub"].total_time > 1.5
+    best_util = max(r.cpu_util for r in res.values())
+    assert res["pubsub"].cpu_util >= 0.95 * best_util
+
+
+def test_des_deterministic():
+    cfg = RunConfig(method="pubsub", n_samples=4096, batch_size=256,
+                    n_epochs=2, w_a=4, w_p=4, profile=profile(), seed=7)
+    r1, r2 = simulate(cfg), simulate(cfg)
+    assert r1.total_time == r2.total_time
+    assert [e[:2] for e in r1.events] == [e[:2] for e in r2.events]

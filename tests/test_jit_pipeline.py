@@ -1,0 +1,52 @@
+"""The jit-native bounded-staleness pipeline trains and converges."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.jit_pipeline import pipelined_train
+from repro.data.synthetic import load
+from repro.data.vertical import vertical_split
+from repro.models import tabular
+
+
+def _streams(n_steps=60, B=64, seed=0):
+    ds = load("credit", scale=0.05, seed=seed)
+    a, p = vertical_split(ds, seed=seed)
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, a.X.shape[0], size=(n_steps, B))
+    return (jnp.asarray(a.X[idx]), jnp.asarray(p.X[idx]),
+            jnp.asarray(a.y[idx].astype(np.float32)), a, p, ds.task)
+
+
+def test_pipeline_trains_inside_jit():
+    xa, xp, y, a, p, task = _streams()
+    key = jax.random.PRNGKey(0)
+    ka, kp, kt = jax.random.split(key, 3)
+    theta_a = {"bottom": tabular.init_bottom(ka, xa.shape[-1], depth=4),
+               "top": tabular.init_top(kt)}
+    theta_p = tabular.init_bottom(kp, xp.shape[-1], depth=4)
+    run = jax.jit(lambda ta, tp: pipelined_train(
+        ta, tp, xa, xp, y, lag=3, task=task))
+    ta2, tp2, losses = run(theta_a, theta_p)
+    losses = np.asarray(losses)
+    assert np.isnan(losses[:2]).all()            # warmup
+    valid = losses[3:]
+    assert np.isfinite(valid).all()
+    # training signal: loss decreases substantially over the run
+    assert valid[-10:].mean() < valid[:10].mean() * 0.9
+
+
+def test_pipeline_staleness_matches_sync_when_lag1():
+    """lag=1 consumes the just-published embedding = synchronous VFL."""
+    xa, xp, y, a, p, task = _streams(n_steps=20)
+    key = jax.random.PRNGKey(1)
+    ka, kp, kt = jax.random.split(key, 3)
+    theta_a = {"bottom": tabular.init_bottom(ka, xa.shape[-1], depth=3),
+               "top": tabular.init_top(kt)}
+    theta_p = tabular.init_bottom(kp, xp.shape[-1], depth=3)
+    _, _, l1 = pipelined_train(theta_a, theta_p, xa, xp, y, lag=1,
+                               task=task)
+    # manual sync reference for the first step
+    z = tabular.passive_forward(theta_p, xp[0])
+    loss0, _, _ = tabular.active_step(theta_a, xa[0], z, y[0], task=task)
+    np.testing.assert_allclose(float(l1[0]), float(loss0), rtol=1e-5)

@@ -1,0 +1,152 @@
+"""Per-kernel allclose validation: Pallas (interpret=True) vs pure-jnp
+oracle, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_pallas
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+from repro.kernels.rglru_scan.kernel import rglru_scan_pallas
+from repro.kernels.rglru_scan.ref import (rglru_scan_assoc_ref,
+                                          rglru_scan_ref)
+from repro.kernels.cut_layer.kernel import cut_layer_pallas
+from repro.kernels.cut_layer.ref import cut_layer_ref
+from repro.models.attention import blockwise_sdpa, sdpa
+
+
+def keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,Hq,Hk,D", [
+    (1, 32, 2, 2, 8),       # MHA
+    (2, 64, 4, 2, 16),      # GQA
+    (1, 128, 8, 1, 32),     # MQA
+])
+@pytest.mark.parametrize("causal,window", [
+    (True, None), (True, 16), (False, None)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, Hq, Hk, D, causal, window, dtype):
+    kq, kk, kv = keys(3)
+    q = jax.random.normal(kq, (B, S, Hq, D), dtype)
+    k = jax.random.normal(kk, (B, S, Hk, D), dtype)
+    v = jax.random.normal(kv, (B, S, Hk, D), dtype)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=16, block_k=16, interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_matches_model_sdpa():
+    kq, kk, kv = keys(3, 7)
+    q = jax.random.normal(kq, (2, 64, 4, 16))
+    k = jax.random.normal(kk, (2, 64, 2, 16))
+    v = jax.random.normal(kv, (2, 64, 2, 16))
+    a = sdpa(q, k, v, causal=True, window=None, q_offset=0)
+    b = flash_attention_pallas(q, k, v, causal=True, block_q=16,
+                               block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_blockwise_sdpa_matches_dense():
+    kq, kk, kv = keys(3, 3)
+    q = jax.random.normal(kq, (1, 2048, 2, 8))
+    k = jax.random.normal(kk, (1, 2048, 1, 8))
+    v = jax.random.normal(kv, (1, 2048, 1, 8))
+    for causal, window in [(True, None), (True, 512), (False, None)]:
+        a = sdpa(q, k, v, causal=causal, window=window, q_offset=0)
+        b = blockwise_sdpa(q, k, v, causal=causal, window=window,
+                           q_offset=0, q_chunk=256, kv_chunk=256)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,D", [(1, 8, 1, 4), (2, 32, 3, 8),
+                                     (1, 64, 2, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan(B, S, H, D, dtype):
+    ks = keys(6, 1)
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, D), dtype)
+               for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, D))).astype(dtype)
+    u = jax.random.normal(ks[4], (H, D), dtype)
+    s0 = jax.random.normal(ks[5], (B, H, D, D), jnp.float32)
+    y1, f1 = rwkv6_scan_ref(r, k, v, w, u, s0)
+    y2, f2 = rwkv6_scan_pallas(r, k, v, w, u, s0, block_t=8,
+                               interpret=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=1e-3)
+
+
+def test_rwkv6_chunked_equals_unchunked():
+    ks = keys(6, 2)
+    B, S, H, D = 1, 32, 2, 8
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, D)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, D)))
+    u = jax.random.normal(ks[4], (H, D))
+    s0 = jnp.zeros((B, H, D, D))
+    y_a, f_a = rwkv6_scan_pallas(r, k, v, w, u, s0, block_t=32,
+                                 interpret=True)
+    y_b, f_b = rwkv6_scan_pallas(r, k, v, w, u, s0, block_t=8,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(y_a), np.asarray(y_b), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f_a), np.asarray(f_b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,W", [(1, 16, 8), (2, 64, 32), (3, 128, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan(B, S, W, dtype):
+    ks = keys(3, 4)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W))).astype(dtype)
+    u = jax.random.normal(ks[1], (B, S, W), dtype)
+    h0 = jax.random.normal(ks[2], (B, W), jnp.float32)
+    h1, l1 = rglru_scan_ref(a, u, h0)
+    h2, l2 = rglru_scan_assoc_ref(a, u, h0)
+    h3, l3 = rglru_scan_pallas(a, u, h0, block_t=8, block_w=8,
+                               interpret=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(h1, np.float32),
+                               np.asarray(h2, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(h1, np.float32),
+                               np.asarray(h3, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l3), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("M,K,N", [(16, 32, 8), (64, 96, 48),
+                                   (128, 64, 128)])
+@pytest.mark.parametrize("sigma", [0.0, 0.5])
+def test_cut_layer(M, K, N, sigma):
+    ks = keys(4, 5)
+    x = jax.random.normal(ks[0], (M, K))
+    w = jax.random.normal(ks[1], (K, N)) * 0.1
+    b = jax.random.normal(ks[2], (N,)) * 0.1
+    nz = jax.random.normal(ks[3], (M, N))
+    ref = cut_layer_ref(x, w, b, nz, clip=1.0, sigma=sigma)
+    out = cut_layer_pallas(x, w, b, nz, clip=1.0, sigma=sigma,
+                           block_m=16, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_cut_layer_clip_bounds_norm():
+    """Post-clip pre-noise rows have L2 norm <= clip (DP sensitivity)."""
+    ks = keys(3, 6)
+    x = jax.random.normal(ks[0], (32, 16)) * 5
+    w = jax.random.normal(ks[1], (16, 8))
+    b = jnp.zeros((8,))
+    z = cut_layer_ref(x, w, b, jnp.zeros((32, 8)), clip=0.7, sigma=0.0)
+    norms = np.linalg.norm(np.asarray(z), axis=-1)
+    assert (norms <= 0.7 + 1e-5).all()

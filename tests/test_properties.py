@@ -1,0 +1,106 @@
+"""Hypothesis property-based tests on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channels import Channel, Message
+from repro.core.cost_model import CostModel, PartyProfile, SystemProfile
+from repro.core.profiler import fit_power_law
+from repro.core.semi_async import delta_t
+from repro.kernels.rglru_scan.ref import (rglru_scan_assoc_ref,
+                                          rglru_scan_ref)
+from repro.models.common import cross_entropy
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@settings(**SET)
+@given(cap=st.integers(1, 8), n=st.integers(0, 30))
+def test_channel_capacity_invariant(cap, n):
+    """Buffer never exceeds capacity; surviving entries are the newest."""
+    ch = Channel(capacity=cap)
+    for i in range(n):
+        ch.publish(Message(i, i, float(i)))
+    assert len(ch) == min(cap, n)
+    ids = [m.batch_id for m in ch.buf]
+    assert ids == list(range(max(0, n - cap), n))
+    assert ch.n_evicted == max(0, n - cap)
+
+
+@settings(**SET)
+@given(dt0=st.integers(1, 40), t=st.integers(0, 200))
+def test_delta_t_bounds(dt0, t):
+    v = delta_t(t, dt0)
+    assert 1 <= v <= dt0
+    assert delta_t(t + 1, dt0) >= v                # monotone
+
+
+@settings(**SET)
+@given(B=st.integers(1, 3), S=st.integers(1, 24), W=st.integers(1, 12),
+       seed=st.integers(0, 2**16))
+def test_rglru_assoc_equals_sequential(B, S, W, seed):
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.nn.sigmoid(jax.random.normal(k[0], (B, S, W)))
+    u = jax.random.normal(k[1], (B, S, W))
+    h0 = jax.random.normal(k[2], (B, W))
+    h1, l1 = rglru_scan_ref(a, u, h0)
+    h2, l2 = rglru_scan_assoc_ref(a, u, h0)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-4)
+
+
+@settings(**SET)
+@given(lam=st.floats(1e-4, 1.0), gam=st.floats(-1.4, 0.2))
+def test_fit_power_law_inverts(lam, gam):
+    B = np.array([8, 16, 32, 64, 128, 256, 512])
+    t = lam * B ** (1 + gam)
+    lam2, gam2 = fit_power_law(B, t)
+    assert math.isclose(lam2, lam, rel_tol=1e-4)
+    assert math.isclose(gam2, gam, rel_tol=1e-3, abs_tol=1e-4)
+
+
+@settings(**SET)
+@given(ca=st.integers(2, 64), cp=st.integers(2, 64),
+       wa=st.integers(1, 16), wp=st.integers(1, 16),
+       B=st.sampled_from([16, 64, 256, 1024]))
+def test_cost_model_positive_and_monotone_in_cores(ca, cp, wa, wp, B):
+    cm1 = CostModel(SystemProfile(active=PartyProfile(cores=ca),
+                                  passive=PartyProfile(cores=cp)))
+    cm2 = CostModel(SystemProfile(active=PartyProfile(cores=2 * ca),
+                                  passive=PartyProfile(cores=2 * cp)))
+    o1 = cm1.objective(wa, wp, B)
+    o2 = cm2.objective(wa, wp, B)
+    assert o1 > 0
+    assert o2 < o1                                 # more cores never hurts
+
+
+@settings(**SET)
+@given(B=st.integers(1, 4), S=st.integers(2, 10), V=st.integers(2, 30),
+       seed=st.integers(0, 2**16))
+def test_cross_entropy_matches_manual(B, S, V, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    logits = jax.random.normal(k1, (B, S, V))
+    labels = jax.random.randint(k2, (B, S), 0, V)
+    ce = float(cross_entropy(logits, labels))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    manual = -float(jnp.take_along_axis(
+        logp, labels[..., None], axis=-1).mean())
+    assert math.isclose(ce, manual, rel_tol=1e-5, abs_tol=1e-5)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**16), sigma=st.floats(0.0, 2.0))
+def test_cut_layer_dp_noise_distribution(seed, sigma):
+    """Noise added by the cut layer has the configured scale."""
+    from repro.kernels.cut_layer.ref import cut_layer_ref
+    k = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jnp.zeros((64, 8))
+    w = jnp.zeros((8, 16))
+    b = jnp.zeros((16,))
+    nz = jax.random.normal(k[0], (64, 16))
+    out = cut_layer_ref(x, w, b, nz, clip=1.0, sigma=sigma)
+    np.testing.assert_allclose(np.asarray(out), sigma * np.asarray(nz),
+                               atol=1e-6)

@@ -1,0 +1,61 @@
+"""Unit tests for the partition-rule logic (no multi-device mesh needed:
+rules are pure functions of names/shapes + a 1-device mesh)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import _fit_divisibility, _spec_for
+
+
+def test_spec_rules():
+    assert _spec_for("wq", 2, stacked=False) == (None, "model")
+    assert _spec_for("wo", 2, stacked=False) == ("model", None)
+    assert _spec_for("wq", 3, stacked=True) == (None, None, "model")
+    assert _spec_for("embed", 2, stacked=False) == ("model", None)
+    # MoE expert weights: expert-parallel on the expert dim
+    assert _spec_for("wg", 3, stacked=False) == ("model", None, None)
+    assert _spec_for("wg", 4, stacked=True) == (None, "model", None, None)
+    # norms and other vectors replicate
+    assert _spec_for("n1", 1, stacked=False) == (None,)
+    assert _spec_for("bq", 1, stacked=False) == ("model",)
+
+
+def test_divisibility_guard():
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        shape = {"model": 16}
+    # 504-way head (hubert) must stay replicated on a 16-way axis
+    spec = _fit_divisibility((None, "model"), (1280, 504), FakeMesh())
+    assert spec == P(None, None)
+    spec = _fit_divisibility((None, "model"), (1280, 512), FakeMesh())
+    assert spec == P(None, "model")
+
+
+def test_all_arch_params_get_valid_specs():
+    """Every assigned arch's param tree maps to divisible specs on a
+    16-way model axis (the single-pod production mesh)."""
+    import jax.numpy as jnp
+    from repro.configs import ASSIGNED, get_config
+    from repro.launch.sharding import params_sharding
+    from repro.models.transformer import SplitModel
+
+    class FakeMesh:
+        shape = {"model": 16, "data": 16}
+
+    # NamedSharding construction needs a real mesh; test the spec layer by
+    # monkeypatching NamedSharding to capture specs
+    import repro.launch.sharding as sh
+    captured = []
+    orig = sh.NamedSharding
+    sh.NamedSharding = lambda mesh, spec: captured.append(spec) or spec
+    try:
+        for arch in ASSIGNED:
+            cfg = get_config(arch)
+            model = SplitModel(cfg)
+            shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            params_sharding(shapes, FakeMesh())
+    finally:
+        sh.NamedSharding = orig
+    assert len(captured) > 100          # all leaves visited

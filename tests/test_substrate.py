@@ -1,0 +1,129 @@
+"""Data pipeline, optimizers, DP accountant, checkpointing."""
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import load_step, restore, save
+from repro.data.synthetic import DATASETS, load
+from repro.data.vertical import (batch_ids, psi_align, vertical_split)
+from repro.dp.gdp import (GDPConfig, compose_mu, mu_to_epsilon_delta,
+                          noise_sigma)
+from repro.optim.optimizers import (adam, apply_updates,
+                                    clip_by_global_norm, sgd)
+from repro.optim.schedules import constant, linear_warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+def test_datasets_match_paper_cardinality():
+    specs = {"energy": (19735, 27, "regression"),
+             "blog": (60021, 280, "regression"),
+             "bank": (40787, 48, "classification"),
+             "credit": (30000, 23, "classification")}
+    for name, (n, d, task) in specs.items():
+        ds = load(name, scale=1.0)
+        assert ds.n == n and ds.d == d and ds.task == task
+
+
+def test_vertical_split_disjoint_and_complete():
+    ds = load("credit", scale=0.02)
+    a, p = vertical_split(ds, n_features_active=5)
+    assert a.X.shape[1] == 5 and p.X.shape[1] == ds.d - 5
+    assert p.y is None and a.y is not None
+
+
+def test_psi_alignment():
+    ds = load("bank", scale=0.02)
+    a, p = vertical_split(ds)
+    # passive party misses some rows
+    p2 = type(p)(p.ids[10:], p.X[10:], None)
+    a2, p3 = psi_align(a, p2)
+    assert len(a2.ids) == len(p3.ids) == ds.n - 10
+    assert (a2.ids == p3.ids).all()               # same order, same samples
+
+
+def test_batch_ids_shared_and_epoch_varying():
+    b0 = batch_ids(1000, 128, seed=3, epoch=0)
+    b0b = batch_ids(1000, 128, seed=3, epoch=0)
+    b1 = batch_ids(1000, 128, seed=3, epoch=1)
+    assert (b0 == b0b).all()
+    assert not (b0 == b1).all()
+    assert b0.shape == (7, 128)
+
+
+# ---------------------------------------------------------------------------
+def test_adam_quadratic_convergence():
+    opt = adam(0.1)
+    params = {"x": jnp.asarray(5.0)}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"x": 2 * params["x"]}
+        ups, state = opt.update(grads, state, params)
+        params = apply_updates(params, ups)
+    assert abs(float(params["x"])) < 1e-2
+
+
+def test_sgd_momentum():
+    opt = sgd(0.1, momentum=0.9)
+    params = {"x": jnp.asarray(1.0)}
+    state = opt.init(params)
+    ups, state = opt.update({"x": jnp.asarray(1.0)}, state, params)
+    params = apply_updates(params, ups)
+    assert float(params["x"]) == pytest.approx(0.9)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(6.0)
+    assert np.linalg.norm(np.asarray(clipped["a"])) == pytest.approx(1.0)
+
+
+def test_schedules():
+    s = linear_warmup_cosine(1.0, warmup=10, total=100)
+    assert float(s(5)) == pytest.approx(0.5)
+    assert float(s(10)) <= 1.0
+    assert float(s(100)) == pytest.approx(0.1, abs=1e-6)
+    assert float(constant(0.3)(17)) == pytest.approx(0.3)
+
+
+# ---------------------------------------------------------------------------
+def test_gdp_sigma_eq17():
+    cfg = GDPConfig(mu=1.0, minibatch=32, global_batch=256, n_queries=100)
+    assert noise_sigma(cfg) == pytest.approx(32 * math.sqrt(100) / 256)
+    # stronger privacy (smaller mu) -> more noise
+    assert noise_sigma(GDPConfig(mu=0.5, minibatch=32, global_batch=256,
+                                 n_queries=100)) > noise_sigma(cfg)
+    assert noise_sigma(GDPConfig(mu=math.inf)) == 0.0
+
+
+def test_gdp_composition_and_conversion():
+    assert compose_mu([3.0, 4.0]) == pytest.approx(5.0)
+    e1 = mu_to_epsilon_delta(0.5)
+    e2 = mu_to_epsilon_delta(2.0)
+    assert e1 < e2                                 # monotone in mu
+
+
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": [{"b": jnp.ones((4,), jnp.int32)}]}
+    path = os.path.join(tmp_path, "ck.msgpack")
+    save(path, tree, step=42)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    back = restore(path, like)
+    np.testing.assert_array_equal(np.asarray(back["a"]),
+                                  np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(back["nested"][0]["b"]),
+                                  np.asarray(tree["nested"][0]["b"]))
+    assert load_step(path) == 42
+
+
+def test_checkpoint_structure_mismatch(tmp_path):
+    path = os.path.join(tmp_path, "ck.msgpack")
+    save(path, {"a": jnp.zeros((2,))})
+    with pytest.raises(AssertionError):
+        restore(path, {"b": jnp.zeros((2,))})
