@@ -8,6 +8,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.cut_layer.kernel import cut_layer_pallas
 from repro.kernels.cut_layer.ref import cut_layer_ref
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.rglru_scan.ref import rglru_scan_assoc_ref
@@ -75,6 +76,13 @@ def run() -> None:
     t = _bench(cl, x, wm, b, nz)
     emit("kernel/cut_layer_ref", t * 1e6,
          f"gflops={2 * M * K * N / t / 1e9:.2f}")
+
+    # the fused Pallas kernel (interpret mode off-TPU): the number is a
+    # correctness/lowering smoke-bench on CPU — HW numbers need a TPU,
+    # where interpret auto-disables — reported relative to the ref path
+    t_p = _bench(cut_layer_pallas, x, wm, b, nz, clip=1.0, sigma=0.1)
+    emit("kernel/cut_layer_pallas", t_p * 1e6,
+         f"gflops={2 * M * K * N / t_p / 1e9:.2f};vs_ref_x={t / t_p:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,80 @@
+"""Replay-engine throughput: compiled jitted-scan engine vs. the legacy
+per-event Python loop, on the synthetic `pubsub` configuration.
+
+Reports, per engine: steady-state wall-clock per epoch and replayed
+events/sec.  For the compiled engine the one-time cost (schedule
+compilation + jit trace + XLA compile, paid once per process & shape) is
+measured separately and reported as `replay/compiled_cold`; the
+steady-state number is the second replay, which hits the process-wide
+runner cache — the regime any multi-run experiment (sweeps, epochs at
+scale) actually sits in.  The event engine is likewise measured after
+its first replay has warmed the per-op jit caches.
+
+Scale knobs (env): REPRO_BENCH_SCALE (dataset fraction, default 0.05),
+REPRO_BENCH_EPOCHS (default 5).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.cost_model import PartyProfile, SystemProfile
+from repro.core.des import RunConfig, simulate
+from repro.core.trainer import VFLTrainer
+from repro.data.synthetic import load
+from repro.data.vertical import psi_align, vertical_split
+
+from benchmarks.common import EPOCHS, SCALE, SEED, emit
+
+
+def _build(method: str = "pubsub"):
+    ds = load("synthetic", seed=SEED, scale=max(SCALE * 0.1, 0.004))
+    tr, te = ds.split(seed=SEED)
+    a_tr, p_tr = vertical_split(tr, seed=SEED)
+    a_te, p_te = vertical_split(te, seed=SEED)
+    a_tr, p_tr = psi_align(a_tr, p_tr)
+    prof = SystemProfile(active=PartyProfile(cores=32),
+                         passive=PartyProfile(cores=32))
+    cfg = RunConfig(method=method, n_samples=a_tr.X.shape[0],
+                    batch_size=64, n_epochs=EPOCHS, w_a=4, w_p=4,
+                    profile=prof, seed=SEED)
+    sim = simulate(cfg)
+    mk = lambda: VFLTrainer(cfg, a_tr, p_tr, a_te, p_te, ds.task,
+                            seed=SEED)
+    return cfg, sim, mk
+
+
+def _timed(mk, sim, engine):
+    trainer = mk()
+    t0 = time.perf_counter()
+    res = trainer.replay(sim, engine=engine, eval_every_epoch=False)
+    return time.perf_counter() - t0, res
+
+
+def run() -> None:
+    cfg, sim, mk = _build()
+    n_events = len(sim.events)
+
+    _timed(mk, sim, "event")                     # warm per-op jit caches
+    event_s, res_e = _timed(mk, sim, "event")
+    emit("replay/event", event_s / cfg.n_epochs * 1e6,
+         f"events_per_s={n_events / event_s:.1f};total_s={event_s:.2f};"
+         f"final={res_e.final_metric:.4f}")
+
+    cold_s, _ = _timed(mk, sim, "compiled")      # schedule+trace+XLA
+    comp_s, res_c = _timed(mk, sim, "compiled")  # steady state
+    emit("replay/compiled_cold", cold_s / cfg.n_epochs * 1e6,
+         f"one_time_compile_s={max(cold_s - comp_s, 0.0):.2f};"
+         f"total_s={cold_s:.2f}")
+    emit("replay/compiled", comp_s / cfg.n_epochs * 1e6,
+         f"events_per_s={n_events / comp_s:.1f};total_s={comp_s:.2f};"
+         f"final={res_c.final_metric:.4f}")
+
+    emit("replay/speedup", comp_s / cfg.n_epochs * 1e6,
+         f"compiled_vs_event_x={event_s / comp_s:.2f};"
+         f"cold_vs_event_x={event_s / cold_s:.2f}")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+    emit_header()
+    run()

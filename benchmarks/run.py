@@ -13,9 +13,9 @@ import traceback
 
 from benchmarks.common import emit_header
 
-SUITES = ("kernels", "accuracy", "efficiency", "heterogeneity", "privacy",
-          "workers", "batch_size", "ablation", "multiparty", "criteo",
-          "cut_placement", "roofline")
+SUITES = ("kernels", "replay_throughput", "accuracy", "efficiency",
+          "heterogeneity", "privacy", "workers", "batch_size", "ablation",
+          "multiparty", "criteo", "cut_placement", "roofline")
 
 
 def main() -> None:

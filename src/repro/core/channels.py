@@ -140,3 +140,30 @@ def channel_poll(state: dict):
     size = jnp.where(valid, state["size"] - 1, state["size"])
     new = dict(state, head=head, size=size)
     return new, item, jnp.where(valid, bid, -1), valid
+
+
+# ---------------------------------------------------------------------------
+# slot-addressed ring: the compiled-engine twin
+# ---------------------------------------------------------------------------
+# The schedule compiler (`core.schedule`) resolves FIFO order, eviction and
+# buffer occupancy ahead of time and hands out explicit slot indices, so
+# the device-resident ring degenerates to a dense array with masked
+# scatter/gather — no head/size bookkeeping survives into the scan.
+
+def slot_ring_init(n_slots: int, item_shape: Tuple[int, ...],
+                   dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.zeros((n_slots,) + tuple(item_shape), dtype)
+
+
+def slot_ring_write(ring: jnp.ndarray, slots: jnp.ndarray,
+                    items: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Scatter `items[i] -> ring[slots[i]]` for valid lanes; invalid lanes
+    are routed out of bounds and dropped."""
+    idx = jnp.where(valid, slots, ring.shape[0])
+    return ring.at[idx].set(items, mode="drop")
+
+
+def slot_ring_read(ring: jnp.ndarray, slots: jnp.ndarray) -> jnp.ndarray:
+    """Gather `ring[slots[i]]` per lane (invalid lanes read slot 0 and are
+    masked by the caller)."""
+    return ring[jnp.clip(slots, 0, ring.shape[0] - 1)]

@@ -43,6 +43,7 @@ class ExperimentConfig:
     disable_deadline: bool = False   # T_ddl = 0-like (w/o T_all)
     disable_semi_async: bool = False # sync every epoch (w/o ΔT)
     disable_planner: bool = False    # fixed equal workers (w/o DP algo)
+    engine: str = "compiled"         # replay engine: "compiled" | "event"
     t_ddl: float = 10.0
     dt0: int = 5
     p: int = 5
@@ -96,7 +97,7 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
                          seed=cfg.seed, resnet=cfg.resnet, gdp=gdp,
                          depth=cfg.depth,
                          disable_semi_async=cfg.disable_semi_async)
-    res = trainer.replay(sim)
+    res = trainer.replay(sim, engine=cfg.engine)
 
     return {
         "method": cfg.method,

@@ -1,0 +1,318 @@
+"""Schedule compiler: lowers a DES event log to a dense tick program.
+
+The DES (`core.des`) emits a *totally ordered* event log; the legacy
+trainer replays it one Python-dispatched jit call per event.  This module
+compiles the log, **once and entirely on the host**, into a small set of
+dense per-tick arrays that a single jitted ``lax.scan`` (the compiled
+engine in `core.jit_pipeline`) can execute with zero per-event Python.
+
+Key observation: all *control* state of the replay — which replica runs
+which batch, which published embedding an active step consumes, the
+passive-parameter version at publish vs. backward time (= staleness), the
+round/epoch aggregation points — depends only on the event log, never on
+parameter values.  So the compiler resolves it ahead of time:
+
+* Events are packed into **ticks**.  A tick holds at most one passive op
+  (forward *or* backward) per passive replica and at most one active step
+  per active replica; the engine vmaps each phase across replicas.  Ticks
+  preserve every per-replica event order and every producer→consumer
+  dependency (p_fwd before its a_step, a_step strictly before its p_bwd),
+  so the packed program is numerically identical to the serial replay.
+* In-flight embeddings/gradients are assigned **ring slots** (the
+  device-resident twin of `core.channels`): a free-list simulation bounds
+  the rings to the true peak buffer occupancy.
+* `vfl_ps` round aggregations become per-tick barrier flags executed
+  inside the scan; `avfl_ps`/`pubsub` Eq. 5 epoch aggregations become
+  segment-boundary flags executed between scans.
+* The log is cut into one **segment per epoch** (padded to a common
+  length so the engine compiles exactly once); the trainer evaluates
+  between segments, exactly where the event loop evaluated.
+* Staleness and the update count are emitted by the compiler itself.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.des import RunConfig
+from repro.core.semi_async import sync_epochs
+from repro.data.vertical import batch_ids
+
+
+# ---------------------------------------------------------------------------
+# slot allocator: free-list simulation with availability ticks
+# ---------------------------------------------------------------------------
+class _SlotPool:
+    """Assigns ring slots to in-flight payloads.
+
+    A slot released at `avail` may be re-used by any event at tick >=
+    `avail`; the engine's within-tick phase order (reads before writes for
+    gradients, writes before reads for embeddings) dictates the caller's
+    choice of `avail`."""
+
+    def __init__(self):
+        self.n = 0
+        self._free: List[Tuple[int, int]] = []   # (avail_tick, slot)
+
+    def alloc(self, tick: int) -> int:
+        for i, (avail, slot) in enumerate(self._free):
+            if avail <= tick:
+                self._free.pop(i)
+                return slot
+        self.n += 1
+        return self.n - 1
+
+    def release(self, slot: int, avail: int) -> None:
+        self._free.append((avail, slot))
+
+
+# ---------------------------------------------------------------------------
+# compiled schedule containers
+# ---------------------------------------------------------------------------
+@dataclass
+class Segment:
+    """One epoch's tick program (unpadded)."""
+    pf_bid: np.ndarray      # (T, n_rep_p) int32, -1 = no-op lane
+    pf_slot: np.ndarray     # (T, n_rep_p) int32 embedding-ring write slot
+    pb_bid: np.ndarray      # (T, n_rep_p) int32, -1 = no-op lane
+    pb_slot: np.ndarray     # (T, n_rep_p) int32 gradient-ring read slot
+    as_bid: np.ndarray      # (T, n_rep_a) int32, -1 = no-op lane
+    as_eslot: np.ndarray    # (T, n_rep_a) int32 embedding-ring read slot
+    as_gslot: np.ndarray    # (T, n_rep_a) int32 gradient-ring write slot
+    as_epoch: np.ndarray    # (T, n_rep_a) int32 loss bucket
+    agg_a: np.ndarray       # (T,) bool  in-scan active-party aggregation
+    agg_p: np.ndarray       # (T,) bool  in-scan passive-party aggregation
+    epoch_agg: bool         # aggregate both parties after this segment
+
+
+@dataclass
+class CompiledSchedule:
+    method: str
+    n_rep_a: int
+    n_rep_p: int
+    n_epochs: int
+    rows: np.ndarray               # (n_bids, B) int32 batch-row table
+    segments: List[Segment]
+    emb_slots: int                 # embedding ring size
+    grad_slots: int                # gradient ring size
+    staleness: List[int]           # precomputed (compile-time) staleness
+    n_updates: int                 # executed active steps
+    has_inscan_agg: bool           # any per-tick aggregation flag set
+    versions_p: List[int] = field(default_factory=list)  # final versions
+
+    @property
+    def batch_rows(self) -> int:
+        return int(self.rows.shape[1])
+
+    @property
+    def n_ticks(self) -> int:
+        return sum(int(s.pf_bid.shape[0]) for s in self.segments)
+
+    def padded(self) -> Dict[str, np.ndarray]:
+        """Stack segments into (n_segments, T_max, ...) arrays padded with
+        no-op ticks so one jit compilation covers every segment."""
+        t_max = max((s.pf_bid.shape[0] for s in self.segments), default=0)
+        t_max = max(t_max, 1)
+
+        def pad(a: np.ndarray, fill) -> np.ndarray:
+            out = np.full((t_max,) + a.shape[1:], fill, a.dtype)
+            out[:a.shape[0]] = a
+            return out
+
+        keys = ("pf_bid", "pf_slot", "pb_bid", "pb_slot", "as_bid",
+                "as_eslot", "as_gslot", "as_epoch", "agg_a", "agg_p")
+        fills = {"pf_bid": -1, "pb_bid": -1, "as_bid": -1,
+                 "agg_a": False, "agg_p": False}
+        return {k: np.stack([pad(getattr(s, k), fills.get(k, 0))
+                             for s in self.segments])
+                for k in keys}
+
+
+# ---------------------------------------------------------------------------
+# the compiler
+# ---------------------------------------------------------------------------
+def _rows_table(cfg: RunConfig, n_samples: int) -> np.ndarray:
+    rows = []
+    for ep in range(cfg.n_epochs):
+        ids = batch_ids(n_samples, cfg.batch_size, seed=cfg.seed, epoch=ep)
+        for b in range(cfg.n_batches):
+            rows.append(ids[b % len(ids)])
+    return np.asarray(rows, np.int32)
+
+
+class _TickBuilder:
+    def __init__(self, n_rep_a: int, n_rep_p: int):
+        self.n_rep_a, self.n_rep_p = n_rep_a, n_rep_p
+        self.ticks: List[dict] = []
+
+    def _ensure(self, t: int) -> dict:
+        while len(self.ticks) <= t:
+            self.ticks.append({"pf": {}, "pb": {}, "as": {},
+                               "agg_a": False, "agg_p": False})
+        return self.ticks[t]
+
+    def put(self, t: int, lane: str, rep: int, rec: tuple) -> None:
+        self._ensure(t)[lane][rep] = rec
+
+    def flag(self, t: int, which: str) -> None:
+        self._ensure(t)[which] = True
+
+    def slice(self, lo: int, hi: int) -> List[dict]:
+        hi = min(hi, len(self.ticks))
+        lo = min(lo, hi)
+        return self.ticks[lo:hi]
+
+
+def _materialize(ticks: List[dict], n_rep_a: int, n_rep_p: int,
+                 epoch_agg: bool) -> Segment:
+    T = len(ticks)
+    z = lambda n: np.zeros((T, n), np.int32)
+    neg = lambda n: np.full((T, n), -1, np.int32)
+    seg = Segment(pf_bid=neg(n_rep_p), pf_slot=z(n_rep_p),
+                  pb_bid=neg(n_rep_p), pb_slot=z(n_rep_p),
+                  as_bid=neg(n_rep_a), as_eslot=z(n_rep_a),
+                  as_gslot=z(n_rep_a), as_epoch=z(n_rep_a),
+                  agg_a=np.zeros(T, bool), agg_p=np.zeros(T, bool),
+                  epoch_agg=epoch_agg)
+    for t, tk in enumerate(ticks):
+        for rep, (bid, slot) in tk["pf"].items():
+            seg.pf_bid[t, rep], seg.pf_slot[t, rep] = bid, slot
+        for rep, (bid, slot) in tk["pb"].items():
+            seg.pb_bid[t, rep], seg.pb_slot[t, rep] = bid, slot
+        for rep, (bid, es, gs, ep) in tk["as"].items():
+            seg.as_bid[t, rep] = bid
+            seg.as_eslot[t, rep], seg.as_gslot[t, rep] = es, gs
+            seg.as_epoch[t, rep] = ep
+        seg.agg_a[t] = tk["agg_a"]
+        seg.agg_p[t] = tk["agg_p"]
+    return seg
+
+
+def compile_schedule(cfg: RunConfig, events: List[Tuple], *,
+                     n_rep_a: int, n_rep_p: int, n_samples: int,
+                     disable_semi_async: bool = False) -> CompiledSchedule:
+    """Lower an event log into a `CompiledSchedule`.
+
+    Mirrors `VFLTrainer._replay_event` exactly: buffer hits/misses,
+    replica routing (w % n_rep), version counters, vfl_ps round
+    aggregation, the Eq. 5 sync marks, epoch/loss bucketing and the
+    trailing-epoch flush all follow the same control flow, just resolved
+    at compile time instead of replay time."""
+    m = cfg.method
+    n_batches = max(cfg.n_batches, 1)
+    round_size = min(cfg.w_a, cfg.w_p)
+    sync_marks = set(sync_epochs(cfg.n_epochs, cfg.dt0))
+    if disable_semi_async:
+        sync_marks = set(range(1, cfg.n_epochs + 1))
+
+    rows = _rows_table(cfg, n_samples)
+    tb = _TickBuilder(n_rep_a, n_rep_p)
+    emb, grad = _SlotPool(), _SlotPool()
+    next_a = [0] * n_rep_a
+    next_p = [0] * n_rep_p
+    global_max = -1
+    emb_buf: Dict[int, tuple] = {}    # bid -> (rep_p, ver, slot, tick)
+    grad_buf: Dict[int, tuple] = {}   # bid -> (rep_p, ver, slot, a_tick)
+    version_p = [0] * n_rep_p
+    staleness: List[int] = []
+    a_steps_total = 0
+    cur_epoch = 0
+    cuts: List[Tuple[int, bool]] = []  # (exclusive tick bound, epoch_agg)
+    has_inscan = False
+
+    def barrier(t: int) -> None:
+        for i in range(n_rep_a):
+            next_a[i] = max(next_a[i], t)
+        for i in range(n_rep_p):
+            next_p[i] = max(next_p[i], t)
+
+    last_t, last_kind = (events[-1][0], events[-1][1]) if events \
+        else (None, None)
+
+    for t_sim, kind, pl in events:
+        if kind == "p_fwd":
+            bid, w = pl["bid"], pl["w"]
+            rep = w % n_rep_p
+            t = next_p[rep]
+            if bid in emb_buf:              # stale duplicate: discard old
+                emb.release(emb_buf[bid][2], t + 1)
+            slot = emb.alloc(t)
+            tb.put(t, "pf", rep, (bid, slot))
+            emb_buf[bid] = (rep, version_p[rep], slot, t)
+            next_p[rep] = t + 1
+            global_max = max(global_max, t)
+
+        elif kind == "a_step":
+            bid, w = pl["bid"], pl["w"]
+            if bid in emb_buf:
+                rep_p, ver, eslot, tf = emb_buf.pop(bid)
+                rep = w % n_rep_a
+                a_steps_total += 1
+                trigger = (m == "vfl_ps" and
+                           a_steps_total % max(round_size, 1) == 0)
+                t = max(next_a[rep], tf)
+                if trigger:
+                    t = max(t, global_max)
+                gslot = grad.alloc(t)
+                bucket = min((a_steps_total - 1) // n_batches,
+                             cfg.n_epochs - 1)
+                tb.put(t, "as", rep, (bid, eslot, gslot, bucket))
+                emb.release(eslot, t + 1)   # engine reads before next write
+                grad_buf[bid] = (rep_p, ver, gslot, t)
+                next_a[rep] = t + 1
+                global_max = max(global_max, t)
+                if trigger:
+                    tb.flag(t, "agg_a")
+                    has_inscan = True
+                    barrier(t + 1)
+
+        elif kind == "p_bwd":
+            bid = pl["bid"]
+            if bid in grad_buf:
+                rep_p, ver, gslot, ta = grad_buf.pop(bid)
+                staleness.append(version_p[rep_p] - ver)
+                version_p[rep_p] += 1
+                trigger = (m == "vfl_ps" and
+                           version_p[rep_p] % max(round_size, 1) == 0)
+                t = max(next_p[rep_p], ta + 1)
+                if trigger:
+                    t = max(t, global_max)
+                tb.put(t, "pb", rep_p, (bid, gslot))
+                grad.release(gslot, t)      # same-tick rewrite is phase-safe
+                next_p[rep_p] = t + 1
+                global_max = max(global_max, t)
+                if trigger:
+                    tb.flag(t, "agg_p")
+                    has_inscan = True
+                    barrier(t + 1)
+
+        # epoch boundary bookkeeping — identical to the event loop's
+        new_epoch = min(a_steps_total // n_batches, cfg.n_epochs - 1)
+        if new_epoch > cur_epoch or (t_sim == last_t and kind == last_kind):
+            for ep_done in range(cur_epoch + 1, new_epoch + 1):
+                epoch_agg = (m == "avfl_ps" or
+                             (m == "pubsub" and ep_done in sync_marks))
+                cut = global_max + 1
+                cuts.append((cut, epoch_agg))
+                barrier(cut)
+            cur_epoch = new_epoch
+
+    # trailing epochs (the event loop's final while): leftover ticks land
+    # in the first trailing segment; the rest are empty, never aggregated
+    while len(cuts) < cfg.n_epochs:
+        cuts.append((global_max + 1, False))
+
+    segments, lo = [], 0
+    for cut, epoch_agg in cuts[:cfg.n_epochs]:
+        segments.append(_materialize(tb.slice(lo, cut), n_rep_a, n_rep_p,
+                                     epoch_agg))
+        lo = max(lo, cut)
+
+    return CompiledSchedule(
+        method=m, n_rep_a=n_rep_a, n_rep_p=n_rep_p, n_epochs=cfg.n_epochs,
+        rows=rows, segments=segments, emb_slots=max(emb.n, 1),
+        grad_slots=max(grad.n, 1), staleness=staleness,
+        n_updates=a_steps_total, has_inscan_agg=has_inscan,
+        versions_p=list(version_p))

@@ -11,6 +11,23 @@ Aggregation policy by method (paper semantics):
   avfl     — no PS: single shared params per party (hogwild updates)
   avfl_ps  — aggregate replicas every epoch
   pubsub   — semi-async: aggregate at the Eq. 5 Delta_T_t epoch marks
+
+Two replay engines execute the log (`VFLTrainer.replay(engine=...)`):
+
+  engine="compiled" (default) — the hot path.  `core.schedule` lowers the
+      event log to a dense tick program; `core.jit_pipeline`'s
+      `CompiledReplayEngine` runs it as one jitted lax.scan per epoch,
+      replica-vmapped, with device-resident DP (fused cut-layer publish)
+      and device-accumulated losses.  No per-event Python dispatch, no
+      per-step host<->device round trips.
+  engine="event" — the legacy per-event Python loop, kept as the
+      readable reference semantics and for parity testing; DP clip/noise
+      runs on host numpy here.
+
+For non-DP runs both engines produce the same losses/metrics for the
+same seed (see tests/test_engine_parity.py); only wall-clock differs.
+With DP enabled the noise *streams* differ (host numpy rng vs. JAX
+PRNG), so per-run numbers diverge while the clip/sigma semantics match.
 """
 from __future__ import annotations
 
@@ -23,12 +40,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.des import RunConfig, SimResult
+from repro.core.jit_pipeline import CompiledReplayEngine
+from repro.core.schedule import compile_schedule
 from repro.core.semi_async import aggregate, sync_epochs
 from repro.data.synthetic import Dataset
 from repro.data.vertical import VerticalView, batch_ids
 from repro.dp.gdp import GDPConfig, noise_sigma
 from repro.models import tabular
 from repro.optim.optimizers import adam, apply_updates
+
+ENGINES = ("compiled", "event")
 
 
 @dataclass
@@ -72,6 +93,7 @@ class VFLTrainer:
         self.task = task
         self.resnet = resnet
         self.depth = depth
+        self.lr = lr
         self.gdp = gdp
         self.sigma = noise_sigma(gdp) if gdp else 0.0
         self.clip = gdp.clip if gdp else math.inf
@@ -129,8 +151,57 @@ class VFLTrainer:
         return w % n
 
     # ------------------------------------------------------------------
-    def replay(self, sim: SimResult, *, eval_every_epoch: bool = True
-               ) -> TrainResult:
+    def replay(self, sim: SimResult, *, eval_every_epoch: bool = True,
+               engine: str = "compiled") -> TrainResult:
+        """Execute the event log.  `engine="compiled"` (default) runs the
+        jitted scan engine; `engine="event"` runs the legacy per-event
+        loop (reference semantics, used for parity testing)."""
+        if engine not in ENGINES:
+            raise ValueError(f"engine {engine!r} not in {ENGINES}")
+        if engine == "compiled":
+            return self._replay_compiled(sim,
+                                         eval_every_epoch=eval_every_epoch)
+        return self._replay_event(sim, eval_every_epoch=eval_every_epoch)
+
+    # ------------------------------------------------------------------
+    def _replay_compiled(self, sim: SimResult, *,
+                         eval_every_epoch: bool = True) -> TrainResult:
+        cfg = self.cfg
+        sched = compile_schedule(
+            cfg, sim.events, n_rep_a=self.n_rep_a, n_rep_p=self.n_rep_p,
+            n_samples=len(self.y),
+            disable_semi_async=self.disable_semi_async)
+        eng = CompiledReplayEngine(
+            sched, task=self.task, resnet=self.resnet, clip=self.clip,
+            sigma=self.sigma, lr=self.lr, seed=cfg.seed)
+        d_emb = self.theta_p[0]["layers"][-1]["b"].shape[0]
+        data = eng.stage_data(self.Xa, self.Xp, self.y)
+        state = eng.init_state(self.theta_a, self.opt_a,
+                               self.theta_p, self.opt_p, d_emb)
+        history: List[float] = []
+        for e in range(cfg.n_epochs):
+            state = eng.run_segment(state, e, data)
+            if eval_every_epoch:
+                ta, tp = eng.params_mean(state)
+                history.append(self._metric(ta, tp))
+        (self.theta_a, self.opt_a, self.theta_p, self.opt_p,
+         losses) = eng.finish(state)
+        self.version_p = list(sched.versions_p)
+        self.staleness.extend(sched.staleness)
+        self.n_updates += sched.n_updates
+        if not history:
+            history.append(self.evaluate())
+        metric = "auc" if self.task == "classification" else "rmse"
+        return TrainResult(
+            metric_name=metric, history=history, losses=losses,
+            final_metric=history[-1],
+            staleness_mean=(float(np.mean(self.staleness))
+                            if self.staleness else 0.0),
+            n_updates=self.n_updates)
+
+    # ------------------------------------------------------------------
+    def _replay_event(self, sim: SimResult, *,
+                      eval_every_epoch: bool = True) -> TrainResult:
         cfg = self.cfg
         m = cfg.method
         sync_marks = set(sync_epochs(cfg.n_epochs, cfg.dt0))
@@ -248,6 +319,9 @@ class VFLTrainer:
             else self.theta_a[0]
         theta_p = aggregate(self.theta_p) if self.n_rep_p > 1 \
             else self.theta_p[0]
+        return self._metric(theta_a, theta_p)
+
+    def _metric(self, theta_a, theta_p) -> float:
         scores = np.asarray(tabular.predict(
             theta_a, theta_p, jnp.asarray(self.tXa), jnp.asarray(self.tXp),
             task=self.task, resnet=self.resnet))

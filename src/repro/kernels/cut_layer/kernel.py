@@ -38,15 +38,30 @@ def _cut_layer_kernel(x_ref, w_ref, b_ref, n_ref, o_ref, acc,
         o_ref[...] = y.astype(o_ref.dtype)
 
 
+def _clamp_block(dim: int, block: int) -> int:
+    """Largest divisor of `dim` that is <= `block` (so non-multiple batch
+    sizes never trip the grid arithmetic)."""
+    block = min(block, dim)
+    while dim % block:
+        block -= 1
+    return max(block, 1)
+
+
 @functools.partial(jax.jit, static_argnames=("clip", "sigma", "block_m",
                                              "block_k", "interpret"))
 def cut_layer_pallas(x, w, b, noise, *, clip: float, sigma: float,
                      block_m: int = 128, block_k: int = 512,
-                     interpret: bool = True):
+                     interpret: bool = None):
+    """interpret=None auto-selects: compiled on TPU, interpreter off-TPU
+    (Mosaic does not lower on host platforms); REPRO_PALLAS_INTERPRET
+    overrides either way."""
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
     M, K = x.shape
     N = w.shape[1]
-    block_m, block_k = min(block_m, M), min(block_k, K)
-    assert M % block_m == 0 and K % block_k == 0
+    block_m = _clamp_block(M, block_m)
+    block_k = _clamp_block(K, block_k)
     n_k = K // block_k
     return pl.pallas_call(
         functools.partial(_cut_layer_kernel, n_k=n_k, clip=clip,

@@ -23,13 +23,7 @@ def cut_layer(x, w, b, *, clip: float, sigma: float, key=None, noise=None,
             import jax.numpy as jnp
             noise = jnp.zeros((x.shape[0], w.shape[1]), x.dtype)
     if use_pallas:
-        M, K = x.shape
-        bm, bk = 128, 512
-        while M % bm:
-            bm //= 2
-        while K % bk:
-            bk //= 2
+        # the kernel clamps block sizes to divisors of (M, K) itself
         return cut_layer_pallas(x, w, b, noise, clip=clip, sigma=sigma,
-                                block_m=max(bm, 1), block_k=max(bk, 1),
                                 interpret=default_interpret())
     return cut_layer_ref(x, w, b, noise, clip=clip, sigma=sigma)

@@ -13,7 +13,8 @@ These mirror Algorithm 1 lines 7-10 / 15-18 / 25-26.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+import math
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +46,49 @@ def bottom_forward(params: Dict, x, resnet: bool = False) -> jnp.ndarray:
             z = z + h
         h = z
     return h
+
+
+def hidden_forward(params: Dict, x, resnet: bool = False) -> jnp.ndarray:
+    """Bottom forward through all layers but the last (the cut layer)."""
+    h = x
+    for lyr in params["layers"][:-1]:
+        z = jnp.tanh(h @ lyr["w"] + lyr["b"])
+        if resnet and z.shape == h.shape:
+            z = z + h
+        h = z
+    return h
+
+
+def publish_embedding(theta_p, x_p, noise: Optional[jnp.ndarray] = None, *,
+                      clip: float = math.inf, sigma: float = 0.0,
+                      resnet: bool = False, use_pallas: bool = False
+                      ) -> jnp.ndarray:
+    """Passive forward fused with the DP publish transform (device-resident).
+
+    The last bottom layer IS the cut layer, so the non-residual path routes
+    projection+tanh+L2-clip+noise through the fused `cut_layer` op (Pallas
+    kernel on TPU, jnp reference elsewhere) and the pre-noise embedding
+    never leaves the kernel.  The residual variant adds a skip connection
+    after the tanh, which the fused kernel does not model — it falls back
+    to a full forward plus an (equally device-resident) jnp clip/noise."""
+    if not (sigma > 0.0 or math.isfinite(clip)):
+        return bottom_forward(theta_p, x_p, resnet)
+    if sigma > 0.0:
+        assert noise is not None, "need noise (std normal) when sigma > 0"
+    if resnet:
+        z = bottom_forward(theta_p, x_p, resnet)
+        nrm = jnp.linalg.norm(z, axis=-1, keepdims=True)
+        z = z * jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12))
+        if sigma > 0.0:
+            z = z + sigma * noise.astype(z.dtype)
+        return z
+    from repro.kernels.cut_layer.ops import cut_layer
+    h = hidden_forward(theta_p, x_p, resnet)
+    last = theta_p["layers"][-1]
+    if noise is None:
+        noise = jnp.zeros(h.shape[:-1] + (last["w"].shape[1],), h.dtype)
+    return cut_layer(h, last["w"], last["b"], clip=clip, sigma=sigma,
+                     noise=noise, use_pallas=use_pallas)
 
 
 def init_top(key, *, emb_dim: int = EMB_DIM, hidden: int = 64) -> Dict:

@@ -88,6 +88,36 @@ def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
     return adam(lr, b1, b2, eps, weight_decay)
 
 
+def stack_states(states):
+    """Stack per-replica pytrees (params or optimizer states) along a new
+    leading replica axis — the layout the compiled replay engine vmaps."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_states(stack, n: int):
+    """Inverse of `stack_states`: back to a list of per-replica pytrees."""
+    return [jax.tree.map(lambda x: x[i], stack) for i in range(n)]
+
+
+def masked_replica_update(opt: Optimizer, grads, state, params, mask):
+    """One optimizer step vmapped across the replica axis, applied only on
+    lanes where `mask` is True (no-op lanes keep params AND state, so their
+    Adam step counters do not advance — identical to the event replay,
+    where idle replicas simply do not step)."""
+    def one(g, s, p):
+        ups, s2 = opt.update(g, s, p)
+        return apply_updates(p, ups), s2
+
+    new_params, new_state = jax.vmap(one)(grads, state, params)
+
+    def sel(new, old):
+        m = mask.reshape(mask.shape + (1,) * (old.ndim - 1))
+        return jnp.where(m, new, old)
+
+    return (jax.tree.map(sel, new_params, params),
+            jax.tree.map(sel, new_state, state))
+
+
 def clip_by_global_norm(grads, max_norm: float):
     leaves = jax.tree.leaves(grads)
     gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))

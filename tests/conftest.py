@@ -1,6 +1,35 @@
 import os
 import sys
 
+import pytest
+
 # tests run on the single real CPU device; only the dry-run forces 512
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="also run tests marked slow (long multi-epoch system runs)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long multi-epoch system test, deselected by default "
+        "(enable with --runslow or -m slow)")
+
+
+def pytest_collection_modifyitems(config, items):
+    """Tier-1 (`pytest -x -q`) deselects `slow` tests so the default loop
+    stays CI-friendly; `--runslow` (or an explicit `-m slow`) re-enables
+    them."""
+    if config.getoption("--runslow"):
+        return
+    if config.getoption("-m"):
+        return          # explicit marker expressions take precedence
+    skip_slow = pytest.mark.skip(reason="slow: use --runslow to include")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

@@ -1,11 +1,18 @@
 """End-to-end behaviour tests of the paper's system: DES + real training,
-speedup/utilization ordering, accuracy parity, ablation directions."""
+speedup/utilization ordering, accuracy parity, ablation directions.
+
+The whole module is marked `slow` (multi-epoch full-system runs) and is
+deselected by the default tier-1 loop; run with `--runslow`.  Fast
+engine-level coverage of the same training semantics lives in
+tests/test_engine_parity.py and tests/test_trainer.py."""
 import math
 
 import numpy as np
 import pytest
 
 from repro.core.runtime import ExperimentConfig, run_experiment
+
+pytestmark = pytest.mark.slow
 
 FAST = dict(scale=0.05, n_epochs=3, batch_size=64)
 
