@@ -1,20 +1,29 @@
-"""Replay-engine throughput: compiled jitted-scan engine vs. the legacy
-per-event Python loop, on the synthetic `pubsub` configuration.
+"""Replay-engine throughput: the packed compiled engine vs. the legacy
+dense lane layout vs. the per-event Python loop, on the synthetic
+`pubsub` configuration (batch 256 — the paper's operating regime, where
+per-event network compute dominates scheduling overhead).
 
-Reports, per engine: steady-state wall-clock per epoch and replayed
-events/sec.  For the compiled engine the one-time cost (schedule
-compilation + jit trace + XLA compile, paid once per process & shape) is
-measured separately and reported as `replay/compiled_cold`; the
-steady-state number is the second replay, which hits the process-wide
-runner cache — the regime any multi-run experiment (sweeps, epochs at
-scale) actually sits in.  The event engine is likewise measured after
-its first replay has warmed the per-op jit caches.
+Reports, per engine: steady-state wall-clock per epoch, replayed
+events/sec, and (for the compiled engines) the schedule's executed-lane
+occupancy — the fraction of vmapped lane slots doing real work, i.e.
+the quantity the Pub/Sub design maximizes for worker utilization (see
+docs/architecture.md).  For the compiled engines the one-time cost
+(schedule compilation + jit trace + XLA compile) is measured separately
+as `replay/packed_cold`; with the persistent XLA cache
+(`core.xla_cache`) it is paid once per machine.  Steady-state numbers
+are the best of three replays, which hit the process-wide runner cache
+— the regime any multi-run experiment actually sits in.  The event
+engine is likewise measured after a warmup replay.
+
+Emits the harness CSV on stdout plus a machine-readable
+`BENCH_replay.json` in the working directory.
 
 Scale knobs (env): REPRO_BENCH_SCALE (dataset fraction, default 0.05),
 REPRO_BENCH_EPOCHS (default 5).
 """
 from __future__ import annotations
 
+import json
 import time
 
 from repro.core.cost_model import PartyProfile, SystemProfile
@@ -27,7 +36,7 @@ from benchmarks.common import EPOCHS, SCALE, SEED, emit
 
 
 def _build(method: str = "pubsub"):
-    ds = load("synthetic", seed=SEED, scale=max(SCALE * 0.1, 0.004))
+    ds = load("synthetic", seed=SEED, scale=max(SCALE * 0.4, 0.004))
     tr, te = ds.split(seed=SEED)
     a_tr, p_tr = vertical_split(tr, seed=SEED)
     a_te, p_te = vertical_split(te, seed=SEED)
@@ -35,7 +44,7 @@ def _build(method: str = "pubsub"):
     prof = SystemProfile(active=PartyProfile(cores=32),
                          passive=PartyProfile(cores=32))
     cfg = RunConfig(method=method, n_samples=a_tr.X.shape[0],
-                    batch_size=64, n_epochs=EPOCHS, w_a=4, w_p=4,
+                    batch_size=256, n_epochs=EPOCHS, w_a=4, w_p=4,
                     profile=prof, seed=SEED)
     sim = simulate(cfg)
     mk = lambda: VFLTrainer(cfg, a_tr, p_tr, a_te, p_te, ds.task,
@@ -43,35 +52,75 @@ def _build(method: str = "pubsub"):
     return cfg, sim, mk
 
 
-def _timed(mk, sim, engine):
+def _timed(mk, sim, engine, pack="packed"):
     trainer = mk()
     t0 = time.perf_counter()
-    res = trainer.replay(sim, engine=engine, eval_every_epoch=False)
+    res = trainer.replay(sim, engine=engine, pack=pack,
+                         eval_every_epoch=False)
     return time.perf_counter() - t0, res
+
+
+def _steady_pair(mk, sim, reps=3):
+    """Best-of-`reps` warm replays for the dense and packed layouts,
+    interleaved so drifting machine load biases neither side."""
+    best = {"dense": None, "packed": None}
+    res = {}
+    for _ in range(reps):
+        for pack in ("dense", "packed"):
+            t, r = _timed(mk, sim, "compiled", pack)
+            res[pack] = r
+            best[pack] = t if best[pack] is None else min(best[pack], t)
+    return best, res
 
 
 def run() -> None:
     cfg, sim, mk = _build()
     n_events = len(sim.events)
+    record = {"config": {"method": cfg.method, "batch_size": cfg.batch_size,
+                         "n_epochs": cfg.n_epochs, "w_a": cfg.w_a,
+                         "w_p": cfg.w_p, "n_events": n_events}}
 
     _timed(mk, sim, "event")                     # warm per-op jit caches
     event_s, res_e = _timed(mk, sim, "event")
     emit("replay/event", event_s / cfg.n_epochs * 1e6,
          f"events_per_s={n_events / event_s:.1f};total_s={event_s:.2f};"
          f"final={res_e.final_metric:.4f}")
+    record["event"] = {"total_s": event_s, "final": res_e.final_metric}
 
-    cold_s, _ = _timed(mk, sim, "compiled")      # schedule+trace+XLA
-    comp_s, res_c = _timed(mk, sim, "compiled")  # steady state
-    emit("replay/compiled_cold", cold_s / cfg.n_epochs * 1e6,
-         f"one_time_compile_s={max(cold_s - comp_s, 0.0):.2f};"
+    cold_s, _ = _timed(mk, sim, "compiled", "packed")   # sched+trace+XLA
+    _timed(mk, sim, "compiled", "dense")                # warm dense too
+    best, res = _steady_pair(mk, sim)
+    dense_s, res_d = best["dense"], res["dense"]
+    packed_s, res_p = best["packed"], res["packed"]
+    emit("replay/dense", dense_s / cfg.n_epochs * 1e6,
+         f"events_per_s={n_events / dense_s:.1f};total_s={dense_s:.2f};"
+         f"lane_occupancy={res_d.lane_occupancy:.3f};"
+         f"n_ticks={res_d.n_ticks}")
+    record["dense"] = {"total_s": dense_s, "final": res_d.final_metric,
+                       "lane_occupancy": res_d.lane_occupancy,
+                       "n_ticks": res_d.n_ticks}
+    emit("replay/packed_cold", cold_s / cfg.n_epochs * 1e6,
+         f"one_time_compile_s={max(cold_s - packed_s, 0.0):.2f};"
          f"total_s={cold_s:.2f}")
-    emit("replay/compiled", comp_s / cfg.n_epochs * 1e6,
-         f"events_per_s={n_events / comp_s:.1f};total_s={comp_s:.2f};"
-         f"final={res_c.final_metric:.4f}")
+    emit("replay/packed", packed_s / cfg.n_epochs * 1e6,
+         f"events_per_s={n_events / packed_s:.1f};total_s={packed_s:.2f};"
+         f"lane_occupancy={res_p.lane_occupancy:.3f};"
+         f"n_ticks={res_p.n_ticks};final={res_p.final_metric:.4f}")
+    record["packed"] = {"total_s": packed_s, "cold_s": cold_s,
+                        "final": res_p.final_metric,
+                        "lane_occupancy": res_p.lane_occupancy,
+                        "n_ticks": res_p.n_ticks}
 
-    emit("replay/speedup", comp_s / cfg.n_epochs * 1e6,
-         f"compiled_vs_event_x={event_s / comp_s:.2f};"
-         f"cold_vs_event_x={event_s / cold_s:.2f}")
+    emit("replay/speedup", packed_s / cfg.n_epochs * 1e6,
+         f"packed_vs_dense_x={dense_s / packed_s:.2f};"
+         f"packed_vs_event_x={event_s / packed_s:.2f};"
+         f"occupancy_packed={res_p.lane_occupancy:.3f};"
+         f"occupancy_dense={res_d.lane_occupancy:.3f}")
+    record["speedup"] = {"packed_vs_dense": dense_s / packed_s,
+                         "packed_vs_event": event_s / packed_s}
+
+    with open("BENCH_replay.json", "w") as fh:
+        json.dump(record, fh, indent=2)
 
 
 if __name__ == "__main__":

@@ -8,12 +8,19 @@ Two engines live here:
 
 2. `CompiledReplayEngine` — the production replay engine.  It executes a
    `core.schedule.CompiledSchedule` (a DES event log lowered to dense
-   per-tick arrays) as ONE jitted ``lax.scan`` per epoch segment:
+   per-tick arrays; see docs/architecture.md for the format) as ONE
+   jitted ``lax.scan`` per epoch segment:
 
    * per-replica params and optimizer states are stacked into
      leading-axis pytrees; every tick **vmaps** the passive forwards,
-     passive backwards and active steps across replicas, with no-op lanes
-     masked out (`optim.masked_replica_update`);
+     passive backwards and active steps across lanes.  In the legacy
+     ``pack="dense"`` layout a lane IS a replica and no-op lanes are
+     masked out (`optim.masked_replica_update`); in the default
+     ``pack="packed"`` layout a lane is a *work row* carrying an explicit
+     replica index — the engine gathers each lane's params from the
+     stacked pytrees and scatters updates back by replica index
+     (`optim.packed_replica_update`), so only occupied lanes execute
+     (≥90% executed-lane occupancy on pubsub logs vs. ~55% dense);
    * in-flight embeddings/gradients live in device-resident slot rings
      (`core.channels.slot_ring_*`) — the compiler has already resolved
      FIFO order, eviction and peak occupancy into explicit slot indices;
@@ -30,7 +37,9 @@ Two engines live here:
 
    Jitted runners are cached process-wide per engine spec, so many
    trainer instances (e.g. a benchmark sweep) share one compilation per
-   (method-flags, shapes) pair.
+   (method-flags, shapes) pair.  Across processes, engine construction
+   enables the persistent XLA compilation cache (`core.xla_cache`), so
+   sweeps and CI pay each (spec, shapes) compile once per machine.
 
 Semantics match core.trainer's event replay exactly: the active step
 differentiates w.r.t. the STALE published embedding; the passive backward
@@ -52,9 +61,11 @@ import numpy as np
 from repro.core.channels import (slot_ring_init, slot_ring_read,
                                  slot_ring_write)
 from repro.core.schedule import CompiledSchedule
+from repro.core.xla_cache import enable_persistent_cache
 from repro.models import tabular
-from repro.optim.optimizers import (adam, apply_updates,
-                                    masked_replica_update, stack_states,
+from repro.optim.optimizers import (adam, apply_updates, gather_replicas,
+                                    masked_replica_update,
+                                    packed_replica_update, stack_states,
                                     unstack_states)
 
 
@@ -158,13 +169,13 @@ class EngineSpec:
     has_inscan_agg: bool
     use_pallas: bool
     donate: bool
+    pack: str = "dense"
 
 
 _RUNNER_CACHE: Dict[tuple, object] = {}
 
 
-def _make_tick(spec: EngineSpec, opt):
-    n_rep_a, n_rep_p = spec.n_rep_a, spec.n_rep_p
+def _phase_ops(spec: EngineSpec):
     dp_on = spec.sigma > 0.0 or math.isfinite(spec.clip)
 
     def p_backward(th, x, gz):
@@ -181,6 +192,12 @@ def _make_tick(spec: EngineSpec, opt):
                                          sigma=spec.sigma,
                                          resnet=spec.resnet,
                                          use_pallas=spec.use_pallas)
+
+    return p_backward, a_step, publish
+
+
+def _make_dense_tick(spec: EngineSpec, opt):
+    p_backward, a_step, publish = _phase_ops(spec)
 
     def tick(carry, xs, data):
         rows_tab, Xa, Xp, Y = data
@@ -254,11 +271,98 @@ def _make_tick(spec: EngineSpec, opt):
     return tick
 
 
+def _make_packed_tick(spec: EngineSpec, opt):
+    """Tick body for the packed work-row layout: each lane carries a
+    replica index; phases gather per-lane params from the stacked
+    replica pytrees and merge updates back by index
+    (`optim.packed_replica_update`), so only occupied lanes execute.
+    Phase order (pb, pf, as) and all ring/aggregation semantics are
+    identical to the dense tick."""
+    p_backward, a_step, publish = _phase_ops(spec)
+
+    def tick(carry, xs, data):
+        rows_tab, Xa, Xp, Y = data
+        ta, oa, tp, op_, ring_e, ring_g, loss_vec, cnt_vec, key = carry
+
+        # the two passive sub-phases share ONE lax.cond: packed ticks
+        # rarely have an idle passive party, and every extra cond costs a
+        # whole-carry copy per tick to unify its branches (the dominant
+        # per-tick overhead at packed lane widths).  Within the phase the
+        # backward runs before the forward, so a p_fwd fused onto its
+        # replica's p_bwd tick publishes at the freshly updated params —
+        # exactly the event order the schedule compiler promised.
+        pb_mask = xs["pb_rep"] >= 0
+        pf_mask = xs["pf_rep"] >= 0
+        if spec.sigma > 0.0:
+            key, sub = jax.random.split(key)
+
+        def passive_phase(args):
+            tp, op_, ring_e = args
+            # --- phase 1a: passive backwards (consume the grad ring) ---
+            tp_l = gather_replicas(tp, jnp.maximum(xs["pb_rep"], 0))
+            xb = Xp[rows_tab[jnp.maximum(xs["pb_bid"], 0)]]
+            g_in = slot_ring_read(ring_g, xs["pb_slot"])
+            grads_p = jax.vmap(p_backward)(tp_l, xb, g_in)
+            tp, op_ = packed_replica_update(opt, grads_p, op_, tp,
+                                            xs["pb_rep"], pb_mask)
+            # --- phase 1b: passive forwards, DP-publish to the ring ---
+            tp_f = gather_replicas(tp, jnp.maximum(xs["pf_rep"], 0))
+            xf = Xp[rows_tab[jnp.maximum(xs["pf_bid"], 0)]]
+            if spec.sigma > 0.0:
+                noise = jax.random.normal(
+                    sub, xf.shape[:2] + (ring_e.shape[-1],), jnp.float32)
+                z_pub = jax.vmap(publish)(tp_f, xf, noise)
+            else:
+                z_pub = jax.vmap(lambda th, x: publish(th, x, None))(tp_f,
+                                                                    xf)
+            ring_e = slot_ring_write(ring_e, xs["pf_slot"], z_pub, pf_mask)
+            return tp, op_, ring_e
+
+        tp, op_, ring_e = jax.lax.cond(
+            jnp.any(pb_mask) | jnp.any(pf_mask), passive_phase,
+            lambda args: args, (tp, op_, ring_e))
+
+        # --- phase 2: active steps (consume ring, produce cotangents) ---
+        as_mask = xs["as_rep"] >= 0
+
+        def as_phase(args):
+            ta, oa, ring_g, loss_vec, cnt_vec = args
+            ta_l = gather_replicas(ta, jnp.maximum(xs["as_rep"], 0))
+            a_rows = rows_tab[jnp.maximum(xs["as_bid"], 0)]
+            z_in = slot_ring_read(ring_e, xs["as_eslot"])
+            loss, g_a, g_z = jax.vmap(a_step)(ta_l, Xa[a_rows], z_in,
+                                              Y[a_rows])
+            ta, oa = packed_replica_update(opt, g_a, oa, ta,
+                                           xs["as_rep"], as_mask)
+            ring_g = slot_ring_write(ring_g, xs["as_gslot"], g_z, as_mask)
+            loss_vec = loss_vec.at[xs["as_epoch"]].add(
+                jnp.where(as_mask, loss, 0.0))
+            cnt_vec = cnt_vec.at[xs["as_epoch"]].add(
+                as_mask.astype(jnp.float32))
+            return ta, oa, ring_g, loss_vec, cnt_vec
+
+        ta, oa, ring_g, loss_vec, cnt_vec = jax.lax.cond(
+            jnp.any(as_mask), as_phase, lambda args: args,
+            (ta, oa, ring_g, loss_vec, cnt_vec))
+
+        # --- in-scan PS aggregation (vfl_ps round barriers) ---
+        if spec.has_inscan_agg:
+            ta = jax.lax.cond(xs["agg_a"], _broadcast_mean,
+                              lambda s: s, ta)
+            tp = jax.lax.cond(xs["agg_p"], _broadcast_mean,
+                              lambda s: s, tp)
+
+        return (ta, oa, tp, op_, ring_e, ring_g, loss_vec, cnt_vec, key)
+
+    return tick
+
+
 def _get_runner(spec: EngineSpec, opt, opt_key):
     cache_key = (spec, opt_key)
     if opt_key is not None and cache_key in _RUNNER_CACHE:
         return _RUNNER_CACHE[cache_key]
-    tick = _make_tick(spec, opt)
+    mk = _make_packed_tick if spec.pack == "packed" else _make_dense_tick
+    tick = mk(spec, opt)
 
     def run(carry, xs, data):
         return jax.lax.scan(lambda c, x: (tick(c, x, data), None),
@@ -278,6 +382,7 @@ class CompiledReplayEngine:
                  clip: float = math.inf, sigma: float = 0.0,
                  lr: float = 1e-3, use_pallas: Optional[bool] = None,
                  seed: int = 0):
+        enable_persistent_cache()
         self.schedule = schedule
         self.opt = opt if opt is not None else adam(lr)
         opt_key = ("adam", lr) if opt is None else None
@@ -288,7 +393,7 @@ class CompiledReplayEngine:
             n_rep_a=schedule.n_rep_a, n_rep_p=schedule.n_rep_p, task=task,
             resnet=resnet, clip=float(clip), sigma=float(sigma),
             has_inscan_agg=schedule.has_inscan_agg, use_pallas=use_pallas,
-            donate=backend != "cpu")
+            donate=backend != "cpu", pack=schedule.pack)
         self._runner = _get_runner(self.spec, self.opt, opt_key)
         self._xs = {k: jnp.asarray(v)
                     for k, v in schedule.padded().items()}

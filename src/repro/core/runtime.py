@@ -44,6 +44,7 @@ class ExperimentConfig:
     disable_semi_async: bool = False # sync every epoch (w/o ΔT)
     disable_planner: bool = False    # fixed equal workers (w/o DP algo)
     engine: str = "compiled"         # replay engine: "compiled" | "event"
+    pack: str = "packed"             # compiled lane layout: "packed"|"dense"
     t_ddl: float = 10.0
     dt0: int = 5
     p: int = 5
@@ -97,7 +98,7 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
                          seed=cfg.seed, resnet=cfg.resnet, gdp=gdp,
                          depth=cfg.depth,
                          disable_semi_async=cfg.disable_semi_async)
-    res = trainer.replay(sim, engine=cfg.engine)
+    res = trainer.replay(sim, engine=cfg.engine, pack=cfg.pack)
 
     return {
         "method": cfg.method,
@@ -113,6 +114,7 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
         "waiting_per_epoch": sim.waiting_per_epoch,
         "comm_mb": sim.comm_mb,
         "staleness": res.staleness_mean,
+        "lane_occupancy": res.lane_occupancy,
         "drops": sim.stats["drops"],
         "w_a": sim.stats["w_a"],
         "w_p": sim.stats["w_p"],

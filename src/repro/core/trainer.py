@@ -21,13 +21,16 @@ Two replay engines execute the log (`VFLTrainer.replay(engine=...)`):
       and device-accumulated losses.  No per-event Python dispatch, no
       per-step host<->device round trips.
   engine="event" — the legacy per-event Python loop, kept as the
-      readable reference semantics and for parity testing; DP clip/noise
-      runs on host numpy here.
+      readable reference semantics and for parity testing.  Its DP
+      publish routes through the same fused `tabular.publish_embedding`
+      op as the compiled engine; only the Gaussian noise is still drawn
+      from the legacy host numpy rng (see docs/architecture.md §DP).
 
 For non-DP runs both engines produce the same losses/metrics for the
 same seed (see tests/test_engine_parity.py); only wall-clock differs.
-With DP enabled the noise *streams* differ (host numpy rng vs. JAX
-PRNG), so per-run numbers diverge while the clip/sigma semantics match.
+With DP enabled the clip/projection math is shared, but the noise
+*streams* differ (host numpy rng vs. JAX PRNG), so per-run numbers
+diverge while the clip/sigma semantics match.
 """
 from __future__ import annotations
 
@@ -60,6 +63,8 @@ class TrainResult:
     final_metric: float
     staleness_mean: float
     n_updates: int
+    lane_occupancy: float = 0.0       # compiled engine only (0 = event)
+    n_ticks: int = 0                  # compiled engine only
 
     def epochs_to_target(self, target: float, higher_better: bool) -> int:
         for i, v in enumerate(self.history):
@@ -152,25 +157,31 @@ class VFLTrainer:
 
     # ------------------------------------------------------------------
     def replay(self, sim: SimResult, *, eval_every_epoch: bool = True,
-               engine: str = "compiled") -> TrainResult:
+               engine: str = "compiled", pack: str = "packed"
+               ) -> TrainResult:
         """Execute the event log.  `engine="compiled"` (default) runs the
         jitted scan engine; `engine="event"` runs the legacy per-event
-        loop (reference semantics, used for parity testing)."""
+        loop (reference semantics, used for parity testing).  `pack`
+        selects the compiled engine's lane layout: "packed" (default,
+        dense work rows + replica-index gather/scatter) or "dense" (the
+        legacy one-lane-per-replica layout, kept for parity/benchmark
+        baselines)."""
         if engine not in ENGINES:
             raise ValueError(f"engine {engine!r} not in {ENGINES}")
         if engine == "compiled":
-            return self._replay_compiled(sim,
-                                         eval_every_epoch=eval_every_epoch)
+            return self._replay_compiled(
+                sim, eval_every_epoch=eval_every_epoch, pack=pack)
         return self._replay_event(sim, eval_every_epoch=eval_every_epoch)
 
     # ------------------------------------------------------------------
     def _replay_compiled(self, sim: SimResult, *,
-                         eval_every_epoch: bool = True) -> TrainResult:
+                         eval_every_epoch: bool = True,
+                         pack: str = "packed") -> TrainResult:
         cfg = self.cfg
         sched = compile_schedule(
             cfg, sim.events, n_rep_a=self.n_rep_a, n_rep_p=self.n_rep_p,
             n_samples=len(self.y),
-            disable_semi_async=self.disable_semi_async)
+            disable_semi_async=self.disable_semi_async, pack=pack)
         eng = CompiledReplayEngine(
             sched, task=self.task, resnet=self.resnet, clip=self.clip,
             sigma=self.sigma, lr=self.lr, seed=cfg.seed)
@@ -197,7 +208,8 @@ class VFLTrainer:
             final_metric=history[-1],
             staleness_mean=(float(np.mean(self.staleness))
                             if self.staleness else 0.0),
-            n_updates=self.n_updates)
+            n_updates=self.n_updates,
+            lane_occupancy=sched.lane_occupancy(), n_ticks=sched.n_ticks)
 
     # ------------------------------------------------------------------
     def _replay_event(self, sim: SimResult, *,
@@ -220,18 +232,25 @@ class VFLTrainer:
                 bid, w = pl["bid"], pl["w"]
                 rep = self._rep(w, "p")
                 rows = self._rows(bid)
-                z = tabular.passive_forward(
-                    self.theta_p[rep], jnp.asarray(self.Xp[rows]),
-                    resnet=self.resnet)
                 if self.sigma > 0 or math.isfinite(self.clip):
-                    zf = np.asarray(z)
-                    nrm = np.linalg.norm(zf, axis=-1, keepdims=True)
-                    zf = zf * np.minimum(1.0, self.clip /
-                                         np.maximum(nrm, 1e-12))
+                    # same fused DP publish as the compiled engine
+                    # (projection+tanh+clip+noise via the cut-layer op);
+                    # only the noise SOURCE stays host-side — the legacy
+                    # numpy rng stream — so event-engine DP runs remain
+                    # reproducible against pre-fusion results
+                    noise = None
                     if self.sigma > 0:
-                        zf = zf + self.sigma * self.rng.normal(
-                            size=zf.shape).astype(zf.dtype)
-                    z = jnp.asarray(zf)
+                        d_emb = self.theta_p[rep]["layers"][-1]["b"].shape[0]
+                        noise = jnp.asarray(self.rng.normal(
+                            size=(len(rows), d_emb)).astype(np.float32))
+                    z = tabular.publish_embedding(
+                        self.theta_p[rep], jnp.asarray(self.Xp[rows]),
+                        noise, clip=self.clip, sigma=self.sigma,
+                        resnet=self.resnet)
+                else:
+                    z = tabular.passive_forward(
+                        self.theta_p[rep], jnp.asarray(self.Xp[rows]),
+                        resnet=self.resnet)
                 self._emb_buf[bid] = (z, rows, rep, self.version_p[rep])
             elif kind == "a_step":
                 bid, w = pl["bid"], pl["w"]

@@ -1,0 +1,63 @@
+"""Persistent XLA compilation cache, shared across processes.
+
+The compiled replay engine's jitted scan costs ~8s of XLA compile per
+(engine spec, shapes) pair on CPU.  Within one process the runner cache
+in `core.jit_pipeline` already dedupes that; across processes (pytest
+runs, benchmark sweeps, repeated experiments) the compile is re-paid from
+scratch unless JAX's persistent compilation cache is pointed at a stable
+on-disk directory.  This module does exactly that, once, for the whole
+process:
+
+    from repro.core.xla_cache import enable_persistent_cache
+    enable_persistent_cache()          # idempotent
+
+Knobs (env):
+  REPRO_XLA_CACHE=<dir>   cache directory (default ~/.cache/repro/xla)
+  REPRO_XLA_CACHE=0       disable entirely
+
+`CompiledReplayEngine` calls this on construction and `tests/conftest.py`
+calls it at session start, so sweeps and CI pay each compile once per
+machine rather than once per process.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+_DISABLE = ("0", "off", "none", "false")
+_state = {"done": False, "path": None}
+
+
+def enable_persistent_cache(path: Optional[str] = None) -> Optional[str]:
+    """Point JAX's persistent compilation cache at a stable directory.
+
+    Returns the cache directory, or None when disabled/unsupported.
+    Idempotent: only the first call configures anything."""
+    if _state["done"]:
+        return _state["path"]
+    _state["done"] = True
+
+    env = os.environ.get("REPRO_XLA_CACHE", "")
+    if env.lower() in _DISABLE:
+        return None
+    if path is None:
+        path = env or os.path.join(os.path.expanduser("~"), ".cache",
+                                   "repro", "xla")
+    try:
+        import jax
+        os.makedirs(path, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", str(path))
+        # cache every entry, however small/fast — the point is CI and
+        # sweep re-runs, where even a 1s compile is pure waste
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+        # jax memoizes the backing file cache at the FIRST jit compile;
+        # any compile before this call (data prep, model init) would
+        # have pinned it to "no cache" — drop the memo so the cache
+        # takes effect mid-process
+        from jax._src import compilation_cache as _cc
+        _cc.reset_cache()
+    except Exception:          # old jax / read-only fs: run uncached
+        return None
+    _state["path"] = str(path)
+    return _state["path"]

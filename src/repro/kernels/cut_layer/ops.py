@@ -1,4 +1,17 @@
-"""Public jit'd wrapper for the fused cut-layer op."""
+"""Public wrapper for the fused cut-layer publish op.
+
+The passive party's last bottom layer IS the cut layer, so the whole DP
+publish transform — projection, tanh, L2 clip, Gaussian noise — runs as
+one fused op and the pre-noise embedding never materializes outside it
+(docs/architecture.md §"DP fuses into the cut-layer publish").  Both
+replay engines reach this op through `models.tabular.publish_embedding`;
+the compiled engine feeds device PRNG noise, the event loop its legacy
+host-numpy noise stream.
+
+`use_pallas=True` selects the Pallas TPU kernel (`kernel.py`, exercised
+in interpret mode off-TPU); otherwise the jnp reference (`ref.py`) runs
+— same math, fused by XLA.
+"""
 from __future__ import annotations
 
 import jax

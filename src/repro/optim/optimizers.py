@@ -118,6 +118,56 @@ def masked_replica_update(opt: Optimizer, grads, state, params, mask):
             jax.tree.map(sel, new_state, state))
 
 
+def gather_replicas(stack, idx):
+    """Gather per-lane pytrees `stack[idx[j]]` from a stacked-replica
+    pytree (segment-style gather for the packed replay layout).  `idx`
+    must be pre-clamped to valid replica indices."""
+    return jax.tree.map(lambda x: x[idx], stack)
+
+
+def scatter_replicas(stack, lanes, rep, mask):
+    """Merge per-lane pytrees back into the replica stack:
+    `stack[rep[j]] <- lanes[j]` where `mask[j]`.  Safe because the
+    schedule compiler guarantees each replica appears at most once per
+    phase per tick, so replica r is served by at most one lane.
+
+    Implemented as a per-replica lane lookup + elementwise select rather
+    than an XLA scatter: the select fuses into the surrounding update
+    (like the dense layout's masked merge), whereas a scatter op forces
+    a serialized copy of the whole stack on CPU."""
+    n = jax.tree.leaves(stack)[0].shape[0]
+    hit = (rep[None, :] == jnp.arange(n)[:, None]) & mask[None, :]  # (n,L)
+    found = hit.any(axis=1)
+    lane_of = jnp.argmax(hit, axis=1)        # lane serving replica r
+
+    def merge(x, l):
+        sel = l[lane_of]                     # (n, ...) gather, L is tiny
+        m = found.reshape((n,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, sel, x)
+
+    return jax.tree.map(merge, stack, lanes)
+
+
+def packed_replica_update(opt: Optimizer, grads, state, params, rep, mask):
+    """One optimizer step on packed work lanes: gather each lane's replica
+    params/state by index, step vmapped across lanes, scatter the results
+    back by replica index.  Replicas not referenced by any valid lane keep
+    params AND state (their Adam step counters do not advance) — identical
+    to `masked_replica_update` on the dense layout, but executing only
+    len(rep) lanes instead of the full replica stack."""
+    idx = jnp.maximum(rep, 0)
+    p_l = gather_replicas(params, idx)
+    s_l = gather_replicas(state, idx)
+
+    def one(g, s, p):
+        ups, s2 = opt.update(g, s, p)
+        return apply_updates(p, ups), s2
+
+    new_p, new_s = jax.vmap(one)(grads, s_l, p_l)
+    return (scatter_replicas(params, new_p, rep, mask),
+            scatter_replicas(state, new_s, rep, mask))
+
+
 def clip_by_global_norm(grads, max_norm: float):
     leaves = jax.tree.leaves(grads)
     gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))

@@ -7,6 +7,12 @@ import pytest
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# persistent XLA compilation cache: repeat pytest runs skip the ~8s
+# compiled-engine jit (REPRO_XLA_CACHE=0 disables; see core/xla_cache.py)
+from repro.core.xla_cache import enable_persistent_cache  # noqa: E402
+
+enable_persistent_cache()
+
 
 def pytest_addoption(parser):
     parser.addoption(
