@@ -1,7 +1,7 @@
-"""Replay-engine throughput: the packed compiled engine vs. the legacy
-dense lane layout vs. the per-event Python loop, on the synthetic
-`pubsub` configuration (batch 256 — the paper's operating regime, where
-per-event network compute dominates scheduling overhead).
+"""Replay-engine throughput: the segmented compiled engine vs. the packed
+and legacy dense lane layouts vs. the per-event Python loop, on the
+synthetic `pubsub` configuration (batch 256 — the paper's operating
+regime, where per-event network compute dominates scheduling overhead).
 
 Reports, per engine: steady-state wall-clock per epoch, replayed
 events/sec, and (for the compiled engines) the schedule's executed-lane
@@ -9,11 +9,19 @@ occupancy — the fraction of vmapped lane slots doing real work, i.e.
 the quantity the Pub/Sub design maximizes for worker utilization (see
 docs/architecture.md).  For the compiled engines the one-time cost
 (schedule compilation + jit trace + XLA compile) is measured separately
-as `replay/packed_cold`; with the persistent XLA cache
+as `replay/segmented_cold`; with the persistent XLA cache
 (`core.xla_cache`) it is paid once per machine.  Steady-state numbers
 are the best of three replays, which hit the process-wide runner cache
 — the regime any multi-run experiment actually sits in.  The event
 engine is likewise measured after a warmup replay.
+
+A second, per-tick **fixed-cost microbenchmark** sweeps B in {32, 256}
+across the three compiled layouts.  At B=32 the per-tick math is ~8x
+cheaper while the per-tick fixed overhead (lax.cond carry copies, ring
+addressing, optimizer dispatch) is unchanged, so the per-tick time at
+small batch isolates exactly the overhead the segmented cond-free
+bodies remove; the sweep is emitted as `replay/micro_*` rows and the
+`micro` record so the fixed-cost trajectory is tracked across PRs.
 
 Emits the harness CSV on stdout plus a machine-readable
 `BENCH_replay.json` in the working directory.
@@ -34,8 +42,10 @@ from repro.data.vertical import psi_align, vertical_split
 
 from benchmarks.common import EPOCHS, SCALE, SEED, emit
 
+PACKS = ("dense", "packed", "segmented")
 
-def _build(method: str = "pubsub"):
+
+def _build(method: str = "pubsub", batch_size: int = 256):
     ds = load("synthetic", seed=SEED, scale=max(SCALE * 0.4, 0.004))
     tr, te = ds.split(seed=SEED)
     a_tr, p_tr = vertical_split(tr, seed=SEED)
@@ -44,7 +54,7 @@ def _build(method: str = "pubsub"):
     prof = SystemProfile(active=PartyProfile(cores=32),
                          passive=PartyProfile(cores=32))
     cfg = RunConfig(method=method, n_samples=a_tr.X.shape[0],
-                    batch_size=256, n_epochs=EPOCHS, w_a=4, w_p=4,
+                    batch_size=batch_size, n_epochs=EPOCHS, w_a=4, w_p=4,
                     profile=prof, seed=SEED)
     sim = simulate(cfg)
     mk = lambda: VFLTrainer(cfg, a_tr, p_tr, a_te, p_te, ds.task,
@@ -52,7 +62,7 @@ def _build(method: str = "pubsub"):
     return cfg, sim, mk
 
 
-def _timed(mk, sim, engine, pack="packed"):
+def _timed(mk, sim, engine, pack="segmented"):
     trainer = mk()
     t0 = time.perf_counter()
     res = trainer.replay(sim, engine=engine, pack=pack,
@@ -60,17 +70,53 @@ def _timed(mk, sim, engine, pack="packed"):
     return time.perf_counter() - t0, res
 
 
-def _steady_pair(mk, sim, reps=3):
-    """Best-of-`reps` warm replays for the dense and packed layouts,
-    interleaved so drifting machine load biases neither side."""
-    best = {"dense": None, "packed": None}
+def _steady(mk, sim, packs=PACKS, reps=3):
+    """Best-of-`reps` warm replays per layout, interleaved so drifting
+    machine load biases no layout."""
+    best = {p: None for p in packs}
     res = {}
     for _ in range(reps):
-        for pack in ("dense", "packed"):
+        for pack in packs:
             t, r = _timed(mk, sim, "compiled", pack)
             res[pack] = r
             best[pack] = t if best[pack] is None else min(best[pack], t)
     return best, res
+
+
+def _micro_row(B: int, best: dict, res: dict) -> dict:
+    """Emit one batch size's micro rows.  us/tick at B=32 is dominated
+    by per-tick fixed overhead (the per-tick math is ~8x cheaper while
+    the fixed cost is unchanged), so the small-batch segmented-vs-packed
+    wall-clock gap is the cond-removal payoff.  The speedup is reported
+    on total seconds (identical replayed work per layout); the us/tick
+    figures are per-layout observables — layouts may execute different
+    tick counts, so their ratio alone would conflate fewer/wider ticks
+    with lower per-tick overhead."""
+    row = {}
+    for pack in PACKS:
+        r = res[pack]
+        us_tick = best[pack] / max(r.n_ticks, 1) * 1e6
+        emit(f"replay/micro_b{B}_{pack}", us_tick,
+             f"total_s={best[pack]:.3f};n_ticks={r.n_ticks};"
+             f"lane_occupancy={r.lane_occupancy:.3f}")
+        row[pack] = {"total_s": best[pack], "us_per_tick": us_tick,
+                     "n_ticks": r.n_ticks,
+                     "lane_occupancy": r.lane_occupancy}
+    row["segmented_vs_packed_x"] = (row["packed"]["total_s"] /
+                                    row["segmented"]["total_s"])
+    return row
+
+
+def _micro(record: dict, best_256: dict, res_256: dict) -> None:
+    """Per-tick fixed-cost sweep: B in {32, 256} x the three layouts.
+    The B=256 point reuses the steady measurements of the main section
+    (same config, just measured); only B=32 is built and timed here."""
+    record["micro"] = {"B256": _micro_row(256, best_256, res_256)}
+    cfg, sim, mk = _build(batch_size=32)
+    for pack in PACKS:
+        _timed(mk, sim, "compiled", pack)            # warm
+    best, res = _steady(mk, sim, reps=2)
+    record["micro"]["B32"] = _micro_row(32, best, res)
 
 
 def run() -> None:
@@ -87,37 +133,39 @@ def run() -> None:
          f"final={res_e.final_metric:.4f}")
     record["event"] = {"total_s": event_s, "final": res_e.final_metric}
 
-    cold_s, _ = _timed(mk, sim, "compiled", "packed")   # sched+trace+XLA
-    _timed(mk, sim, "compiled", "dense")                # warm dense too
-    best, res = _steady_pair(mk, sim)
-    dense_s, res_d = best["dense"], res["dense"]
-    packed_s, res_p = best["packed"], res["packed"]
-    emit("replay/dense", dense_s / cfg.n_epochs * 1e6,
-         f"events_per_s={n_events / dense_s:.1f};total_s={dense_s:.2f};"
-         f"lane_occupancy={res_d.lane_occupancy:.3f};"
-         f"n_ticks={res_d.n_ticks}")
-    record["dense"] = {"total_s": dense_s, "final": res_d.final_metric,
-                       "lane_occupancy": res_d.lane_occupancy,
-                       "n_ticks": res_d.n_ticks}
-    emit("replay/packed_cold", cold_s / cfg.n_epochs * 1e6,
-         f"one_time_compile_s={max(cold_s - packed_s, 0.0):.2f};"
+    cold_s, _ = _timed(mk, sim, "compiled", "segmented")  # sched+trace+XLA
+    for pack in ("dense", "packed"):             # warm the baselines too
+        _timed(mk, sim, "compiled", pack)
+    best, res = _steady(mk, sim)
+    for pack in PACKS:
+        t, r = best[pack], res[pack]
+        emit(f"replay/{pack}", t / cfg.n_epochs * 1e6,
+             f"events_per_s={n_events / t:.1f};total_s={t:.2f};"
+             f"lane_occupancy={r.lane_occupancy:.3f};"
+             f"n_ticks={r.n_ticks};final={r.final_metric:.4f}")
+        record[pack] = {"total_s": t, "final": r.final_metric,
+                        "lane_occupancy": r.lane_occupancy,
+                        "n_ticks": r.n_ticks}
+    seg_s = best["segmented"]
+    record["segmented"]["cold_s"] = cold_s
+    emit("replay/segmented_cold", cold_s / cfg.n_epochs * 1e6,
+         f"one_time_compile_s={max(cold_s - seg_s, 0.0):.2f};"
          f"total_s={cold_s:.2f}")
-    emit("replay/packed", packed_s / cfg.n_epochs * 1e6,
-         f"events_per_s={n_events / packed_s:.1f};total_s={packed_s:.2f};"
-         f"lane_occupancy={res_p.lane_occupancy:.3f};"
-         f"n_ticks={res_p.n_ticks};final={res_p.final_metric:.4f}")
-    record["packed"] = {"total_s": packed_s, "cold_s": cold_s,
-                        "final": res_p.final_metric,
-                        "lane_occupancy": res_p.lane_occupancy,
-                        "n_ticks": res_p.n_ticks}
 
-    emit("replay/speedup", packed_s / cfg.n_epochs * 1e6,
-         f"packed_vs_dense_x={dense_s / packed_s:.2f};"
-         f"packed_vs_event_x={event_s / packed_s:.2f};"
-         f"occupancy_packed={res_p.lane_occupancy:.3f};"
-         f"occupancy_dense={res_d.lane_occupancy:.3f}")
-    record["speedup"] = {"packed_vs_dense": dense_s / packed_s,
-                         "packed_vs_event": event_s / packed_s}
+    emit("replay/speedup", seg_s / cfg.n_epochs * 1e6,
+         f"segmented_vs_packed_x={best['packed'] / seg_s:.2f};"
+         f"segmented_vs_dense_x={best['dense'] / seg_s:.2f};"
+         f"segmented_vs_event_x={event_s / seg_s:.2f};"
+         f"occupancy_segmented={res['segmented'].lane_occupancy:.3f};"
+         f"occupancy_packed={res['packed'].lane_occupancy:.3f}")
+    record["speedup"] = {
+        "segmented_vs_packed": best["packed"] / seg_s,
+        "segmented_vs_dense": best["dense"] / seg_s,
+        "segmented_vs_event": event_s / seg_s,
+        "packed_vs_dense": best["dense"] / best["packed"],
+    }
+
+    _micro(record, best, res)
 
     with open("BENCH_replay.json", "w") as fh:
         json.dump(record, fh, indent=2)

@@ -8,19 +8,31 @@ Two engines live here:
 
 2. `CompiledReplayEngine` — the production replay engine.  It executes a
    `core.schedule.CompiledSchedule` (a DES event log lowered to dense
-   per-tick arrays; see docs/architecture.md for the format) as ONE
-   jitted ``lax.scan`` per epoch segment:
+   per-tick arrays; see docs/architecture.md for the format) as jitted
+   ``lax.scan`` work per epoch segment — one scan over the padded tick
+   program (``pack="dense"``/``"packed"``), or one jitted epoch runner
+   chaining per-run scans with **cond-free per-signature tick bodies**
+   (``pack="segmented"``, the default):
 
    * per-replica params and optimizer states are stacked into
      leading-axis pytrees; every tick **vmaps** the passive forwards,
      passive backwards and active steps across lanes.  In the legacy
      ``pack="dense"`` layout a lane IS a replica and no-op lanes are
-     masked out (`optim.masked_replica_update`); in the default
-     ``pack="packed"`` layout a lane is a *work row* carrying an explicit
+     masked out (`optim.masked_replica_update`); in the ``"packed"``
+     layout a lane is a *work row* carrying an explicit
      replica index — the engine gathers each lane's params from the
      stacked pytrees and scatters updates back by replica index
      (`optim.packed_replica_update`), so only occupied lanes execute
      (≥90% executed-lane occupancy on pubsub logs vs. ~55% dense);
+   * the ``"segmented"`` layout executes the same packed work rows as
+     signature runs: each run's body statically traces only the phases
+     the run uses, removing the per-phase ``lax.cond``s and their
+     whole-carry branch-unification copies (~1.3x steady-state epoch
+     speedup over packed at B=256 on CPU); the optimizer step can
+     further run **flat** — each lane's pytrees flattened to one
+     contiguous f32 vector so the update is a handful of fused
+     elementwise ops (`optim.optimizers._flat_lane_step`; default on
+     only off-CPU, where the flatten copies are not the bottleneck);
    * in-flight embeddings/gradients live in device-resident slot rings
      (`core.channels.slot_ring_*`) — the compiler has already resolved
      FIFO order, eviction and peak occupancy into explicit slot indices;
@@ -170,6 +182,7 @@ class EngineSpec:
     use_pallas: bool
     donate: bool
     pack: str = "dense"
+    flat_opt: bool = False    # fused flat optimizer update (segmented)
 
 
 _RUNNER_CACHE: Dict[tuple, object] = {}
@@ -215,7 +228,8 @@ def _make_dense_tick(spec: EngineSpec, opt):
             xb = Xp[rows_tab[jnp.maximum(xs["pb_bid"], 0)]]
             g_in = slot_ring_read(ring_g, xs["pb_slot"])
             grads_p = jax.vmap(p_backward)(tp, xb, g_in)
-            return masked_replica_update(opt, grads_p, op_, tp, pb_mask)
+            return masked_replica_update(opt, grads_p, op_, tp, pb_mask,
+                                         flat=spec.flat_opt)
 
         tp, op_ = jax.lax.cond(jnp.any(pb_mask), pb_phase,
                                lambda args: args, (tp, op_))
@@ -247,7 +261,8 @@ def _make_dense_tick(spec: EngineSpec, opt):
             z_in = slot_ring_read(ring_e, xs["as_eslot"])
             loss, g_a, g_z = jax.vmap(a_step)(ta, Xa[a_rows], z_in,
                                               Y[a_rows])
-            ta, oa = masked_replica_update(opt, g_a, oa, ta, as_mask)
+            ta, oa = masked_replica_update(opt, g_a, oa, ta, as_mask,
+                                           flat=spec.flat_opt)
             ring_g = slot_ring_write(ring_g, xs["as_gslot"], g_z, as_mask)
             loss_vec = loss_vec.at[xs["as_epoch"]].add(
                 jnp.where(as_mask, loss, 0.0))
@@ -304,7 +319,8 @@ def _make_packed_tick(spec: EngineSpec, opt):
             g_in = slot_ring_read(ring_g, xs["pb_slot"])
             grads_p = jax.vmap(p_backward)(tp_l, xb, g_in)
             tp, op_ = packed_replica_update(opt, grads_p, op_, tp,
-                                            xs["pb_rep"], pb_mask)
+                                            xs["pb_rep"], pb_mask,
+                                            flat=spec.flat_opt)
             # --- phase 1b: passive forwards, DP-publish to the ring ---
             tp_f = gather_replicas(tp, jnp.maximum(xs["pf_rep"], 0))
             xf = Xp[rows_tab[jnp.maximum(xs["pf_bid"], 0)]]
@@ -333,7 +349,8 @@ def _make_packed_tick(spec: EngineSpec, opt):
             loss, g_a, g_z = jax.vmap(a_step)(ta_l, Xa[a_rows], z_in,
                                               Y[a_rows])
             ta, oa = packed_replica_update(opt, g_a, oa, ta,
-                                           xs["as_rep"], as_mask)
+                                           xs["as_rep"], as_mask,
+                                           flat=spec.flat_opt)
             ring_g = slot_ring_write(ring_g, xs["as_gslot"], g_z, as_mask)
             loss_vec = loss_vec.at[xs["as_epoch"]].add(
                 jnp.where(as_mask, loss, 0.0))
@@ -355,6 +372,107 @@ def _make_packed_tick(spec: EngineSpec, opt):
         return (ta, oa, tp, op_, ring_e, ring_g, loss_vec, cnt_vec, key)
 
     return tick
+
+
+def _make_sig_tick(spec: EngineSpec, opt, sig: Tuple[str, ...],
+                   has_agg: bool):
+    """Cond-free tick body for one phase signature (segmented layout).
+
+    A phase outside `sig` is statically absent from this run, so it is
+    simply not traced — no `lax.cond`, hence no branch-unification copy
+    of the whole carry per tick (the dominant fixed cost of the packed
+    tick at narrow lane widths).  Lanes inside a traced phase may still
+    be empty (rep == -1) and are masked elementwise, which fuses into
+    the surrounding update instead of copying the carry.  Phase order
+    (pb, pf, as), ring semantics and the optimizer masking rules are
+    identical to the packed tick; only runs that actually contain
+    aggregation ticks (`has_agg`) keep the two in-scan agg conds."""
+    p_backward, a_step, publish = _phase_ops(spec)
+
+    def tick(carry, xs, data):
+        rows_tab, Xa, Xp, Y = data
+        ta, oa, tp, op_, ring_e, ring_g, loss_vec, cnt_vec, key = carry
+
+        if "pf" in sig and spec.sigma > 0.0:
+            key, sub = jax.random.split(key)
+
+        if "pb" in sig:
+            pb_mask = xs["pb_rep"] >= 0
+            tp_l = gather_replicas(tp, jnp.maximum(xs["pb_rep"], 0))
+            xb = Xp[rows_tab[jnp.maximum(xs["pb_bid"], 0)]]
+            g_in = slot_ring_read(ring_g, xs["pb_slot"])
+            grads_p = jax.vmap(p_backward)(tp_l, xb, g_in)
+            tp, op_ = packed_replica_update(opt, grads_p, op_, tp,
+                                            xs["pb_rep"], pb_mask,
+                                            flat=spec.flat_opt)
+
+        if "pf" in sig:
+            pf_mask = xs["pf_rep"] >= 0
+            tp_f = gather_replicas(tp, jnp.maximum(xs["pf_rep"], 0))
+            xf = Xp[rows_tab[jnp.maximum(xs["pf_bid"], 0)]]
+            if spec.sigma > 0.0:
+                noise = jax.random.normal(
+                    sub, xf.shape[:2] + (ring_e.shape[-1],), jnp.float32)
+                z_pub = jax.vmap(publish)(tp_f, xf, noise)
+            else:
+                z_pub = jax.vmap(lambda th, x: publish(th, x, None))(tp_f,
+                                                                    xf)
+            ring_e = slot_ring_write(ring_e, xs["pf_slot"], z_pub, pf_mask)
+
+        if "as" in sig:
+            as_mask = xs["as_rep"] >= 0
+            ta_l = gather_replicas(ta, jnp.maximum(xs["as_rep"], 0))
+            a_rows = rows_tab[jnp.maximum(xs["as_bid"], 0)]
+            z_in = slot_ring_read(ring_e, xs["as_eslot"])
+            loss, g_a, g_z = jax.vmap(a_step)(ta_l, Xa[a_rows], z_in,
+                                              Y[a_rows])
+            ta, oa = packed_replica_update(opt, g_a, oa, ta,
+                                           xs["as_rep"], as_mask,
+                                           flat=spec.flat_opt)
+            ring_g = slot_ring_write(ring_g, xs["as_gslot"], g_z, as_mask)
+            loss_vec = loss_vec.at[xs["as_epoch"]].add(
+                jnp.where(as_mask, loss, 0.0))
+            cnt_vec = cnt_vec.at[xs["as_epoch"]].add(
+                as_mask.astype(jnp.float32))
+
+        if has_agg:
+            ta = jax.lax.cond(xs["agg_a"], _broadcast_mean,
+                              lambda s: s, ta)
+            tp = jax.lax.cond(xs["agg_p"], _broadcast_mean,
+                              lambda s: s, tp)
+
+        return (ta, oa, tp, op_, ring_e, ring_g, loss_vec, cnt_vec, key)
+
+    return tick
+
+
+def _get_segmented_runner(spec: EngineSpec, opt, opt_key,
+                          structure: tuple):
+    """One jitted epoch runner chaining the per-run scans back to back
+    with a single donated carry.  `structure` is the epoch's static run
+    chain — ((sig, has_agg), ...) — so epochs with the same chain share
+    one runner (lane widths and run lengths specialize via jit's shape
+    tracing); tick bodies are built per distinct (sig, has_agg) pair."""
+    cache_key = (spec, opt_key, structure)
+    if opt_key is not None and cache_key in _RUNNER_CACHE:
+        return _RUNNER_CACHE[cache_key]
+    bodies = {}
+    for sig, has_agg in structure:
+        if (sig, has_agg) not in bodies:
+            bodies[(sig, has_agg)] = _make_sig_tick(spec, opt, sig,
+                                                    has_agg)
+
+    def run(carry, xs_list, data):
+        for (sig, has_agg), xs in zip(structure, xs_list):
+            body = bodies[(sig, has_agg)]
+            carry = jax.lax.scan(lambda c, x, b=body: (b(c, x, data), None),
+                                 carry, xs)[0]
+        return carry
+
+    runner = jax.jit(run, donate_argnums=(0,) if spec.donate else ())
+    if opt_key is not None:
+        _RUNNER_CACHE[cache_key] = runner
+    return runner
 
 
 def _get_runner(spec: EngineSpec, opt, opt_key):
@@ -381,7 +499,7 @@ class CompiledReplayEngine:
                  task: str, resnet: bool = False,
                  clip: float = math.inf, sigma: float = 0.0,
                  lr: float = 1e-3, use_pallas: Optional[bool] = None,
-                 seed: int = 0):
+                 seed: int = 0, flat_opt: Optional[bool] = None):
         enable_persistent_cache()
         self.schedule = schedule
         self.opt = opt if opt is not None else adam(lr)
@@ -389,14 +507,37 @@ class CompiledReplayEngine:
         backend = jax.default_backend()
         if use_pallas is None:
             use_pallas = backend == "tpu"
+        if flat_opt is None:
+            # fused flat optimizer update: a handful of elementwise ops
+            # over one contiguous buffer instead of ~2L per-leaf
+            # dispatches.  Measured ~2x SLOWER on XLA-CPU (the per-tick
+            # gather/concat/split copies dominate there, same pathology
+            # as the parked flat carry layout), so it defaults on only
+            # off-CPU; REPRO benchmarks A/B it via the explicit knob.
+            flat_opt = schedule.pack == "segmented" and backend != "cpu"
         self.spec = EngineSpec(
             n_rep_a=schedule.n_rep_a, n_rep_p=schedule.n_rep_p, task=task,
             resnet=resnet, clip=float(clip), sigma=float(sigma),
             has_inscan_agg=schedule.has_inscan_agg, use_pallas=use_pallas,
-            donate=backend != "cpu", pack=schedule.pack)
-        self._runner = _get_runner(self.spec, self.opt, opt_key)
-        self._xs = {k: jnp.asarray(v)
-                    for k, v in schedule.padded().items()}
+            donate=backend != "cpu", pack=schedule.pack,
+            flat_opt=bool(flat_opt))
+        if schedule.pack == "segmented":
+            # one runner per epoch run-chain (shared across epochs with
+            # the same chain) + device-resident per-run xs
+            self._runners = [
+                _get_segmented_runner(
+                    self.spec, self.opt, opt_key,
+                    tuple((r.sig, r.has_agg) for r in seg.runs))
+                if seg.runs else None
+                for seg in schedule.segments]
+            self._seg_xs = [
+                tuple({k: jnp.asarray(v) for k, v in r.arrays.items()}
+                      for r in seg.runs)
+                for seg in schedule.segments]
+        else:
+            self._runner = _get_runner(self.spec, self.opt, opt_key)
+            self._xs = {k: jnp.asarray(v)
+                        for k, v in schedule.padded().items()}
         self._agg_both = jax.jit(
             lambda ta, tp: (_broadcast_mean(ta), _broadcast_mean(tp)))
         self._key0 = jax.random.fold_in(jax.random.PRNGKey(seed), 0x5f)
@@ -425,8 +566,12 @@ class CompiledReplayEngine:
 
     # -- execution -------------------------------------------------------
     def run_segment(self, state: tuple, seg: int, data: tuple) -> tuple:
-        xs = {k: v[seg] for k, v in self._xs.items()}
-        state = self._runner(state, xs, data)
+        if self.schedule.pack == "segmented":
+            if self.schedule.segments[seg].runs:
+                state = self._runners[seg](state, self._seg_xs[seg], data)
+        else:
+            xs = {k: v[seg] for k, v in self._xs.items()}
+            state = self._runner(state, xs, data)
         if self.schedule.segments[seg].epoch_agg:
             ta, oa, tp, op_, *rest = state
             ta, tp = self._agg_both(ta, tp)

@@ -44,7 +44,7 @@ class ExperimentConfig:
     disable_semi_async: bool = False # sync every epoch (w/o ΔT)
     disable_planner: bool = False    # fixed equal workers (w/o DP algo)
     engine: str = "compiled"         # replay engine: "compiled" | "event"
-    pack: str = "packed"             # compiled lane layout: "packed"|"dense"
+    pack: str = "segmented"          # lane layout: "segmented"|"packed"|"dense"
     t_ddl: float = 10.0
     dt0: int = 5
     p: int = 5

@@ -31,14 +31,14 @@ parameter values.  So the compiler resolves it ahead of time:
   between segments, exactly where the event loop evaluated.
 * Staleness and the update count are emitted by the compiler itself.
 
-Two lane layouts (``pack=``):
+Three lane layouts (``pack=``):
 
 * ``"dense"`` — the legacy layout: one lane per replica per phase,
   ``(T, n_rep)`` arrays with ``-1`` marking idle lanes.  The engine runs
   every lane of every non-idle phase and masks the idle lanes, so
   executed-lane occupancy on asynchronous (`pubsub`) logs sits around
   55% (see `CompiledSchedule.lane_occupancy`).
-* ``"packed"`` (default) — dense tick packing: each phase gets a small
+* ``"packed"`` — dense tick packing: each phase gets a small
   fixed number of work lanes (its *steady-state* demand, ``ceil(ops /
   ticks)`` of a dense pre-pass) and every lane carries an explicit
   **replica index**.  The compiler re-times ops so no tick exceeds the
@@ -49,6 +49,20 @@ Two lane layouts (``pack=``):
   of the dense layout still holds and the decoded per-replica op
   sequences are identical (see `tests/test_schedule_pack.py`); tick
   indices and ring-slot numbers are layout-private.
+* ``"segmented"`` (default) — segment-specialized packing: the packed
+  tick stream is further partitioned into contiguous **runs** sharing a
+  *phase signature* (which of pb/pf/as appear) and per-run lane widths.
+  The engine compiles one **cond-free** tick body per signature — a
+  phase a run never uses is simply not traced, so no `lax.cond`
+  branch-unification carry copies — and chains the per-run scans inside
+  one jitted epoch runner.  Per-run widths are chosen by a
+  schedule-length-aware cost model (executed lane-slots + per-tick +
+  per-run fixed overhead), recovering the warmup/drain bubbles that cap
+  uniform-width occupancy at ~0.96; in-scan aggregation ticks keep
+  their `lax.cond` only inside the runs that contain them.  Segmenting
+  never re-times anything relative to ``"packed"`` — it is a pure
+  re-grouping of the same tick stream, so the decoded per-replica op
+  sequences are identical to both other layouts.
 """
 from __future__ import annotations
 
@@ -63,7 +77,9 @@ from repro.core.des import RunConfig
 from repro.core.semi_async import sync_epochs
 from repro.data.vertical import batch_ids
 
-PACKS = ("packed", "dense")
+PACKS = ("segmented", "packed", "dense")
+
+PHASES = ("pb", "pf", "as")          # engine within-tick phase order
 
 
 # ---------------------------------------------------------------------------
@@ -135,6 +151,48 @@ class PackedSegment:
     epoch_agg: bool         # aggregate both parties after this segment
 
 
+@dataclass
+class Run:
+    """A contiguous run of ticks sharing one phase signature.
+
+    `sig` lists the phases (subset of PHASES, engine order) that the
+    engine traces for this run — everything else is statically absent,
+    so the run's tick body needs no per-phase `lax.cond`.  `arrays`
+    holds the packed work rows for exactly the phases in `sig`, with
+    this run's own lane widths (ticks inside a run may still have empty
+    lanes, masked elementwise via rep == -1).  `has_agg` keeps the two
+    in-scan aggregation conds (and the agg_a/agg_p flag arrays) only in
+    runs that actually contain aggregation ticks."""
+    sig: Tuple[str, ...]
+    has_agg: bool
+    arrays: Dict[str, np.ndarray]
+
+    @property
+    def n_ticks(self) -> int:
+        for v in self.arrays.values():
+            return int(v.shape[0])
+        return 0
+
+    @property
+    def widths(self) -> Dict[str, int]:
+        return {ph: int(self.arrays[f"{ph}_rep"].shape[1])
+                for ph in self.sig}
+
+
+@dataclass
+class SegmentedSegment:
+    """One epoch's tick program as a chain of signature runs.  Ticks with
+    no work at all are dropped at materialization (they cannot carry
+    aggregation flags: every agg tick contains the op that triggered
+    it), so `n_ticks` counts executed ticks only."""
+    runs: List[Run]
+    epoch_agg: bool
+
+    @property
+    def n_ticks(self) -> int:
+        return sum(r.n_ticks for r in self.runs)
+
+
 _DENSE_KEYS = ("pf_bid", "pf_slot", "pb_bid", "pb_slot", "as_bid",
                "as_eslot", "as_gslot", "as_epoch", "agg_a", "agg_p")
 _PACKED_KEYS = ("pf_rep", "pf_bid", "pf_slot", "pb_rep", "pb_bid",
@@ -152,7 +210,7 @@ class CompiledSchedule:
     n_rep_p: int
     n_epochs: int
     rows: np.ndarray               # (n_bids, B) int32 batch-row table
-    segments: List[Union[Segment, PackedSegment]]
+    segments: List[Union[Segment, PackedSegment, SegmentedSegment]]
     emb_slots: int                 # embedding ring size
     grad_slots: int                # gradient ring size
     staleness: List[int]           # precomputed (compile-time) staleness
@@ -168,10 +226,18 @@ class CompiledSchedule:
 
     @property
     def n_ticks(self) -> int:
+        if self.pack == "segmented":
+            return sum(s.n_ticks for s in self.segments)
         return sum(int(s.agg_a.shape[0]) for s in self.segments)
 
     def n_ops(self) -> Tuple[int, int, int]:
         """Scheduled (p_fwd, p_bwd, a_step) op counts."""
+        if self.pack == "segmented":
+            return tuple(
+                int(sum((r.arrays[f"{ph}_rep"] >= 0).sum()
+                        for s in self.segments for r in s.runs
+                        if ph in r.sig))
+                for ph in ("pf", "pb", "as"))
         key = "rep" if self.pack == "packed" else "bid"
         return tuple(int(sum((getattr(s, f"{ph}_{key}") >= 0).sum()
                              for s in self.segments))
@@ -187,9 +253,22 @@ class CompiledSchedule:
         ticks where that phase has an active lane.  The packed tick runs
         both passive sub-phases under ONE cond (a deliberate
         carry-copy-saving choice), so both passive widths count in any
-        tick where either passive phase is active.  The metric isolates
-        what packing changes: how full the lanes are when a phase DOES
-        run (~55% dense vs ≥90% packed on pubsub logs)."""
+        tick where either passive phase is active.  The segmented engine
+        has no conds at all: every run executes exactly the phases in
+        its signature at its own lane widths, so the denominator is the
+        sum of T_run * sum(widths) over runs.  The metric isolates what
+        packing changes: how full the lanes are when a phase DOES run
+        (~55% dense, ~91% packed, ~95% segmented on pubsub logs at the
+        default objective; ≥98% segmented with width-1 caps pinned —
+        see docs/architecture.md §occupancy for the speed trade)."""
+        if self.pack == "segmented":
+            work = slots = 0
+            for seg in self.segments:
+                for r in seg.runs:
+                    for ph in r.sig:
+                        work += int((r.arrays[f"{ph}_rep"] >= 0).sum())
+                    slots += r.n_ticks * sum(r.widths.values())
+            return work / slots if slots else 0.0
         key = "rep" if self.pack == "packed" else "bid"
         L_pf, L_pb, L_as = self.lane_widths
         work = slots = 0
@@ -209,7 +288,12 @@ class CompiledSchedule:
 
     def padded(self) -> Dict[str, np.ndarray]:
         """Stack segments into (n_segments, T_max, ...) arrays padded with
-        no-op ticks so one jit compilation covers every segment."""
+        no-op ticks so one jit compilation covers every segment.  The
+        segmented layout has no common tick shape — its engine consumes
+        `SegmentedSegment.runs` directly."""
+        if self.pack == "segmented":
+            raise ValueError("padded() is undefined for pack='segmented'; "
+                             "iterate CompiledSchedule.segments[i].runs")
         t_max = max((s.agg_a.shape[0] for s in self.segments), default=0)
         t_max = max(t_max, 1)
 
@@ -315,6 +399,148 @@ def _materialize_packed(ticks: List[dict], widths: Tuple[int, int, int],
         seg.agg_a[t] = tk["agg_a"]
         seg.agg_p[t] = tk["agg_p"]
     return seg
+
+
+# ---------------------------------------------------------------------------
+# segmented partitioning: signature runs with per-run lane widths
+# ---------------------------------------------------------------------------
+# Per-run fixed overhead, in lane-slot units (one slot = one vmapped net
+# pass).  It prices what a run costs beyond its lane-slots — one more
+# scan in the chained epoch runner, one more (signature, widths) body to
+# trace — and so bounds fragmentation: a cut must save at least this
+# many lane-slots to happen, and adjacent sig-runs cheaper merged than
+# apart are merged.  Measured on the synthetic pubsub benchmark: finer
+# partitioning (4 vs 16) lifted width-1 occupancy 0.95 -> 0.98 at equal
+# wall-clock, so the constant sits at the low end.
+_RUN_COST = 4
+
+
+def _tick_counts(ticks: List[dict]) -> np.ndarray:
+    """(T, len(PHASES)) per-tick op counts."""
+    return np.array([[len(tk[ph]) for ph in PHASES] for tk in ticks],
+                    np.int64).reshape(len(ticks), len(PHASES))
+
+
+def _run_slots(counts: np.ndarray, lo: int, hi: int) -> int:
+    """Executed lane-slots of ticks [lo, hi) as ONE run: every tick pays
+    the run's per-phase max widths (its signature's union)."""
+    return (hi - lo) * int(counts[lo:hi].max(axis=0).sum())
+
+
+def _split_run(counts: np.ndarray, lo: int, hi: int,
+               out: List[Tuple[int, int]]) -> None:
+    """Best-split refinement: cut a run in two wherever the two sides'
+    own max widths save more lane-slots than _RUN_COST — this is what
+    peels warmup/drain ramps off the steady-state body.  Prefix/suffix
+    running maxima make each level O(T); an explicit worklist (not
+    recursion) keeps degenerate one-tick peels off the Python stack."""
+    todo = [(lo, hi)]
+    while todo:
+        lo, hi = todo.pop()
+        T = hi - lo
+        if T < 2:
+            out.append((lo, hi))
+            continue
+        seg = counts[lo:hi]
+        pre = np.maximum.accumulate(seg, axis=0)
+        suf = np.maximum.accumulate(seg[::-1], axis=0)[::-1]
+        ks = np.arange(1, T)
+        costs = ks * pre[:-1].sum(axis=1) + (T - ks) * suf[1:].sum(axis=1)
+        k = int(np.argmin(costs))
+        if int(costs[k]) + _RUN_COST < _run_slots(counts, lo, hi):
+            todo.append((lo + k + 1, hi))
+            todo.append((lo, lo + k + 1))
+        else:
+            out.append((lo, hi))
+
+
+def _partition_runs(counts: np.ndarray,
+                    sigs: List[tuple]) -> List[Tuple[int, int]]:
+    """Partition a tick stream into signature runs minimizing
+    lane-slots + _RUN_COST per run: exact-signature boundaries, then a
+    greedy merge fixpoint (absorbs signature alternation that would
+    fragment the chain), then recursive width splitting (recovers
+    ramps inside long equal-signature stretches)."""
+    T = len(sigs)
+    bounds = [0] + [t for t in range(1, T) if sigs[t] != sigs[t - 1]] + [T]
+    runs = list(zip(bounds[:-1], bounds[1:]))
+    merged = True
+    while merged:
+        merged = False
+        out: List[Tuple[int, int]] = []
+        for lo, hi in runs:
+            if out and _run_slots(counts, out[-1][0], hi) < \
+                    _run_slots(counts, *out[-1]) + \
+                    _run_slots(counts, lo, hi) + _RUN_COST:
+                out[-1] = (out[-1][0], hi)
+                merged = True
+            else:
+                out.append((lo, hi))
+        runs = out
+    final: List[Tuple[int, int]] = []
+    for lo, hi in runs:
+        _split_run(counts, lo, hi, final)
+    return final
+
+
+def _live_ticks(ticks: List[dict]) -> List[dict]:
+    """Drop ticks with no work at all — they execute nothing (an agg
+    flag always rides on the tick of the op that triggered it, but keep
+    flagged ticks defensively)."""
+    return [tk for tk in ticks
+            if tk["pb"] or tk["pf"] or tk["as"]
+            or tk["agg_a"] or tk["agg_p"]]
+
+
+def _materialize_run(ticks: List[dict]) -> Run:
+    T = len(ticks)
+    widths = {ph: max((len(tk[ph]) for tk in ticks), default=0)
+              for ph in PHASES}
+    sig = tuple(ph for ph in PHASES if widths[ph] > 0)
+    has_agg = any(tk["agg_a"] or tk["agg_p"] for tk in ticks)
+    arrays: Dict[str, np.ndarray] = {}
+    neg = lambda n: np.full((T, n), -1, np.int32)
+    z = lambda n: np.zeros((T, n), np.int32)
+    for ph in sig:
+        L = widths[ph]
+        arrays[f"{ph}_rep"] = neg(L)
+        arrays[f"{ph}_bid"] = neg(L)
+        if ph == "as":
+            arrays["as_eslot"], arrays["as_gslot"] = z(L), z(L)
+            arrays["as_epoch"] = z(L)
+        else:
+            arrays[f"{ph}_slot"] = z(L)
+    for t, tk in enumerate(ticks):
+        for ph in sig:
+            for j, rep in enumerate(sorted(tk[ph])):
+                arrays[f"{ph}_rep"][t, j] = rep
+                if ph == "as":
+                    bid, es, gs, ep = tk[ph][rep]
+                    arrays["as_bid"][t, j] = bid
+                    arrays["as_eslot"][t, j] = es
+                    arrays["as_gslot"][t, j] = gs
+                    arrays["as_epoch"][t, j] = ep
+                else:
+                    bid, slot = tk[ph][rep]
+                    arrays[f"{ph}_bid"][t, j] = bid
+                    arrays[f"{ph}_slot"][t, j] = slot
+    if has_agg:
+        arrays["agg_a"] = np.array([tk["agg_a"] for tk in ticks], bool)
+        arrays["agg_p"] = np.array([tk["agg_p"] for tk in ticks], bool)
+    return Run(sig=sig, has_agg=has_agg, arrays=arrays)
+
+
+def _materialize_segmented(ticks: List[dict],
+                           epoch_agg: bool) -> SegmentedSegment:
+    keep = _live_ticks(ticks)
+    if not keep:
+        return SegmentedSegment(runs=[], epoch_agg=epoch_agg)
+    counts = _tick_counts(keep)
+    sigs = [tuple(ph for ph in PHASES if tk[ph]) for tk in keep]
+    parts = _partition_runs(counts, sigs)
+    return SegmentedSegment(
+        runs=[_materialize_run(keep[lo:hi]) for lo, hi in parts],
+        epoch_agg=epoch_agg)
 
 
 @dataclass
@@ -503,6 +729,40 @@ def _cap_candidates(low: _Lowered, n_rep_a: int,
             for combo in itertools.product(*per_phase)]
 
 
+def _segmented_cost(low: _Lowered, n_epochs: int,
+                    batch_size: int) -> float:
+    """Modeled execution cost of a capped lowering under segmented
+    execution: executed lane-slots after run partitioning, plus a
+    per-executed-tick fixed charge (scan-step overhead — the full-stack
+    scatter merges, ring addressing, mask math), plus _RUN_COST per run.
+    Unlike the packed objective this is schedule-length-aware on both
+    axes: longer programs pay per-tick, fragmented ones per-run, and
+    warmup/drain ramps are charged at their own (partitioned) widths
+    rather than the steady-state cap.
+
+    The per-tick charge is expressed in lane-slot units.  A lane-slot
+    (one vmapped net pass) scales with the batch size while the fixed
+    per-tick work does not, so the weight grows as batches shrink —
+    calibrated to ~1 lane-slot at the benchmark's B=256 (where it makes
+    the cap search trade a 0.98-occupancy width-1 program for a 1.3x
+    faster width-2 one; see docs/architecture.md §occupancy)."""
+    tick_w = max(1.0, 256.0 / max(batch_size, 1))
+    slots = n_runs = t_total = 0
+    lo = 0
+    for cut, _ in low.cuts[:n_epochs]:
+        keep = _live_ticks(low.tb.slice(lo, cut))
+        lo = max(lo, cut)
+        if not keep:
+            continue
+        counts = _tick_counts(keep)
+        sigs = [tuple(ph for ph in PHASES if tk[ph]) for tk in keep]
+        parts = _partition_runs(counts, sigs)
+        slots += sum(_run_slots(counts, a, b) for a, b in parts)
+        n_runs += len(parts)
+        t_total += len(keep)
+    return slots + _RUN_COST * n_runs + tick_w * t_total
+
+
 _SCHEDULE_MEMO: Dict[tuple, CompiledSchedule] = {}
 _SCHEDULE_MEMO_CAP = 8
 
@@ -522,14 +782,16 @@ def _memo_key(cfg: RunConfig, events, n_rep_a, n_rep_p, n_samples,
 def compile_schedule(cfg: RunConfig, events: List[Tuple], *,
                      n_rep_a: int, n_rep_p: int, n_samples: int,
                      disable_semi_async: bool = False,
-                     pack: str = "packed") -> CompiledSchedule:
+                     pack: str = "segmented") -> CompiledSchedule:
     """Lower an event log into a `CompiledSchedule`.
 
     `pack="dense"` reproduces the legacy one-lane-per-replica layout;
-    `pack="packed"` (default) runs a dense pre-pass to estimate the
-    steady-state per-phase lane demand, then re-lowers the log under that
-    lane budget and emits replica-indexed work rows (see module
-    docstring and docs/architecture.md).
+    `pack="packed"` runs a dense pre-pass to estimate the steady-state
+    per-phase lane demand, then re-lowers the log under that lane
+    budget and emits replica-indexed work rows; `pack="segmented"`
+    (default) additionally partitions the packed tick stream into
+    phase-signature runs with per-run lane widths for the cond-free
+    engine (see module docstring and docs/architecture.md).
 
     Results are memoized on the log content and config (packed mode runs
     up to 1 + |candidates| host lowerings), so repeat replays of the
@@ -545,26 +807,33 @@ def compile_schedule(cfg: RunConfig, events: List[Tuple], *,
     low = _lower(cfg, events, n_rep_a=n_rep_a, n_rep_p=n_rep_p,
                  disable_semi_async=disable_semi_async)
 
-    if pack == "packed":
-        # pick the lane budget minimizing the modeled execution cost:
-        # executed (tick, phase-lane) slots — phases with no active lane
-        # in a tick are cond-skipped by the engine — plus one
-        # lane-equivalent per tick for fixed scan-step overhead (conds,
-        # ring addressing, optimizer bookkeeping).  Ties go to the
-        # shorter program.
+    if pack in ("packed", "segmented"):
+        # pick the lane budget minimizing the modeled execution cost.
+        # packed: executed (tick, phase-lane) slots — phases with no
+        # active lane in a tick are cond-skipped by the engine — plus
+        # one lane-equivalent per tick for fixed scan-step overhead
+        # (conds, ring addressing, optimizer bookkeeping).  segmented:
+        # the run-partitioned cost (`_segmented_cost`), which charges
+        # warmup/drain ramps at their own per-run widths instead of the
+        # steady-state cap.  Ties go to the shorter program.
         best = None
         for caps in _cap_candidates(low, n_rep_a, n_rep_p):
             cand = _lower(cfg, events, n_rep_a=n_rep_a, n_rep_p=n_rep_p,
                           disable_semi_async=disable_semi_async, caps=caps)
             T = len(cand.tb.ticks)
-            # the engine runs both passive sub-phases under one cond, so
-            # their widths execute whenever either has work
-            passive = sum(1 for tk in cand.tb.ticks
-                          if tk["pf"] or tk["pb"])
-            active = sum(1 for tk in cand.tb.ticks if tk["as"])
-            executed = (caps["pf"] + caps["pb"]) * passive + \
-                caps["as"] * active
-            cost = (executed + T, T)
+            if pack == "segmented":
+                cost = (_segmented_cost(cand, cfg.n_epochs,
+                                        cfg.batch_size), T)
+            else:
+                # the packed engine runs both passive sub-phases under
+                # one cond, so their widths execute whenever either has
+                # work
+                passive = sum(1 for tk in cand.tb.ticks
+                              if tk["pf"] or tk["pb"])
+                active = sum(1 for tk in cand.tb.ticks if tk["as"])
+                executed = (caps["pf"] + caps["pb"]) * passive + \
+                    caps["as"] * active
+                cost = (executed + T, T)
             if best is None or cost < best[0]:
                 best = (cost, caps, cand)
         _, caps, low = best
@@ -575,7 +844,9 @@ def compile_schedule(cfg: RunConfig, events: List[Tuple], *,
     segments, lo = [], 0
     for cut, epoch_agg in low.cuts[:cfg.n_epochs]:
         ticks = low.tb.slice(lo, cut)
-        if pack == "packed":
+        if pack == "segmented":
+            segments.append(_materialize_segmented(ticks, epoch_agg))
+        elif pack == "packed":
             segments.append(_materialize_packed(ticks, widths, epoch_agg))
         else:
             segments.append(_materialize_dense(ticks, n_rep_a, n_rep_p,

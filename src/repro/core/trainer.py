@@ -157,14 +157,16 @@ class VFLTrainer:
 
     # ------------------------------------------------------------------
     def replay(self, sim: SimResult, *, eval_every_epoch: bool = True,
-               engine: str = "compiled", pack: str = "packed"
+               engine: str = "compiled", pack: str = "segmented"
                ) -> TrainResult:
         """Execute the event log.  `engine="compiled"` (default) runs the
         jitted scan engine; `engine="event"` runs the legacy per-event
         loop (reference semantics, used for parity testing).  `pack`
-        selects the compiled engine's lane layout: "packed" (default,
-        dense work rows + replica-index gather/scatter) or "dense" (the
-        legacy one-lane-per-replica layout, kept for parity/benchmark
+        selects the compiled engine's lane layout: "segmented" (default,
+        phase-signature runs executed by cond-free per-signature tick
+        bodies with fused flat optimizer updates), "packed" (uniform
+        work-row lanes, the PR 2 baseline) or "dense" (the legacy
+        one-lane-per-replica layout, kept for parity/benchmark
         baselines)."""
         if engine not in ENGINES:
             raise ValueError(f"engine {engine!r} not in {ENGINES}")
@@ -176,7 +178,7 @@ class VFLTrainer:
     # ------------------------------------------------------------------
     def _replay_compiled(self, sim: SimResult, *,
                          eval_every_epoch: bool = True,
-                         pack: str = "packed") -> TrainResult:
+                         pack: str = "segmented") -> TrainResult:
         cfg = self.cfg
         sched = compile_schedule(
             cfg, sim.events, n_rep_a=self.n_rep_a, n_rep_p=self.n_rep_p,

@@ -18,8 +18,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _cut_layer_kernel(x_ref, w_ref, b_ref, n_ref, o_ref, acc,
-                      *, n_k: int, clip: float, sigma: float):
+def _cut_layer_kernel(*refs, n_k: int, clip: float, sigma: float,
+                      with_residual: bool):
+    if with_residual:
+        x_ref, w_ref, b_ref, n_ref, r_ref, o_ref, acc = refs
+    else:
+        x_ref, w_ref, b_ref, n_ref, o_ref, acc = refs
+        r_ref = None
     kj = pl.program_id(1)
 
     @pl.when(kj == 0)
@@ -32,6 +37,8 @@ def _cut_layer_kernel(x_ref, w_ref, b_ref, n_ref, o_ref, acc,
     @pl.when(kj == n_k - 1)
     def _epilogue():
         y = jnp.tanh(acc[...] + b_ref[...].astype(jnp.float32))
+        if r_ref is not None:           # residual enters BEFORE the clip
+            y = y + r_ref[...].astype(jnp.float32)
         norm = jnp.sqrt(jnp.sum(y * y, axis=-1, keepdims=True))
         y = y * jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
         y = y + sigma * n_ref[...].astype(jnp.float32)
@@ -49,12 +56,19 @@ def _clamp_block(dim: int, block: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=("clip", "sigma", "block_m",
                                              "block_k", "interpret"))
-def cut_layer_pallas(x, w, b, noise, *, clip: float, sigma: float,
-                     block_m: int = 128, block_k: int = 512,
+def cut_layer_pallas(x, w, b, noise, residual=None, *, clip: float,
+                     sigma: float, block_m: int = 128, block_k: int = 512,
                      interpret: bool = None):
     """interpret=None auto-selects: compiled on TPU, interpreter off-TPU
     (Mosaic does not lower on host platforms); REPRO_PALLAS_INTERPRET
-    overrides either way."""
+    overrides either way.
+
+    `residual` (optional, (M, N)) is the skip input of the residual
+    ("large model") bottom variant: added to the tanh output in the
+    epilogue, before the L2 clip, so the fused publish still never
+    materializes a pre-noise embedding in HBM.  It rides the same
+    (block_m, N) blocking as the noise — the full embedding row is
+    already VMEM-resident for the row-wise clip."""
     if interpret is None:
         from repro.kernels import default_interpret
         interpret = default_interpret()
@@ -63,18 +77,24 @@ def cut_layer_pallas(x, w, b, noise, *, clip: float, sigma: float,
     block_m = _clamp_block(M, block_m)
     block_k = _clamp_block(K, block_k)
     n_k = K // block_k
+    row_spec = pl.BlockSpec((block_m, N), lambda i, j: (i, 0))
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j: (i, j)),
+        pl.BlockSpec((block_k, N), lambda i, j: (j, 0)),
+        pl.BlockSpec((N,), lambda i, j: (0,)),
+        row_spec,
+    ]
+    args = (x, w, b, noise)
+    if residual is not None:
+        in_specs.append(row_spec)
+        args = args + (residual,)
     return pl.pallas_call(
         functools.partial(_cut_layer_kernel, n_k=n_k, clip=clip,
-                          sigma=sigma),
+                          sigma=sigma, with_residual=residual is not None),
         grid=(M // block_m, n_k),
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j: (i, j)),
-            pl.BlockSpec((block_k, N), lambda i, j: (j, 0)),
-            pl.BlockSpec((N,), lambda i, j: (0,)),
-            pl.BlockSpec((block_m, N), lambda i, j: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_m, N), lambda i, j: (i, 0)),
+        in_specs=in_specs,
+        out_specs=row_spec,
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, N), jnp.float32)],
         interpret=interpret,
-    )(x, w, b, noise)
+    )(*args)

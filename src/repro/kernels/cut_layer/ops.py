@@ -22,11 +22,12 @@ from repro.kernels.cut_layer.kernel import cut_layer_pallas
 
 
 def cut_layer(x, w, b, *, clip: float, sigma: float, key=None, noise=None,
-              use_pallas: bool = False):
-    """Fused projection + tanh + L2 clip + Gaussian DP noise.
+              residual=None, use_pallas: bool = False):
+    """Fused projection + tanh [+ residual] + L2 clip + Gaussian DP noise.
 
     Either `noise` (standard normal, shape (M, N)) or a PRNG `key` must be
-    given when sigma > 0.
+    given when sigma > 0.  `residual` ((M, N), optional) is the skip input
+    of the residual "large model" bottom variant, added before the clip.
     """
     if noise is None:
         if sigma > 0.0:
@@ -37,6 +38,7 @@ def cut_layer(x, w, b, *, clip: float, sigma: float, key=None, noise=None,
             noise = jnp.zeros((x.shape[0], w.shape[1]), x.dtype)
     if use_pallas:
         # the kernel clamps block sizes to divisors of (M, K) itself
-        return cut_layer_pallas(x, w, b, noise, clip=clip, sigma=sigma,
-                                interpret=default_interpret())
-    return cut_layer_ref(x, w, b, noise, clip=clip, sigma=sigma)
+        return cut_layer_pallas(x, w, b, noise, residual, clip=clip,
+                                sigma=sigma, interpret=default_interpret())
+    return cut_layer_ref(x, w, b, noise, clip=clip, sigma=sigma,
+                         residual=residual)

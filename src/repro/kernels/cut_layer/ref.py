@@ -11,13 +11,20 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def cut_layer_ref(x, w, b, noise, *, clip: float, sigma: float):
-    """x: (M,K); w: (K,N); b: (N,); noise: (M,N) standard normal.
+def cut_layer_ref(x, w, b, noise, *, clip: float, sigma: float,
+                  residual=None):
+    """x: (M,K); w: (K,N); b: (N,); noise: (M,N) standard normal;
+    residual: optional (M,N) skip input added after the tanh (the
+    "large model" residual bottom variant, where the cut layer keeps
+    its block's skip connection).
 
-    y = tanh(x @ w + b);  y *= min(1, clip/||y||2) rowwise;  y += sigma*noise
+    y = tanh(x @ w + b) [+ residual];
+    y *= min(1, clip/||y||2) rowwise;  y += sigma*noise
     """
     y = jnp.tanh(x.astype(jnp.float32) @ w.astype(jnp.float32)
                  + b.astype(jnp.float32))
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
     norm = jnp.linalg.norm(y, axis=-1, keepdims=True)
     y = y * jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
     y = y + sigma * noise.astype(jnp.float32)

@@ -65,30 +65,27 @@ def publish_embedding(theta_p, x_p, noise: Optional[jnp.ndarray] = None, *,
                       ) -> jnp.ndarray:
     """Passive forward fused with the DP publish transform (device-resident).
 
-    The last bottom layer IS the cut layer, so the non-residual path routes
+    The last bottom layer IS the cut layer, so both bottom variants route
     projection+tanh+L2-clip+noise through the fused `cut_layer` op (Pallas
     kernel on TPU, jnp reference elsewhere) and the pre-noise embedding
-    never leaves the kernel.  The residual variant adds a skip connection
-    after the tanh, which the fused kernel does not model — it falls back
-    to a full forward plus an (equally device-resident) jnp clip/noise."""
+    never leaves the kernel.  The residual ("large model") variant keeps
+    the cut layer's skip connection by feeding the hidden activation to
+    the kernel's residual input; only when the cut layer's shapes make the
+    skip inapplicable (emb_dim != hidden width — `bottom_forward` skips it
+    there too) does it fall back to a plain projection."""
     if not (sigma > 0.0 or math.isfinite(clip)):
         return bottom_forward(theta_p, x_p, resnet)
     if sigma > 0.0:
         assert noise is not None, "need noise (std normal) when sigma > 0"
-    if resnet:
-        z = bottom_forward(theta_p, x_p, resnet)
-        nrm = jnp.linalg.norm(z, axis=-1, keepdims=True)
-        z = z * jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12))
-        if sigma > 0.0:
-            z = z + sigma * noise.astype(z.dtype)
-        return z
     from repro.kernels.cut_layer.ops import cut_layer
     h = hidden_forward(theta_p, x_p, resnet)
     last = theta_p["layers"][-1]
     if noise is None:
         noise = jnp.zeros(h.shape[:-1] + (last["w"].shape[1],), h.dtype)
+    residual = h if resnet and h.shape[-1] == last["w"].shape[1] else None
     return cut_layer(h, last["w"], last["b"], clip=clip, sigma=sigma,
-                     noise=noise, use_pallas=use_pallas)
+                     noise=noise, residual=residual,
+                     use_pallas=use_pallas)
 
 
 def init_top(key, *, emb_dim: int = EMB_DIM, hidden: int = 64) -> Dict:

@@ -10,6 +10,7 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class Optimizer(NamedTuple):
@@ -99,16 +100,85 @@ def unstack_states(stack, n: int):
     return [jax.tree.map(lambda x: x[i], stack) for i in range(n)]
 
 
-def masked_replica_update(opt: Optimizer, grads, state, params, mask):
+def _flatten_lanes(tree):
+    """Flatten each lane's pytree into one contiguous f32 row: a tree with
+    leaves (L, ...) becomes an (L, total) matrix plus an `unflatten`
+    closure mapping such a matrix back to the original structure.  Leaf
+    offsets are computed once at trace time from the static shapes."""
+    leaves, treedef = jax.tree.flatten(tree)
+    sizes = [int(np.prod(l.shape[1:])) for l in leaves]
+    vec = jnp.concatenate(
+        [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves],
+        axis=1)
+    offs = np.cumsum([0] + sizes)
+
+    def unflatten(v):
+        outs = [v[:, o:o + s].reshape(l.shape)
+                for l, o, s in zip(leaves, offs, sizes)]
+        return jax.tree.unflatten(treedef, outs)
+
+    return vec, unflatten
+
+
+def _flat_lane_step(opt: Optimizer, grads, state, params):
+    """One optimizer step vmapped across the lane axis, with every lane's
+    params/grads/moments flattened into ONE contiguous f32 vector.
+
+    Single-leaf trees turn each of `opt.update`'s tree.maps into a single
+    fused elementwise op over one buffer, so SGD/momentum/Adam execute as
+    a handful of ops instead of ~2L per-leaf dispatches.  Only the update
+    itself is flat — the carry keeps its pytree layout (the flat *state*
+    layout regressed on XLA-CPU; see ROADMAP).  State entries mirroring
+    the param tree (mu/nu) flatten alongside; scalar counters (step) pass
+    through.  Falls back to the per-leaf path on non-f32 leaves, where
+    concatenation would silently change the update dtype."""
+    def per_leaf(g, s, p):
+        ups, s2 = opt.update(g, s, p)
+        return apply_updates(p, ups), s2
+
+    if any(l.dtype != jnp.float32
+           for l in jax.tree.leaves(params) + jax.tree.leaves(grads)):
+        return jax.vmap(per_leaf)(grads, state, params)
+
+    p_vec, unflatten_p = _flatten_lanes(params)
+    g_vec, _ = _flatten_lanes(grads)
+    pdef = jax.tree.structure(params)
+    s_flat, s_unfl = {}, {}
+    for k, v in state.items():
+        if jax.tree.structure(v) == pdef:
+            s_flat[k], s_unfl[k] = _flatten_lanes(v)
+        else:
+            s_flat[k] = v                      # e.g. the step counter
+
+    def one(g, s, p):
+        ups, s2 = opt.update(
+            {"_": g},
+            {k: ({"_": v} if k in s_unfl else v) for k, v in s.items()},
+            {"_": p})
+        return p + ups["_"], {k: (v["_"] if k in s_unfl else v)
+                              for k, v in s2.items()}
+
+    new_vec, new_flat = jax.vmap(one)(g_vec, s_flat, p_vec)
+    new_state = {k: (s_unfl[k](v) if k in s_unfl else v)
+                 for k, v in new_flat.items()}
+    return unflatten_p(new_vec), new_state
+
+
+def masked_replica_update(opt: Optimizer, grads, state, params, mask, *,
+                          flat: bool = False):
     """One optimizer step vmapped across the replica axis, applied only on
     lanes where `mask` is True (no-op lanes keep params AND state, so their
     Adam step counters do not advance — identical to the event replay,
-    where idle replicas simply do not step)."""
+    where idle replicas simply do not step).  `flat=True` routes the step
+    through the fused flat-vector path (`_flat_lane_step`)."""
     def one(g, s, p):
         ups, s2 = opt.update(g, s, p)
         return apply_updates(p, ups), s2
 
-    new_params, new_state = jax.vmap(one)(grads, state, params)
+    if flat:
+        new_params, new_state = _flat_lane_step(opt, grads, state, params)
+    else:
+        new_params, new_state = jax.vmap(one)(grads, state, params)
 
     def sel(new, old):
         m = mask.reshape(mask.shape + (1,) * (old.ndim - 1))
@@ -148,13 +218,15 @@ def scatter_replicas(stack, lanes, rep, mask):
     return jax.tree.map(merge, stack, lanes)
 
 
-def packed_replica_update(opt: Optimizer, grads, state, params, rep, mask):
+def packed_replica_update(opt: Optimizer, grads, state, params, rep, mask,
+                          *, flat: bool = False):
     """One optimizer step on packed work lanes: gather each lane's replica
     params/state by index, step vmapped across lanes, scatter the results
     back by replica index.  Replicas not referenced by any valid lane keep
     params AND state (their Adam step counters do not advance) — identical
     to `masked_replica_update` on the dense layout, but executing only
-    len(rep) lanes instead of the full replica stack."""
+    len(rep) lanes instead of the full replica stack.  `flat=True` routes
+    the step through the fused flat-vector path (`_flat_lane_step`)."""
     idx = jnp.maximum(rep, 0)
     p_l = gather_replicas(params, idx)
     s_l = gather_replicas(state, idx)
@@ -163,7 +235,10 @@ def packed_replica_update(opt: Optimizer, grads, state, params, rep, mask):
         ups, s2 = opt.update(g, s, p)
         return apply_updates(p, ups), s2
 
-    new_p, new_s = jax.vmap(one)(grads, s_l, p_l)
+    if flat:
+        new_p, new_s = _flat_lane_step(opt, grads, s_l, p_l)
+    else:
+        new_p, new_s = jax.vmap(one)(grads, s_l, p_l)
     return (scatter_replicas(params, new_p, rep, mask),
             scatter_replicas(state, new_s, rep, mask))
 

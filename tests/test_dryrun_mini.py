@@ -53,6 +53,8 @@ with mesh:
                      out_shardings=(None, c_shard))
         compiled = fn.lower(params_shapes, specs, cache_shapes).compile()
 ca = compiled.cost_analysis()
+if isinstance(ca, (list, tuple)):      # jax<=0.4.x returns [dict]
+    ca = ca[0] if ca else {}
 print(json.dumps({"ok": True, "flops": float(dict(ca).get("flops", 0))}))
 """
 

@@ -38,7 +38,7 @@ def _setup(method, n_epochs=2, **kw):
 
 @pytest.mark.parametrize("method", METHODS)
 def test_compiled_matches_event_engine(method):
-    """Same seed, same log => identical convergence semantics (packed
+    """Same seed, same log => identical convergence semantics (segmented
     lane layout, the default)."""
     cfg, sim, mk = _setup(method)
     res_e = mk().replay(sim, engine="event")
@@ -50,6 +50,22 @@ def test_compiled_matches_event_engine(method):
     assert abs(res_c.final_metric - res_e.final_metric) < 5e-3
     assert res_c.staleness_mean == res_e.staleness_mean
     assert res_c.n_updates == res_e.n_updates
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_segmented_matches_packed_layout(method):
+    """The segmented run chain is a pure re-grouping of the packed tick
+    stream executed by cond-free bodies: same per-op math on the same
+    inputs, so losses and metrics agree to float tolerance."""
+    cfg, sim, mk = _setup(method)
+    res_p = mk().replay(sim, engine="compiled", pack="packed")
+    res_s = mk().replay(sim, engine="compiled", pack="segmented")
+    np.testing.assert_allclose(res_s.losses, res_p.losses,
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(res_s.history, res_p.history,
+                               rtol=1e-5, atol=1e-6)
+    assert res_s.staleness_mean == res_p.staleness_mean
+    assert res_s.n_updates == res_p.n_updates
 
 
 @pytest.mark.parametrize("method", METHODS)
@@ -117,6 +133,31 @@ def test_publish_embedding_matches_cut_layer_ref():
                                rtol=1e-5, atol=1e-6)
 
 
+def test_publish_embedding_resnet_matches_residual_cut_layer():
+    """The residual ("large model") publish routes through the fused
+    cut-layer op with the hidden activation as the kernel's residual
+    input, and equals the unfused full forward + clip + noise."""
+    key = jax.random.PRNGKey(5)
+    kx, kp, kn = jax.random.split(key, 3)
+    theta = tabular.init_bottom(kp, 12, depth=4, width=16, emb_dim=16)
+    x = jax.random.normal(kx, (40, 12))
+    noise = jax.random.normal(kn, (40, 16))
+    got = tabular.publish_embedding(theta, x, noise, clip=0.8, sigma=0.3,
+                                    resnet=True)
+    h = tabular.hidden_forward(theta, x, resnet=True)
+    last = theta["layers"][-1]
+    want = cut_layer_ref(h, last["w"], last["b"], noise, clip=0.8,
+                         sigma=0.3, residual=h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    z = tabular.bottom_forward(theta, x, resnet=True)
+    nrm = np.linalg.norm(np.asarray(z), axis=-1, keepdims=True)
+    unfused = np.asarray(z) * np.minimum(1.0, 0.8 / np.maximum(nrm, 1e-12)) \
+        + 0.3 * np.asarray(noise)
+    np.testing.assert_allclose(np.asarray(got), unfused, rtol=1e-5,
+                               atol=1e-5)
+
+
 def test_publish_embedding_dp_semantics():
     """Clip bound respected pre-noise; noise scale matches sigma."""
     key = jax.random.PRNGKey(4)
@@ -142,15 +183,61 @@ def test_publish_embedding_dp_semantics():
         np.asarray(tabular.passive_forward(theta, x)), rtol=1e-6)
 
 
-def test_compiled_engine_dp_runs_and_degrades():
+@pytest.mark.parametrize("pack", ["packed", "segmented"])
+def test_compiled_engine_dp_runs_and_degrades(pack):
     """Device-resident DP in the compiled engine: sigma>0 runs end-to-end
-    and heavy noise does not beat the clean run."""
+    and heavy noise does not beat the clean run.  (Noise streams differ
+    between engines and between layouts — segmented advances the PRNG
+    key only on publish ticks — so DP parity is semantic, not bitwise;
+    the clip/projection math is pinned bitwise by
+    test_publish_embedding_matches_cut_layer_ref.)"""
     from repro.dp.gdp import GDPConfig
     gdp = GDPConfig(mu=0.05, clip=0.5, minibatch=64, global_batch=64,
                     n_queries=200)
     cfg, sim, _ = _setup("pubsub")
     _, _, mk_noisy = _setup("pubsub", gdp=gdp)
     _, _, mk_clean = _setup("pubsub")
-    noisy = mk_noisy().replay(sim, engine="compiled")
-    clean = mk_clean().replay(sim, engine="compiled")
+    noisy = mk_noisy().replay(sim, engine="compiled", pack=pack)
+    clean = mk_clean().replay(sim, engine="compiled", pack=pack)
     assert noisy.final_metric <= clean.final_metric + 0.02
+
+
+def test_segmented_flat_opt_matches_tree_opt():
+    """End-to-end: the segmented engine with the fused flat optimizer
+    update (`flat_opt=True`, the off-CPU default) produces the same
+    losses as the per-leaf tree update — the carry layout is identical,
+    only the update's internal layout differs."""
+    from repro.core.jit_pipeline import CompiledReplayEngine
+
+    cfg, sim, mk = _setup("pubsub")
+    results = []
+    for flat in (False, True):
+        t = mk()
+        sched = compile_schedule(cfg, sim.events, n_rep_a=t.n_rep_a,
+                                 n_rep_p=t.n_rep_p, n_samples=len(t.y),
+                                 pack="segmented")
+        eng = CompiledReplayEngine(sched, task="classification",
+                                   lr=t.lr, seed=cfg.seed, flat_opt=flat)
+        data = eng.stage_data(t.Xa, t.Xp, t.y)
+        d_emb = t.theta_p[0]["layers"][-1]["b"].shape[0]
+        state = eng.init_state(t.theta_a, t.opt_a, t.theta_p, t.opt_p,
+                               d_emb)
+        for e in range(cfg.n_epochs):
+            state = eng.run_segment(state, e, data)
+        results.append(eng.finish(state)[-1])
+    np.testing.assert_allclose(results[1], results[0], rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_segmented_dp_is_deterministic():
+    """Same seed, same log => bit-identical DP losses on the segmented
+    engine (the scan-carry PRNG key advances deterministically per
+    publish tick)."""
+    from repro.dp.gdp import GDPConfig
+    gdp = GDPConfig(mu=0.05, clip=0.5, minibatch=64, global_batch=64,
+                    n_queries=200)
+    cfg, sim, mk = _setup("pubsub", gdp=gdp)
+    a = mk().replay(sim, engine="compiled", pack="segmented")
+    b = mk().replay(sim, engine="compiled", pack="segmented")
+    assert a.losses == b.losses
+    assert a.final_metric == b.final_metric

@@ -141,6 +141,27 @@ def test_cut_layer(M, K, N, sigma):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
 
 
+@pytest.mark.parametrize("M,K,N", [(16, 32, 8), (64, 96, 48),
+                                   (128, 64, 128)])
+@pytest.mark.parametrize("sigma", [0.0, 0.5])
+def test_cut_layer_residual(M, K, N, sigma):
+    """Residual ("large model") variant: the skip input is added after
+    the tanh, before the L2 clip — kernel vs ref in interpret mode."""
+    ks = keys(5, 9)
+    x = jax.random.normal(ks[0], (M, K))
+    w = jax.random.normal(ks[1], (K, N)) * 0.1
+    b = jax.random.normal(ks[2], (N,)) * 0.1
+    nz = jax.random.normal(ks[3], (M, N))
+    r = jax.random.normal(ks[4], (M, N))
+    ref = cut_layer_ref(x, w, b, nz, clip=1.0, sigma=sigma, residual=r)
+    out = cut_layer_pallas(x, w, b, nz, r, clip=1.0, sigma=sigma,
+                           block_m=16, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    # and the residual really participates: differs from the plain path
+    plain = cut_layer_ref(x, w, b, nz, clip=1.0, sigma=sigma)
+    assert np.abs(np.asarray(out) - np.asarray(plain)).max() > 1e-3
+
+
 def test_cut_layer_clip_bounds_norm():
     """Post-clip pre-noise rows have L2 norm <= clip (DP sensitivity)."""
     ks = keys(3, 6)

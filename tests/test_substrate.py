@@ -13,7 +13,10 @@ from repro.data.vertical import (batch_ids, psi_align, vertical_split)
 from repro.dp.gdp import (GDPConfig, compose_mu, mu_to_epsilon_delta,
                           noise_sigma)
 from repro.optim.optimizers import (adam, apply_updates,
-                                    clip_by_global_norm, sgd)
+                                    clip_by_global_norm,
+                                    masked_replica_update,
+                                    packed_replica_update, sgd,
+                                    stack_states)
 from repro.optim.schedules import constant, linear_warmup_cosine
 
 
@@ -80,6 +83,41 @@ def test_clip_by_global_norm():
     clipped, gn = clip_by_global_norm(g, 1.0)
     assert float(gn) == pytest.approx(6.0)
     assert np.linalg.norm(np.asarray(clipped["a"])) == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("opt_name", ["adam", "sgd", "momentum"])
+def test_flat_lane_step_matches_per_leaf(opt_name):
+    """The fused flat update path (`flat=True`: per-lane pytrees
+    flattened to one contiguous f32 vector, optimizer stepped as
+    single-leaf trees) is bit-compatible with the per-leaf path for
+    SGD/momentum/Adam, on both the packed (gather/scatter by replica
+    index) and masked (dense) updates — including the no-op lanes'
+    untouched params and step counters.  This is the CPU-side parity
+    pin for a path whose *default* is on only off-CPU."""
+    from repro.models import tabular
+    opt = {"adam": adam(1e-2), "sgd": sgd(1e-2),
+           "momentum": sgd(1e-2, momentum=0.9)}[opt_name]
+    reps = [tabular.init_bottom(k, 12, depth=3, width=16, emb_dim=8)
+            for k in jax.random.split(jax.random.PRNGKey(0), 4)]
+    stack = stack_states(reps)
+    st0 = stack_states([opt.init(t) for t in reps])
+
+    g_l = jax.tree.map(lambda x: x[:2] * 0.1 + 1.0, stack)   # 2 lanes
+    rep = jnp.array([2, 0])
+    mask = jnp.array([True, False])                          # lane 1 idle
+    a = packed_replica_update(opt, g_l, st0, stack, rep, mask, flat=False)
+    b = packed_replica_update(opt, g_l, st0, stack, rep, mask, flat=True)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-6, atol=1e-7)
+
+    g_m = jax.tree.map(lambda x: x * 0.1 + 1.0, stack)
+    m = jnp.array([True, False, True, False])
+    a = masked_replica_update(opt, g_m, st0, stack, m, flat=False)
+    b = masked_replica_update(opt, g_m, st0, stack, m, flat=True)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-6, atol=1e-7)
 
 
 def test_schedules():
