@@ -4,10 +4,11 @@ DP planning algorithm, w/o the semi-async interval (Delta T), w/o PubSub
 under a heterogeneous, jittery profile so the mechanisms matter."""
 from __future__ import annotations
 
-from repro.core.runtime import ExperimentConfig, run_experiment
+from repro.api import ExperimentConfig
+
 from repro.data.synthetic import DATASETS
 
-from benchmarks.common import EPOCHS, SCALE, SEED, emit
+from benchmarks.common import EPOCHS, SCALE, SEED, emit, run_point
 
 VARIANTS = {
     "all": {},
@@ -29,7 +30,7 @@ def run() -> None:
                         cores_a=40, cores_p=24, jitter=0.25,
                         use_planner=True, seed=SEED)
             base.update(kw)
-            r = run_experiment(ExperimentConfig(**base))
+            r = run_point(ExperimentConfig(**base))
             emit(f"table4/{ds}/{name}", r["sim_s_per_epoch"] * 1e6,
                  f"{r['metric']}={r['final']:.4f};sim_s={r['sim_s']:.2f};"
                  f"util={r['cpu_util']*100:.1f}%")

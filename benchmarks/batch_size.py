@@ -1,16 +1,16 @@
 """Paper Table 3: effect of batch size (w_a = w_p = 8)."""
 from __future__ import annotations
 
-from repro.core.runtime import ExperimentConfig, run_experiment
+from repro.api import ExperimentConfig
 
-from benchmarks.common import EPOCHS, SCALE, SEED, emit
+from benchmarks.common import EPOCHS, SCALE, SEED, emit, run_point
 
 BATCHES = [16, 32, 64, 128, 256, 512, 1024]
 
 
 def run() -> None:
     for B in BATCHES:
-        r = run_experiment(ExperimentConfig(
+        r = run_point(ExperimentConfig(
             method="pubsub", dataset="synthetic",
             scale=max(SCALE * 0.1, 0.002), n_epochs=EPOCHS,
             batch_size=B, w_a=8, w_p=8, seed=SEED))

@@ -1,8 +1,18 @@
-"""Shared benchmark helpers: CSV emission + scaled defaults.
+"""Shared benchmark helpers: CSV emission, scaled defaults, and the
+Session-backed experiment runner.
 
 Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
 contract) where `us_per_call` is the simulated per-iteration latency in
 microseconds and `derived` carries the table's headline quantity.
+
+Benchmarks run experiment points through `run_point` (the Session API
+with structural program reuse): points sharing a compiled shape —
+repeated methods across datasets of one shape, DP grids, seed repeats —
+pay data prep + DES + schedule lowering + XLA tracing once per shape
+instead of once per point.  `run_point` returns a
+`repro.api.RunResult`, which supports the legacy `r["key"]` dict access
+plus `r.train` (the TrainResult, e.g. `epochs_to_target`) and
+`r.wall_s` / `r.compile_cache_hit`.
 """
 from __future__ import annotations
 
@@ -11,10 +21,19 @@ import sys
 import time
 from typing import Iterable, List
 
+from repro.api import ExperimentConfig, RunResult, Session
+
 # dataset scale for benchmarks (1.0 = paper-size; CI default small)
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.05"))
 EPOCHS = int(os.environ.get("REPRO_BENCH_EPOCHS", "5"))
 SEED = int(os.environ.get("REPRO_BENCH_SEED", "0"))
+
+
+def run_point(cfg: ExperimentConfig, *, reuse: str = "structural"
+              ) -> RunResult:
+    """One sweep point through the Session lifecycle, reusing any
+    already-compiled same-shape program."""
+    return Session(cfg, reuse=reuse).run()
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

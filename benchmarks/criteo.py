@@ -8,9 +8,9 @@ utilization, waiting, comm.
 """
 from __future__ import annotations
 
-from repro.core.runtime import ExperimentConfig, run_experiment
+from repro.api import ExperimentConfig
 
-from benchmarks.common import EPOCHS, SCALE, SEED, emit
+from benchmarks.common import EPOCHS, SCALE, SEED, emit, run_point
 
 METHODS = ("vfl", "vfl_ps", "avfl", "avfl_ps", "pubsub")
 
@@ -18,7 +18,7 @@ METHODS = ("vfl", "vfl_ps", "avfl", "avfl_ps", "pubsub")
 def run() -> None:
     scale = max(SCALE * 0.01, 5e-4)           # criteo is 4.5B rows
     for m in METHODS:
-        r = run_experiment(ExperimentConfig(
+        r = run_point(ExperimentConfig(
             method=m, dataset="criteo", scale=scale, n_epochs=EPOCHS,
             batch_size=64, w_a=8, w_p=10, seed=SEED))
         emit(f"table9/criteo/{m}", r["sim_s_per_epoch"] * 1e6,

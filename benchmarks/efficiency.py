@@ -3,10 +3,10 @@ dataset — running time to target accuracy, CPU utilization, waiting time,
 and communication cost, per method (B=256, w_a=8, w_p=10)."""
 from __future__ import annotations
 
-from repro.core.runtime import (ExperimentConfig, run_experiment,
-                                time_to_target)
+from repro.api import ExperimentConfig
+from repro.core.runtime import time_to_target
 
-from benchmarks.common import EPOCHS, SCALE, SEED, emit
+from benchmarks.common import EPOCHS, SCALE, SEED, emit, run_point
 
 METHODS = ("vfl", "vfl_ps", "avfl", "avfl_ps", "pubsub")
 TARGET_AUC = 0.91            # the paper's target accuracy (91%)
@@ -15,7 +15,7 @@ TARGET_AUC = 0.91            # the paper's target accuracy (91%)
 def run() -> None:
     results = {}
     for m in METHODS:
-        r = run_experiment(ExperimentConfig(
+        r = run_point(ExperimentConfig(
             method=m, dataset="synthetic", scale=max(SCALE * 0.1, 0.002),
             n_epochs=EPOCHS, batch_size=256, w_a=8, w_p=10, seed=SEED))
         results[m] = r

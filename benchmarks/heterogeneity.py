@@ -3,9 +3,9 @@
 50:450 .. 200:300), PubSub-VFL vs the strongest baseline."""
 from __future__ import annotations
 
-from repro.core.runtime import ExperimentConfig, run_experiment
+from repro.api import ExperimentConfig
 
-from benchmarks.common import EPOCHS, SCALE, SEED, emit
+from benchmarks.common import EPOCHS, SCALE, SEED, emit, run_point
 
 CORE_SPLITS = [(50, 14), (48, 16), (40, 24), (36, 28)]
 FEATURE_SPLITS = [50, 100, 150, 200]         # active-party features of 500
@@ -14,7 +14,7 @@ FEATURE_SPLITS = [50, 100, 150, 200]         # active-party features of 500
 def run() -> None:
     for ca, cp in CORE_SPLITS:
         for m in ("avfl_ps", "pubsub"):
-            r = run_experiment(ExperimentConfig(
+            r = run_point(ExperimentConfig(
                 method=m, dataset="synthetic", scale=max(SCALE * 0.1,
                                                          0.002),
                 n_epochs=EPOCHS, batch_size=256, w_a=8, w_p=10,
@@ -24,7 +24,7 @@ def run() -> None:
                  f"wait={r['waiting_per_epoch']:.3f}")
     for fa in FEATURE_SPLITS:
         for m in ("avfl_ps", "pubsub"):
-            r = run_experiment(ExperimentConfig(
+            r = run_point(ExperimentConfig(
                 method=m, dataset="synthetic", scale=max(SCALE * 0.1,
                                                          0.002),
                 n_epochs=EPOCHS, batch_size=256, w_a=8, w_p=10,

@@ -11,9 +11,9 @@ import numpy as np
 from repro.core.cost_model import PartyProfile, SystemProfile
 from repro.core.des import RunConfig, simulate
 from repro.core.planner import plan_multiparty
-from repro.core.runtime import ExperimentConfig, run_experiment
+from repro.api import ExperimentConfig
 
-from benchmarks.common import EPOCHS, SCALE, SEED, emit
+from benchmarks.common import EPOCHS, SCALE, SEED, emit, run_point
 
 PARTIES = [2, 4, 6, 8, 10]
 
@@ -24,7 +24,7 @@ def run() -> None:
             # cores split evenly among parties; weakest passive gets the
             # smallest share (simulating heterogeneous orgs)
             per = 64 // n
-            r = run_experiment(ExperimentConfig(
+            r = run_point(ExperimentConfig(
                 method=m, dataset="blog", scale=SCALE,
                 n_epochs=EPOCHS, batch_size=64,
                 cores_a=per + (64 - per * n), cores_p=max(per - 2, 2),

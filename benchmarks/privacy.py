@@ -8,14 +8,15 @@ import math
 import jax
 import numpy as np
 
-from repro.core.runtime import ExperimentConfig, run_experiment
+from repro.api import ExperimentConfig
+
 from repro.data.synthetic import load
 from repro.data.vertical import vertical_split
 from repro.dp.eia import run_eia
 from repro.dp.gdp import GDPConfig, noise_sigma
 from repro.models import tabular
 
-from benchmarks.common import EPOCHS, SCALE, SEED, emit
+from benchmarks.common import EPOCHS, SCALE, SEED, emit, run_point
 
 MUS = [0.1, 0.5, 1.0, 2.0, 4.0, 8.0, 10.0, math.inf]
 
@@ -23,7 +24,7 @@ MUS = [0.1, 0.5, 1.0, 2.0, 4.0, 8.0, 10.0, math.inf]
 def run() -> None:
     for ds in ("bank", "credit"):
         for mu in MUS:
-            r = run_experiment(ExperimentConfig(
+            r = run_point(ExperimentConfig(
                 method="pubsub", dataset=ds, scale=SCALE,
                 n_epochs=EPOCHS, batch_size=64, dp_mu=mu, seed=SEED))
             tag = "inf" if math.isinf(mu) else f"{mu:g}"

@@ -23,6 +23,14 @@ small batch isolates exactly the overhead the segmented cond-free
 bodies remove; the sweep is emitted as `replay/micro_*` rows and the
 `micro` record so the fixed-cost trajectory is tracked across PRs.
 
+A third **sweep-reuse** section measures the Session API's
+compile-once/run-many amortization: a 4-point same-shape seed sweep
+(`api.run_sweep`) against a cold one-shot `run_experiment` of the same
+config.  The cold point pays data prep + DES + schedule lowering + jit
+tracing; warm points reuse the cached program and pay only model init +
+the training scans.  Emitted as `replay/sweep_*` rows and the
+`sweep_reuse` record so the amortization win is tracked across PRs.
+
 Emits the harness CSV on stdout plus a machine-readable
 `BENCH_replay.json` in the working directory.
 
@@ -119,6 +127,54 @@ def _micro(record: dict, best_256: dict, res_256: dict) -> None:
     record["micro"]["B32"] = _micro_row(32, best, res)
 
 
+def _sweep_reuse(record: dict) -> None:
+    """Compile-once/run-many amortization: 4 same-shape seed points via
+    `run_sweep` (one compile, three cache hits) vs a COLD one-shot
+    `run_experiment` on a fresh seed (the per-point price before the
+    Session API).  Warm points skip the DES, schedule lowering and jit
+    tracing but — because the sweep varies the data seed — still pay
+    model init AND per-seed data prep, so `warm_point_s_mean` is an
+    upper bound on the irreducible per-point cost (an lr/dp_mu sweep at
+    fixed seed also shares the prepared data)."""
+    from repro.api import (ExperimentConfig, reset_compile_cache,
+                           run_sweep)
+    from repro.core.runtime import run_experiment
+
+    # B=128: a shape the main/micro sections never touch, so the sweep's
+    # cold point genuinely pays schedule lowering + jit tracing
+    mk_cfg = lambda s: ExperimentConfig(
+        method="pubsub", dataset="synthetic",
+        scale=max(SCALE * 0.4, 0.004), n_epochs=EPOCHS, batch_size=128,
+        w_a=4, w_p=4, seed=s)
+    reset_compile_cache()
+    sw = run_sweep([mk_cfg(s) for s in range(4)])
+    # cold monolith reference AFTER the sweep: reuse="exact" ignores the
+    # structural cache, so seed 99 pays the full per-point pipeline
+    t0 = time.perf_counter()
+    run_experiment(mk_cfg(99))
+    cold_monolith_s = time.perf_counter() - t0
+
+    s = sw.stats
+    warm, cold = s["warm_wall_s_mean"], s["cold_wall_s_mean"]
+    record["sweep_reuse"] = {
+        "n_points": s["n_points"], "compiles": s["compiles"],
+        "cache_hits": s["cache_hits"],
+        "cold_point_s": cold, "warm_point_s_mean": warm,
+        "cold_run_experiment_s": cold_monolith_s,
+        "warm_vs_cold_x": cold / max(warm, 1e-9),
+        "warm_vs_run_experiment_x": cold_monolith_s / max(warm, 1e-9),
+        "point_wall_s": s["point_wall_s"],
+    }
+    emit("replay/sweep_warm_point", warm * 1e6,
+         f"warm_vs_cold_x={cold / max(warm, 1e-9):.2f};"
+         f"warm_vs_run_experiment_x="
+         f"{cold_monolith_s / max(warm, 1e-9):.2f};"
+         f"compiles={s['compiles']};cache_hits={s['cache_hits']}")
+    emit("replay/sweep_cold_point", cold * 1e6,
+         f"run_experiment_s={cold_monolith_s:.2f};"
+         f"sweep_cold_s={cold:.2f}")
+
+
 def run() -> None:
     cfg, sim, mk = _build()
     n_events = len(sim.events)
@@ -166,6 +222,7 @@ def run() -> None:
     }
 
     _micro(record, best, res)
+    _sweep_reuse(record)
 
     with open("BENCH_replay.json", "w") as fh:
         json.dump(record, fh, indent=2)

@@ -1,16 +1,16 @@
 """Paper Table 2: effect of the number of workers (w_a = w_p, B=32)."""
 from __future__ import annotations
 
-from repro.core.runtime import ExperimentConfig, run_experiment
+from repro.api import ExperimentConfig
 
-from benchmarks.common import EPOCHS, SCALE, SEED, emit
+from benchmarks.common import EPOCHS, SCALE, SEED, emit, run_point
 
 WORKERS = [4, 5, 8, 10, 20, 30, 50]
 
 
 def run() -> None:
     for w in WORKERS:
-        r = run_experiment(ExperimentConfig(
+        r = run_point(ExperimentConfig(
             method="pubsub", dataset="synthetic",
             scale=max(SCALE * 0.1, 0.002), n_epochs=EPOCHS,
             batch_size=32, w_a=w, w_p=w, seed=SEED))

@@ -1,7 +1,11 @@
-"""Quickstart: PubSub-VFL vs the four baselines on the Bank dataset.
+"""Quickstart: PubSub-VFL vs the four baselines on the Bank dataset,
+through the staged Session API.
 
 Runs the full pipeline — synthetic data, PSI alignment, DES runtime, real
-JAX training — and prints the paper's headline comparison.
+JAX training — and prints the paper's headline comparison.  Each method
+is one `Session`: `prepare -> plan -> simulate -> compile -> run`, with
+every stage inspectable (the DES artifact is used below to report
+simulated time before training even starts).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,7 +13,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.runtime import ExperimentConfig, run_experiment  # noqa: E402
+from repro.api import ExperimentConfig, Session  # noqa: E402
 
 METHODS = ("vfl", "vfl_ps", "avfl", "avfl_ps", "pubsub")
 
@@ -19,11 +23,13 @@ def main():
           f"{'cpu%':>6s} {'wait/ep':>8s} {'comm MB':>8s}")
     base = None
     for m in METHODS:
-        r = run_experiment(ExperimentConfig(
+        sess = Session(ExperimentConfig(
             method=m, dataset="bank", scale=0.1, n_epochs=5,
             batch_size=64, w_a=8, w_p=10))
+        sim = sess.simulate()         # DES system metrics, pre-training
+        r = sess.run()                # real JAX training
         if base is None:
-            base = r["sim_s"]
+            base = sim.total_time
         print(f"{m:10s} {r['final']:7.4f} {r['sim_s']:8.3f} "
               f"{base / r['sim_s']:7.2f}x {r['cpu_util'] * 100:6.2f} "
               f"{r['waiting_per_epoch']:8.4f} {r['comm_mb']:8.1f}")

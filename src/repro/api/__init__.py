@@ -1,0 +1,24 @@
+"""Public experiment API: the staged Session lifecycle.
+
+    from repro.api import Session, ExperimentConfig, run_sweep
+
+    out = Session(ExperimentConfig(method="pubsub")).run()
+    sweep = run_sweep([ExperimentConfig(seed=s) for s in range(4)])
+
+See `docs/architecture.md` §Session lifecycle.  The legacy
+`repro.core.runtime.run_experiment` is a thin wrapper over
+`Session(cfg).run().metrics`.
+"""
+from repro.api.callbacks import (CheckpointEvery, EarlyStop, EvalEvery,
+                                 History, MetricStream)
+from repro.api.session import (CompiledProgram, ExperimentConfig, Planned,
+                               Prepared, RunResult, Session, build_profile,
+                               compile_stats, reset_compile_cache)
+from repro.api.sweep import SweepResult, run_sweep
+
+__all__ = [
+    "CheckpointEvery", "CompiledProgram", "EarlyStop", "EvalEvery",
+    "ExperimentConfig", "History", "MetricStream", "Planned", "Prepared",
+    "RunResult", "Session", "SweepResult", "build_profile",
+    "compile_stats", "reset_compile_cache", "run_sweep",
+]

@@ -1,0 +1,115 @@
+"""Per-epoch callbacks for the replay loop.
+
+A callback is any callable taking a `core.trainer.EpochContext`; the
+trainer invokes every callback after each completed epoch.  These
+replace the old hardcoded `eval_every_epoch` flag: evaluation cadence,
+early stopping, metric streaming and checkpointing are all user
+composition now.  `ctx.evaluate()` is lazy and cached per epoch, so
+stacking several metric-reading callbacks costs one evaluation.
+
+Typical use with the Session API::
+
+    sess.run(eval_every_epoch=False, callbacks=[
+        EvalEvery(5),
+        EarlyStop(target=0.92, higher_better=True),
+        CheckpointEvery("ckpt.msgpack", every=10),
+    ])
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from repro.core.trainer import EpochContext
+
+
+@dataclass
+class EvalEvery:
+    """Evaluate every `every` epochs (and on the final epoch) and append
+    to the run's history — the custom-cadence replacement for
+    `eval_every_epoch=True` (which is equivalent to `EvalEvery(1)`).
+    A no-op on epochs already in the history (`ctx.in_history`), so
+    composing with `eval_every_epoch=True` never double-appends."""
+    every: int = 1
+
+    def __call__(self, ctx: EpochContext) -> None:
+        if ctx.in_history:
+            return
+        if ctx.epoch % self.every == 0 or ctx.epoch == ctx.n_epochs:
+            ctx.history.append(ctx.evaluate())
+            ctx.in_history = True
+
+
+@dataclass
+class EarlyStop:
+    """Stop the replay once the test metric reaches `target` (with an
+    optional `patience` of consecutive non-improving epochs).  The
+    stopped state is still finishable and checkpoint-resumable.  The
+    patience tracker resets whenever a replay starts from its first
+    epoch, so one instance can be reused across sweep points (a resumed
+    replay, starting at epoch > 1, keeps accumulated state)."""
+    target: Optional[float] = None
+    higher_better: bool = True
+    patience: Optional[int] = None
+    _best: Optional[float] = field(default=None, repr=False)
+    _bad: int = field(default=0, repr=False)
+
+    def __call__(self, ctx: EpochContext) -> None:
+        if ctx.epoch == 1:
+            self._best, self._bad = None, 0
+        m = ctx.evaluate()
+        if self.target is not None:
+            if (m >= self.target) if self.higher_better else \
+                    (m <= self.target):
+                ctx.stop = True
+                return
+        if self.patience is not None:
+            better = self._best is None or \
+                ((m > self._best) if self.higher_better else
+                 (m < self._best))
+            if better:
+                self._best, self._bad = m, 0
+            else:
+                self._bad += 1
+                if self._bad >= self.patience:
+                    ctx.stop = True
+
+
+@dataclass
+class MetricStream:
+    """Stream {epoch, metric} to a sink callable after every epoch —
+    progress bars, experiment trackers, live dashboards."""
+    sink: Callable[[dict], None]
+    evaluate: bool = True
+
+    def __call__(self, ctx: EpochContext) -> None:
+        rec = {"epoch": ctx.epoch, "n_epochs": ctx.n_epochs}
+        if self.evaluate:
+            rec["metric"] = ctx.evaluate()
+        self.sink(rec)
+
+
+@dataclass
+class CheckpointEvery:
+    """Save the replay state every `every` epochs via
+    `checkpoint.store.save_state`; resume with
+    `Session.run(state=engine.load_state(restore_state(path)))`."""
+    path: str
+    every: int = 1
+
+    def __call__(self, ctx: EpochContext) -> None:
+        if ctx.epoch % self.every == 0 or ctx.epoch == ctx.n_epochs:
+            # deferred so `repro.api` imports without msgpack installed
+            from repro.checkpoint.store import save_state
+            save_state(self.path, ctx.state, step=ctx.epoch)
+
+
+@dataclass
+class History:
+    """Collect per-epoch metrics without touching the run's history —
+    e.g. to sample a cadence the result dict should not contain."""
+    records: List[dict] = field(default_factory=list)
+
+    def __call__(self, ctx: EpochContext) -> None:
+        self.records.append({"epoch": ctx.epoch,
+                             "metric": ctx.evaluate()})

@@ -1,0 +1,447 @@
+"""Session API: the staged, compile-once/run-many experiment lifecycle.
+
+PubSub-VFL's headline numbers are sweep-shaped — speedups across
+datasets, worker grids, batch sizes and DP levels — and a sweep point
+shares almost everything with its neighbours.  The Session splits the
+old one-shot `run_experiment` monolith into inspectable stages, each
+returning an immutable artifact and memoized on the session:
+
+    sess = Session(cfg)
+    prep = sess.prepare()     # data load + vertical split + PSI + profile
+    plan = sess.plan()        # Algorithm-2 planning (optional) -> RunConfig
+    sim  = sess.simulate()    # DES -> event log + system metrics
+    prog = sess.compile()     # schedule lowering + replay engine
+    out  = sess.run(seed=..., lr=..., dp_mu=..., callbacks=[...])
+
+`compile()` caches the `(CompiledSchedule, engine)` pair process-wide
+under a **structural key** — method, engine/pack, shapes (n_samples,
+feature dims, batch size, epochs), worker/replica counts, DES timing
+knobs, DP on/off — so sweep points that vary only seed, lr, dp_mu, or
+swap a same-shape dataset reuse the compiled program instead of paying
+data prep + DES + schedule lowering + XLA tracing per point.  The
+hyperparameters themselves (`lr`, DP `clip`/`sigma`) are *runtime
+scalars* of the jitted runners (see `core.jit_pipeline.EngineSpec`), so
+the reuse is a true cache hit, not a retrace.
+
+Two reuse scopes (`Session(cfg, reuse=...)`):
+
+* ``"exact"`` (default) — the cache key includes the config seed, so a
+  cached program is only reused for a config that would have produced
+  the identical DES timetable.  `run_experiment` uses this: its output
+  is bit-equal to the pre-Session monolith.
+* ``"structural"`` — the seed is dropped from the lookup, so any
+  same-shape program is reused and its **timetable is pinned** to the
+  config that first compiled it: a later point varying only the seed
+  trains with its own model init / DP noise / lr but replays the cached
+  event timetable (batch order included).  This is the `run_sweep`
+  default — the DES is a *simulator* of system time, and pinning it
+  across seeds is exactly the "same system, different training run"
+  comparison the sweeps make.
+
+`run()` executes real training through the engine-agnostic
+`ReplayEngine` protocol: a fresh `VFLTrainer` (new param init per seed)
+drives the cached engine, per-epoch callbacks replace the hardcoded
+eval cadence, and `state=` resumes a `checkpoint.store.save_state`d
+mid-training state.
+"""
+from __future__ import annotations
+
+import math
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence
+
+from repro.core.cost_model import PartyProfile, SystemProfile
+from repro.core.des import RunConfig, SimResult, simulate
+from repro.core.engines import (CompiledReplayEngine, EventReplayEngine,
+                                ReplayEngine, replica_counts)
+from repro.core.planner import Plan, plan as run_planner
+from repro.core.schedule import compile_schedule
+from repro.core.trainer import Callback, TrainResult, VFLTrainer
+from repro.data.synthetic import load
+from repro.data.vertical import psi_align, vertical_split
+from repro.dp.gdp import GDPConfig, noise_sigma
+
+
+@dataclass
+class ExperimentConfig:
+    method: str = "pubsub"
+    dataset: str = "bank"
+    scale: float = 0.05              # dataset size multiplier (CI-friendly)
+    n_epochs: int = 5
+    batch_size: int = 256
+    w_a: int = 8
+    w_p: int = 10
+    cores_a: int = 32
+    cores_p: int = 32
+    features_active: Optional[int] = None   # data heterogeneity
+    use_planner: bool = False        # let Algo. 2 pick (w_a, w_p, B)
+    planner_objective: str = "throughput"  # "paper" = literal Eq. 14
+    dp_mu: float = math.inf          # GDP privacy parameter
+    seed: int = 0
+    resnet: bool = False             # "large model" variant (Table 7)
+    depth: int = 10
+    # ablations
+    disable_deadline: bool = False   # T_ddl = 0-like (w/o T_all)
+    disable_semi_async: bool = False # sync every epoch (w/o ΔT)
+    disable_planner: bool = False    # fixed equal workers (w/o DP algo)
+    engine: str = "compiled"         # replay engine: "compiled" | "event"
+    pack: str = "segmented"          # lane layout: "segmented"|"packed"|"dense"
+    t_ddl: float = 10.0
+    dt0: int = 5
+    p: int = 5
+    q: int = 5
+    jitter: float = 0.10
+    lr: float = 1e-3
+
+
+def build_profile(cfg: ExperimentConfig, d_a: int, d_p: int
+                  ) -> SystemProfile:
+    ref = (d_a + d_p) / 2
+    return SystemProfile(
+        active=PartyProfile(cores=cfg.cores_a, feature_dim=d_a,
+                            ref_feature_dim=ref),
+        passive=PartyProfile(cores=cfg.cores_p, feature_dim=d_p,
+                             ref_feature_dim=ref),
+    )
+
+
+# ---------------------------------------------------------------------------
+# stage artifacts
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Prepared:
+    """Stage 1: loaded, vertically split, PSI-aligned data + the system
+    profile fitted to its dimensions."""
+    task: str
+    train_active: object
+    train_passive: object
+    test_active: object
+    test_passive: object
+    profile: SystemProfile
+    n_samples: int
+    d_a: int
+    d_p: int
+
+
+@dataclass(frozen=True)
+class Planned:
+    """Stage 2: the resolved (w_a, w_p, B) — planner output when
+    `use_planner`, the config's literals otherwise — as a DES-ready
+    `RunConfig`."""
+    w_a: int
+    w_p: int
+    batch_size: int
+    n_rep_a: int
+    n_rep_p: int
+    plan: Optional[Plan]
+    run_cfg: RunConfig
+
+
+@dataclass(frozen=True)
+class CompiledProgram:
+    """Stage 4: everything reusable across runs of the same shape — the
+    DES result (the pinned timetable), the lowered schedule, and the
+    replay engine holding the jitted runners and device-staged tick
+    program.  Cached process-wide; treat as frozen."""
+    structural_key: tuple
+    full_key: tuple
+    engine_kind: str
+    planned: Planned
+    sim: SimResult
+    schedule: object                 # CompiledSchedule (compiled engine)
+    engine: ReplayEngine
+    dp_on: bool
+
+
+@dataclass
+class RunResult:
+    """One training run.  `metrics` is exactly the legacy
+    `run_experiment` dict (same keys/values) — new Session-level info
+    lives on the dataclass, not in the dict."""
+    metrics: Dict
+    train: TrainResult
+    compile_cache_hit: bool
+    wall_s: float
+    seed: int
+    lr: float
+    dp_mu: float
+
+    def __getitem__(self, k):
+        return self.metrics[k]
+
+    def get(self, k, default=None):
+        return self.metrics.get(k, default)
+
+
+# ---------------------------------------------------------------------------
+# the process-wide compiled-program + prepared-data caches
+# ---------------------------------------------------------------------------
+_PROGRAMS: "OrderedDict[tuple, CompiledProgram]" = OrderedDict()
+_BY_STRUCTURE: Dict[tuple, tuple] = {}     # structural key -> full key
+_PROGRAM_CAP = 16
+_STATS = {"compiles": 0, "hits": 0, "structural_hits": 0}
+
+# loaded/split/PSI-aligned data, shared across sessions: warm sweep
+# points (and repeat sessions) skip data prep entirely.  Keyed on every
+# input of the data pipeline; the profile is rebuilt per session (it
+# also depends on the core counts).
+_DATA_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_DATA_CAP = 8
+
+
+def compile_stats() -> Dict[str, int]:
+    """Counters of the process-wide compile cache: `compiles` (misses
+    that built a program), `hits` (exact-key reuse), `structural_hits`
+    (same-shape reuse across seeds).  The sweep-reuse acceptance check
+    asserts on these."""
+    return dict(_STATS)
+
+
+def reset_compile_cache() -> None:
+    _PROGRAMS.clear()
+    _BY_STRUCTURE.clear()
+    _DATA_CACHE.clear()
+    for k in _STATS:
+        _STATS[k] = 0
+
+
+class Session:
+    """One experiment configuration, staged.  Stages memoize on the
+    session; `compile()` additionally consults the process-wide program
+    cache (see module docstring for the reuse scopes)."""
+
+    def __init__(self, cfg: ExperimentConfig, *, reuse: str = "exact"):
+        if reuse not in ("exact", "structural"):
+            raise ValueError(f"reuse {reuse!r} not in ('exact', "
+                             f"'structural')")
+        self.cfg = cfg
+        self.reuse = reuse
+        self._prepared: Optional[Prepared] = None
+        self._planned: Optional[Planned] = None
+        self._sim: Optional[SimResult] = None
+        self._program: Optional[CompiledProgram] = None
+        self.compile_cache_hit = False
+
+    # -- stage 1: data + profile ----------------------------------------
+    def prepare(self) -> Prepared:
+        if self._prepared is not None:
+            return self._prepared
+        cfg = self.cfg
+        dkey = (cfg.dataset, cfg.seed, cfg.scale, cfg.features_active)
+        if dkey in _DATA_CACHE:
+            task, a_tr, p_tr, a_te, p_te = _DATA_CACHE[dkey]
+            _DATA_CACHE.move_to_end(dkey)
+        else:
+            ds = load(cfg.dataset, seed=cfg.seed, scale=cfg.scale)
+            tr, te = ds.split(seed=cfg.seed)
+            a_tr, p_tr = vertical_split(
+                tr, seed=cfg.seed, n_features_active=cfg.features_active)
+            a_te, p_te = vertical_split(
+                te, seed=cfg.seed, n_features_active=cfg.features_active)
+            a_tr, p_tr = psi_align(a_tr, p_tr)
+            task = ds.task
+            _DATA_CACHE[dkey] = (task, a_tr, p_tr, a_te, p_te)
+            while len(_DATA_CACHE) > _DATA_CAP:
+                _DATA_CACHE.popitem(last=False)
+        profile = build_profile(cfg, a_tr.X.shape[1], p_tr.X.shape[1])
+        self._prepared = Prepared(
+            task=task, train_active=a_tr, train_passive=p_tr,
+            test_active=a_te, test_passive=p_te, profile=profile,
+            n_samples=a_tr.X.shape[0], d_a=a_tr.X.shape[1],
+            d_p=p_tr.X.shape[1])
+        return self._prepared
+
+    # -- stage 2: planning ----------------------------------------------
+    def plan(self) -> Planned:
+        if self._planned is not None:
+            return self._planned
+        cfg = self.cfg
+        prep = self.prepare()
+        w_a, w_p, B = cfg.w_a, cfg.w_p, cfg.batch_size
+        plan_obj: Optional[Plan] = None
+        if cfg.use_planner and not cfg.disable_planner:
+            plan_obj = run_planner(prep.profile, w_a_range=(2, 16),
+                                   w_p_range=(2, 16),
+                                   objective=cfg.planner_objective)
+            w_a, w_p, B = plan_obj.w_a, plan_obj.w_p, plan_obj.batch_size
+            B = max(min(B, prep.n_samples // 2), 1)
+        run_cfg = RunConfig(
+            method=cfg.method, n_samples=prep.n_samples, batch_size=B,
+            n_epochs=cfg.n_epochs, w_a=w_a, w_p=w_p, profile=prep.profile,
+            p=cfg.p, q=cfg.q,
+            t_ddl=(0.0 if cfg.disable_deadline else cfg.t_ddl),
+            dt0=cfg.dt0, jitter=cfg.jitter, seed=cfg.seed)
+        n_rep_a, n_rep_p = replica_counts(cfg.method, w_a, w_p)
+        self._planned = Planned(w_a=w_a, w_p=w_p, batch_size=B,
+                                n_rep_a=n_rep_a, n_rep_p=n_rep_p,
+                                plan=plan_obj, run_cfg=run_cfg)
+        return self._planned
+
+    # -- stage 3: DES -----------------------------------------------------
+    def simulate(self) -> SimResult:
+        """The discrete-event simulation for THIS config's seed.  When a
+        later `compile()` hits the program cache structurally, the
+        cached program's (pinned) sim is adopted instead and this stage
+        is skipped — call `simulate()` before `compile()` if you need
+        this config's own timetable."""
+        if self._sim is None:
+            self._sim = simulate(self.plan().run_cfg)
+        return self._sim
+
+    # -- compile key ------------------------------------------------------
+    def _dp_on(self) -> bool:
+        return math.isfinite(self.cfg.dp_mu)
+
+    def structural_key(self) -> tuple:
+        """Everything that shapes the compiled program EXCEPT the seed:
+        two configs with equal structural keys lower to schedules and
+        XLA programs of identical shape (the timetables may differ)."""
+        cfg = self.cfg
+        prep = self.prepare()
+        pl = self.plan()
+        return (
+            ("method", cfg.method), ("engine", cfg.engine),
+            ("pack", cfg.pack),
+            ("n", prep.n_samples), ("d_a", prep.d_a), ("d_p", prep.d_p),
+            ("task", prep.task), ("B", pl.batch_size),
+            ("epochs", cfg.n_epochs),
+            ("w_a", pl.w_a), ("w_p", pl.w_p),
+            ("rep_a", pl.n_rep_a), ("rep_p", pl.n_rep_p),
+            ("cores", (cfg.cores_a, cfg.cores_p)),
+            ("des", (cfg.t_ddl, cfg.dt0, cfg.p, cfg.q, cfg.jitter)),
+            ("ablate", (cfg.disable_deadline, cfg.disable_semi_async)),
+            ("model", (cfg.resnet, cfg.depth)),
+            ("dp", self._dp_on()),
+        )
+
+    def compile_key(self) -> tuple:
+        return self.structural_key() + (("seed", self.cfg.seed),)
+
+    # -- stage 4: schedule + engine --------------------------------------
+    def compile(self) -> CompiledProgram:
+        if self._program is not None:
+            return self._program
+        cfg = self.cfg
+        skey = self.structural_key()
+        full = self.compile_key()
+        hit = None
+        if full in _PROGRAMS:
+            hit = full
+            _STATS["hits"] += 1
+        elif self.reuse == "structural" and skey in _BY_STRUCTURE:
+            hit = _BY_STRUCTURE[skey]
+            _STATS["hits"] += 1
+            _STATS["structural_hits"] += 1
+        if hit is not None:
+            self._program = _PROGRAMS[hit]
+            _PROGRAMS.move_to_end(hit)
+            self._sim = self._program.sim
+            self.compile_cache_hit = True
+            return self._program
+
+        pl = self.plan()
+        prep = self.prepare()
+        sim = self.simulate()
+        # default hyper values for the engine; the true per-run values
+        # are runtime scalars passed by run()
+        sigma0 = noise_sigma(self._gdp(cfg.dp_mu, pl)) if self._dp_on() \
+            else 0.0
+        clip0 = 1.0 if self._dp_on() else math.inf
+        schedule = None
+        if cfg.engine == "compiled":
+            schedule = compile_schedule(
+                pl.run_cfg, sim.events, n_rep_a=pl.n_rep_a,
+                n_rep_p=pl.n_rep_p, n_samples=prep.n_samples,
+                disable_semi_async=cfg.disable_semi_async, pack=cfg.pack)
+            engine: ReplayEngine = CompiledReplayEngine(
+                schedule, task=prep.task, resnet=cfg.resnet, clip=clip0,
+                sigma=sigma0, lr=cfg.lr, seed=cfg.seed)
+        else:
+            engine = EventReplayEngine(
+                pl.run_cfg, sim.events, n_rep_a=pl.n_rep_a,
+                n_rep_p=pl.n_rep_p, n_samples=prep.n_samples,
+                task=prep.task, resnet=cfg.resnet, clip=clip0,
+                sigma=sigma0, lr=cfg.lr, seed=cfg.seed,
+                disable_semi_async=cfg.disable_semi_async)
+        program = CompiledProgram(
+            structural_key=skey, full_key=full, engine_kind=cfg.engine,
+            planned=pl, sim=sim, schedule=schedule, engine=engine,
+            dp_on=self._dp_on())
+        _STATS["compiles"] += 1
+        _PROGRAMS[full] = program
+        _BY_STRUCTURE.setdefault(skey, full)
+        while len(_PROGRAMS) > _PROGRAM_CAP:
+            old_key, old = _PROGRAMS.popitem(last=False)
+            if _BY_STRUCTURE.get(old.structural_key) == old_key:
+                del _BY_STRUCTURE[old.structural_key]
+        self._program = program
+        self.compile_cache_hit = False
+        return program
+
+    # -- stage 5: run -----------------------------------------------------
+    def _gdp(self, dp_mu: float, pl: Planned) -> Optional[GDPConfig]:
+        if not math.isfinite(dp_mu):
+            return None
+        return GDPConfig(mu=dp_mu, clip=1.0, minibatch=pl.batch_size,
+                         global_batch=pl.batch_size,
+                         n_queries=pl.run_cfg.n_batches * self.cfg.n_epochs)
+
+    def run(self, *, seed: Optional[int] = None, lr: Optional[float] = None,
+            dp_mu: Optional[float] = None,
+            callbacks: Sequence[Callback] = (),
+            eval_every_epoch: bool = True, state=None) -> RunResult:
+        """Train against the compiled program.  `seed` re-keys the model
+        init and DP noise; `lr` and `dp_mu` override the runtime
+        hyperparameters — none of the three invalidates the compiled
+        program (DP must stay on/off as compiled, since that is
+        structure).  `state` resumes a checkpointed mid-training state
+        (`checkpoint.store.restore_state` + `engine.load_state`)."""
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        prog = self.compile()
+        prep = self.prepare()
+        pl = prog.planned
+        seed = cfg.seed if seed is None else seed
+        lr = cfg.lr if lr is None else lr
+        dp_mu = cfg.dp_mu if dp_mu is None else dp_mu
+        if math.isfinite(dp_mu) != prog.dp_on:
+            raise ValueError(
+                "dp_mu flips DP on/off, which is part of the compiled "
+                "structure — use a Session whose config matches "
+                f"(compiled dp_on={prog.dp_on}, got dp_mu={dp_mu})")
+        trainer = VFLTrainer(
+            pl.run_cfg, prep.train_active, prep.train_passive,
+            prep.test_active, prep.test_passive, prep.task, lr=lr,
+            seed=seed, resnet=cfg.resnet, gdp=self._gdp(dp_mu, pl),
+            depth=cfg.depth, disable_semi_async=cfg.disable_semi_async)
+        res = trainer.replay_with(prog.engine, callbacks=callbacks,
+                                  eval_every_epoch=eval_every_epoch,
+                                  state=state, seed=seed)
+        sim = prog.sim
+        metrics = {
+            "method": cfg.method,
+            "dataset": cfg.dataset,
+            "task": prep.task,
+            "metric": res.metric_name,
+            "final": res.final_metric,
+            "history": res.history,
+            "losses": res.losses,
+            "sim_s": sim.total_time,
+            "sim_s_per_epoch": sim.total_time / max(cfg.n_epochs, 1),
+            "cpu_util": sim.cpu_util,
+            "waiting_per_epoch": sim.waiting_per_epoch,
+            "comm_mb": sim.comm_mb,
+            "staleness": res.staleness_mean,
+            "lane_occupancy": res.lane_occupancy,
+            "drops": sim.stats["drops"],
+            "w_a": sim.stats["w_a"],
+            "w_p": sim.stats["w_p"],
+            "batch_size": pl.batch_size,
+            "plan": (pl.plan.summary() if pl.plan else None),
+        }
+        return RunResult(metrics=metrics, train=res,
+                         compile_cache_hit=self.compile_cache_hit,
+                         wall_s=time.perf_counter() - t0, seed=seed,
+                         lr=lr, dp_mu=dp_mu)

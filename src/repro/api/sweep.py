@@ -1,0 +1,80 @@
+"""`run_sweep`: the compile-once/run-many driver over a list of configs.
+
+Points are executed in order, each through its own `Session` with
+``reuse="structural"`` by default, so every point whose structural key
+matches an earlier one reuses that point's compiled program (schedule +
+jitted engine + pinned DES timetable) and only pays model init + the
+actual training scans.  `SweepResult.stats` exposes the compile-cache
+counters and per-point wall clock, which is how the amortization win is
+asserted in CI and tracked in `BENCH_replay.json`.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.api.session import (ExperimentConfig, RunResult, Session,
+                               compile_stats)
+
+
+@dataclass
+class SweepResult:
+    results: List[RunResult]
+    stats: Dict
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __len__(self):
+        return len(self.results)
+
+    def __getitem__(self, i):
+        return self.results[i]
+
+
+def run_sweep(cfgs: Sequence[ExperimentConfig], *,
+              reuse: str = "structural",
+              callbacks: Sequence = (),
+              eval_every_epoch: bool = True,
+              progress: Optional[Callable[[int, RunResult], None]] = None
+              ) -> SweepResult:
+    """Run every config, grouping compiled programs by structural key.
+
+    Sweep points varying only seed / lr / dp_mu / a same-shape dataset
+    hit the program cache: the sweep compiles once per distinct shape
+    (assert via `stats["compiles"]` / per-point
+    `results[i].compile_cache_hit`).  `callbacks` instances are shared
+    across points — keep per-run state resettable at epoch 1, as the
+    built-ins do, or construct fresh instances per sweep.  Note the
+    structural-reuse
+    semantics: cache-hit points replay the TIMETABLE (event order, batch
+    schedule) of the point that compiled their group, while model init,
+    DP noise and hyperparameters are their own — see api.session.
+    `reuse="exact"` restores fully per-seed timetables (and compiles
+    once per distinct (shape, seed))."""
+    t_start = time.perf_counter()
+    before = compile_stats()
+    results: List[RunResult] = []
+    for i, cfg in enumerate(cfgs):
+        sess = Session(cfg, reuse=reuse)
+        rr = sess.run(callbacks=callbacks,
+                      eval_every_epoch=eval_every_epoch)
+        results.append(rr)
+        if progress is not None:
+            progress(i, rr)
+    after = compile_stats()
+    warm = [r.wall_s for r in results if r.compile_cache_hit]
+    cold = [r.wall_s for r in results if not r.compile_cache_hit]
+    stats = {
+        "n_points": len(results),
+        "compiles": after["compiles"] - before["compiles"],
+        "cache_hits": after["hits"] - before["hits"],
+        "structural_hits": (after["structural_hits"] -
+                            before["structural_hits"]),
+        "wall_s": time.perf_counter() - t_start,
+        "point_wall_s": [r.wall_s for r in results],
+        "cold_wall_s_mean": sum(cold) / len(cold) if cold else 0.0,
+        "warm_wall_s_mean": sum(warm) / len(warm) if warm else 0.0,
+    }
+    return SweepResult(results=results, stats=stats)

@@ -1,4 +1,18 @@
-"""msgpack-based pytree checkpointing (no orbax in this container)."""
+"""msgpack-based pytree checkpointing (no orbax in this container).
+
+Two surfaces:
+
+* `save`/`restore` — the original flat-leaves format; `restore` needs a
+  `like` tree of the same structure (treedef verified by string).
+* `save_state`/`restore_state` — structural encoding of an arbitrary
+  nested pytree (dicts with str/int keys, lists, tuples/NamedTuples,
+  array leaves, scalars, None) WITHOUT needing a `like` template.  This
+  is the trainer-state round trip: an engine's `TrainerState`/
+  `EventState` (including in-flight ring/buffer content and the epoch
+  counter) saves mid-training and restores in a fresh process via
+  `engine.load_state(restore_state(path))` — see core.engines.
+  NamedTuples come back as plain tuples; `load_state` re-wraps them.
+"""
 from __future__ import annotations
 
 import os
@@ -50,6 +64,62 @@ def restore(path: str, like: Any) -> Any:
     new = [jnp.asarray(n, dtype=l.dtype).reshape(l.shape)
            for n, l in zip(new, leaves)]
     return jax.tree.unflatten(treedef, new)
+
+
+# ---------------------------------------------------------------------------
+# structural (template-free) trainer-state checkpointing
+# ---------------------------------------------------------------------------
+_TUP = b"__tup__"
+
+
+def _encode(node):
+    if node is None or isinstance(node, (bool, int, float, str)):
+        return node
+    if isinstance(node, (np.ndarray, np.generic)) or hasattr(node, "dtype"):
+        return _pack(node)
+    if isinstance(node, dict):
+        return {k: _encode(v) for k, v in node.items()}
+    if isinstance(node, tuple):          # NamedTuples included
+        return {_TUP: [_encode(v) for v in node]}
+    if isinstance(node, list):
+        return [_encode(v) for v in node]
+    raise TypeError(f"unsupported checkpoint node: {type(node)}")
+
+
+def _decode(node):
+    if isinstance(node, dict):
+        if b"__nd__" in node:
+            return _unpack(node)
+        if _TUP in node:
+            return tuple(_decode(v) for v in node[_TUP])
+        return {k: _decode(v) for k, v in node.items()}
+    if isinstance(node, list):
+        return [_decode(v) for v in node]
+    return node
+
+
+def save_state(path: str, state: Any, *, step: Optional[int] = None
+               ) -> None:
+    """Checkpoint a nested pytree structurally (no `like` template needed
+    to restore).  Array leaves keep dtype/shape; tuples (incl.
+    NamedTuples) are tagged so `restore_state` rebuilds plain tuples.
+    The walk is structural (not jax.tree), so dicts with mixed key
+    types survive."""
+    payload = {"state": _encode(state), "step": step, "fmt": "state-v1"}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload))
+    os.replace(tmp, path)
+
+
+def restore_state(path: str) -> Any:
+    """Inverse of `save_state`: the nested structure with numpy leaves.
+    Feed it to `engine.load_state(...)` to re-wrap engine state types."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), strict_map_key=False)
+    assert payload.get("fmt") == "state-v1", "not a save_state checkpoint"
+    return _decode(payload["state"])
 
 
 def load_step(path: str) -> Optional[int]:

@@ -1,0 +1,315 @@
+"""Replay-engine protocol + the per-event reference engine.
+
+Both replay engines execute a DES event log through the same staged
+surface so the trainer, the Session API (`repro.api`) and the
+checkpoint-resume path never care which one runs:
+
+    data  = engine.stage_data(Xa, Xp, y)
+    state = engine.init_state(theta_a, opt_a, theta_p, opt_p, d_emb,
+                              seed=...)
+    for e in range(state.epoch, n_epochs):
+        state = engine.run_epoch(state, e, data, hyper)
+    theta_a, opt_a, theta_p, opt_p, losses = engine.finish(state)
+
+`state` is an explicit, immutable pytree (no hidden mutable replica
+lists) that round-trips through `checkpoint.store.save_state` /
+`restore_state` + `engine.load_state`, so training can stop after any
+epoch and resume bit-for-bit (non-DP; with DP the compiled engine is
+also bitwise — its PRNG key lives in the state — while the event
+engine's host-numpy noise stream is reseeded, keeping clip/sigma
+semantics but not the exact noise draws).
+
+`hyper` is the runtime scalar dict {lr, clip, sigma}: hyperparameters
+that only scale arithmetic are *arguments* of an epoch run, not part of
+the engine, which is what lets a Session sweep reuse one compiled
+engine across lr/dp_mu points (see `core.jit_pipeline.EngineSpec`).
+
+Engines implementing the protocol:
+
+* `core.jit_pipeline.CompiledReplayEngine` — the jitted scan hot path.
+* `EventReplayEngine` (here) — the readable per-event Python loop,
+  extracted from the legacy `VFLTrainer._replay_event`; kept as the
+  reference semantics and for parity testing.  Its epoch slicing, the
+  vfl_ps round barriers, the Eq. 5 sync-mark aggregations, staleness
+  and the loss bucketing replicate the legacy loop exactly (see
+  tests/test_engine_parity.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, NamedTuple, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.des import RunConfig
+from repro.core.schedule import _rows_table
+from repro.core.semi_async import aggregate, sync_epochs
+from repro.models import tabular
+from repro.optim.optimizers import adam, apply_updates
+
+# re-exported so `core.engines` is the one import site for the protocol
+from repro.core.jit_pipeline import (CompiledReplayEngine,  # noqa: F401
+                                     TrainerState)
+
+
+class ReplayEngine(Protocol):
+    """Staged replay surface shared by the compiled and event engines."""
+
+    # bookkeeping resolved ahead of the replay (control flow only)
+    staleness: List[int]
+    n_updates: int
+    versions_p: List[int]
+    n_epochs: int
+
+    def stage_data(self, Xa, Xp, y) -> Any: ...
+
+    def init_state(self, theta_a, opt_a, theta_p, opt_p, d_emb: int, *,
+                   seed: Optional[int] = None) -> Any: ...
+
+    def run_epoch(self, state, epoch: int, data,
+                  hyper: Optional[Dict] = None) -> Any: ...
+
+    def params_mean(self, state) -> tuple: ...
+
+    def finish(self, state) -> tuple: ...
+
+    def load_state(self, payload) -> Any: ...
+
+
+def default_hyper(lr: float, clip: float, sigma: float) -> Dict:
+    return {"lr": lr, "clip": clip, "sigma": sigma}
+
+
+def replica_counts(method: str, w_a: int, w_p: int) -> Tuple[int, int]:
+    """Per-party replica counts by method (paper semantics): single
+    shared params for the PS-less methods, ID-locked equal pools for the
+    synchronous PS pairings, full decoupled pools for pubsub."""
+    n_rep_a = 1 if method in ("vfl", "avfl") else w_a
+    n_rep_p = 1 if method in ("vfl", "avfl") else w_p
+    if method in ("vfl_ps", "avfl_ps"):
+        n_rep_a = n_rep_p = min(w_a, w_p)
+    return n_rep_a, n_rep_p
+
+
+class EventState(NamedTuple):
+    """Explicit state of the per-event engine: per-replica param/opt
+    lists, passive version counters, the executed-step counter, the
+    per-epoch loss buckets and the in-flight embedding/gradient buffers
+    (the pipeline content crossing an epoch boundary)."""
+    theta_a: List
+    opt_a: List
+    theta_p: List
+    opt_p: List
+    version_p: List[int]
+    a_steps: int
+    loss_vec: List[float]
+    cnt_vec: List[int]
+    emb_buf: Dict[int, tuple]     # bid -> (z, rep_p, fwd_version)
+    grad_buf: Dict[int, tuple]    # bid -> (g_z, rep_p, fwd_version)
+    epoch: int = 0
+
+
+class EventReplayEngine:
+    """The legacy per-event Python loop behind the `ReplayEngine`
+    protocol.  A host pre-pass over the log (control flow only — buffer
+    hits, executed-step counts) resolves the epoch slicing, staleness
+    and final version counters ahead of time, exactly like the schedule
+    compiler does for the compiled engine; the numeric replay then runs
+    one epoch slice per `run_epoch`."""
+
+    def __init__(self, cfg: RunConfig, events: List[Tuple], *,
+                 n_rep_a: int, n_rep_p: int, n_samples: int, task: str,
+                 resnet: bool = False, clip: float = math.inf,
+                 sigma: float = 0.0, lr: float = 1e-3, opt=None,
+                 seed: int = 0, disable_semi_async: bool = False):
+        self.cfg = cfg
+        self.events = events
+        self.n_rep_a, self.n_rep_p = n_rep_a, n_rep_p
+        self.task, self.resnet = task, resnet
+        self.hyper = default_hyper(lr, clip, sigma)
+        self._opt = opt
+        self._seed = seed
+        self.n_epochs = cfg.n_epochs
+        self.rows = _rows_table(cfg, n_samples)
+        self._rng = np.random.default_rng(seed)
+
+        sync_marks = set(sync_epochs(cfg.n_epochs, cfg.dt0))
+        if disable_semi_async:
+            sync_marks = set(range(1, cfg.n_epochs + 1))
+        self._sync_marks = sync_marks
+        self._round_size = min(cfg.w_a, cfg.w_p)
+
+        # --- control-flow pre-pass: epoch cuts, staleness, versions ---
+        n_batches = max(cfg.n_batches, 1)
+        emb: Dict[int, tuple] = {}
+        grad: Dict[int, tuple] = {}
+        version_p = [0] * n_rep_p
+        staleness: List[int] = []
+        a_steps = 0
+        cur_epoch = 0
+        cuts: List[int] = []
+        aggs: List[bool] = []
+        last_t, last_kind = (events[-1][0], events[-1][1]) if events \
+            else (None, None)
+        for i, (t, kind, pl) in enumerate(events):
+            if kind == "p_fwd":
+                emb[pl["bid"]] = (pl["w"] % n_rep_p,
+                                  version_p[pl["w"] % n_rep_p])
+            elif kind == "a_step":
+                if pl["bid"] in emb:
+                    grad[pl["bid"]] = emb.pop(pl["bid"])
+                    a_steps += 1
+            elif kind == "p_bwd":
+                if pl["bid"] in grad:
+                    rep_p, ver = grad.pop(pl["bid"])
+                    staleness.append(version_p[rep_p] - ver)
+                    version_p[rep_p] += 1
+            new_epoch = min(a_steps // n_batches, cfg.n_epochs - 1)
+            if new_epoch > cur_epoch or (t == last_t and kind == last_kind):
+                for ep_done in range(cur_epoch + 1, new_epoch + 1):
+                    cuts.append(i + 1)
+                    aggs.append(cfg.method == "avfl_ps" or
+                                (cfg.method == "pubsub" and
+                                 ep_done in sync_marks))
+                cur_epoch = new_epoch
+        while len(cuts) < cfg.n_epochs:
+            cuts.append(len(events))
+            aggs.append(False)
+        self._cuts, self._aggs = cuts, aggs
+        self.staleness = staleness
+        self.n_updates = a_steps
+        self.versions_p = list(version_p)
+
+    # -- staging ---------------------------------------------------------
+    def stage_data(self, Xa, Xp, y) -> tuple:
+        return (self.rows, np.asarray(Xa), np.asarray(Xp), np.asarray(y))
+
+    def init_state(self, theta_a, opt_a, theta_p, opt_p, d_emb: int, *,
+                   seed: Optional[int] = None) -> EventState:
+        self._rng = np.random.default_rng(
+            self._seed if seed is None else seed)
+        n = self.cfg.n_epochs
+        return EventState(list(theta_a), list(opt_a), list(theta_p),
+                          list(opt_p), [0] * self.n_rep_p, 0,
+                          [0.0] * n, [0] * n, {}, {}, epoch=0)
+
+    def load_state(self, payload) -> EventState:
+        f = list(payload)
+        epoch = int(f[10])
+        # deterministic resume: key the host DP noise stream on
+        # (seed, resume epoch) so a restored checkpoint replays the same
+        # noise whether the process is fresh or previously ran other
+        # replays (the stream still differs from the uninterrupted run's
+        # — event-engine DP resume is clip/sigma-semantic, not bitwise)
+        self._rng = np.random.default_rng([self._seed, epoch])
+        return EventState(list(f[0]), list(f[1]), list(f[2]), list(f[3]),
+                          [int(v) for v in f[4]], int(f[5]),
+                          [float(v) for v in f[6]], [int(v) for v in f[7]],
+                          dict(f[8]), dict(f[9]), epoch=epoch)
+
+    # -- execution -------------------------------------------------------
+    def run_epoch(self, state: EventState, epoch: int, data,
+                  hyper: Optional[Dict] = None) -> EventState:
+        cfg = self.cfg
+        hyper = self.hyper if hyper is None else hyper
+        lr = float(hyper["lr"])
+        clip, sigma = float(hyper["clip"]), float(hyper["sigma"])
+        opt = self._opt if self._opt is not None else adam(lr)
+        rows_tab, Xa, Xp, Y = data
+        n_batches = max(cfg.n_batches, 1)
+
+        ta, oa = list(state.theta_a), list(state.opt_a)
+        tp, op_ = list(state.theta_p), list(state.opt_p)
+        version_p = list(state.version_p)
+        a_steps = state.a_steps
+        loss_vec, cnt_vec = list(state.loss_vec), list(state.cnt_vec)
+        emb_buf, grad_buf = dict(state.emb_buf), dict(state.grad_buf)
+
+        lo = self._cuts[epoch - 1] if epoch > 0 else 0
+        hi = self._cuts[epoch]
+        for t, kind, pl in self.events[lo:hi]:
+            if kind == "p_fwd":
+                bid, w = pl["bid"], pl["w"]
+                rep = w % self.n_rep_p
+                rows = rows_tab[bid % len(rows_tab)]
+                if sigma > 0 or math.isfinite(clip):
+                    # same fused DP publish as the compiled engine; only
+                    # the noise SOURCE stays host-side (the legacy numpy
+                    # rng stream), so event-engine DP runs remain
+                    # reproducible against pre-fusion results
+                    noise = None
+                    if sigma > 0:
+                        d_emb = tp[rep]["layers"][-1]["b"].shape[0]
+                        noise = jnp.asarray(self._rng.normal(
+                            size=(len(rows), d_emb)).astype(np.float32))
+                    z = tabular.publish_embedding(
+                        tp[rep], jnp.asarray(Xp[rows]), noise, clip=clip,
+                        sigma=sigma, resnet=self.resnet)
+                else:
+                    z = tabular.passive_forward(
+                        tp[rep], jnp.asarray(Xp[rows]), resnet=self.resnet)
+                emb_buf[bid] = (z, rep, version_p[rep])
+            elif kind == "a_step":
+                bid, w = pl["bid"], pl["w"]
+                if bid not in emb_buf:
+                    continue                    # dropped upstream
+                z, rep_p, fwd_ver = emb_buf.pop(bid)
+                rep = w % self.n_rep_a
+                rows = rows_tab[bid % len(rows_tab)]
+                loss, g_a, g_z = tabular.active_step(
+                    ta[rep], jnp.asarray(Xa[rows]), z,
+                    jnp.asarray(Y[rows]), task=self.task,
+                    resnet=self.resnet)
+                ups, oa[rep] = opt.update(g_a, oa[rep], ta[rep])
+                ta[rep] = apply_updates(ta[rep], ups)
+                grad_buf[bid] = (g_z, rep_p, fwd_ver)
+                a_steps += 1
+                bucket = min((a_steps - 1) // n_batches, cfg.n_epochs - 1)
+                loss_vec[bucket] += float(loss)
+                cnt_vec[bucket] += 1
+                # --- synchronous VFL-PS: aggregate every round ---
+                if cfg.method == "vfl_ps" and \
+                        a_steps % max(self._round_size, 1) == 0:
+                    ta = _aggregate(ta)
+            elif kind == "p_bwd":
+                bid = pl["bid"]
+                if bid not in grad_buf:
+                    continue
+                g_z, rep_p, fwd_ver = grad_buf.pop(bid)
+                rows = rows_tab[bid % len(rows_tab)]
+                g_p = tabular.passive_backward(
+                    tp[rep_p], jnp.asarray(Xp[rows]), g_z,
+                    resnet=self.resnet)
+                ups, op_[rep_p] = opt.update(g_p, op_[rep_p], tp[rep_p])
+                tp[rep_p] = apply_updates(tp[rep_p], ups)
+                version_p[rep_p] += 1
+                if cfg.method == "vfl_ps" and version_p[rep_p] % \
+                        max(self._round_size, 1) == 0:
+                    tp = _aggregate(tp)
+
+        if self._aggs[epoch]:          # avfl_ps / pubsub Eq. 5 sync mark
+            ta = _aggregate(ta)
+            tp = _aggregate(tp)
+        return EventState(ta, oa, tp, op_, version_p, a_steps,
+                          loss_vec, cnt_vec, emb_buf, grad_buf,
+                          epoch=epoch + 1)
+
+    def params_mean(self, state: EventState) -> tuple:
+        th_a = aggregate(state.theta_a) if self.n_rep_a > 1 \
+            else state.theta_a[0]
+        th_p = aggregate(state.theta_p) if self.n_rep_p > 1 \
+            else state.theta_p[0]
+        return th_a, th_p
+
+    def finish(self, state: EventState):
+        losses = [l / max(c, 1) for l, c in zip(state.loss_vec,
+                                                state.cnt_vec)]
+        return (list(state.theta_a), list(state.opt_a),
+                list(state.theta_p), list(state.opt_p), losses)
+
+
+def _aggregate(replicas: List) -> List:
+    agg = aggregate(replicas)
+    return [jax.tree.map(lambda x: x, agg) for _ in range(len(replicas))]

@@ -64,7 +64,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -171,13 +171,20 @@ def _broadcast_mean(stack):
 class EngineSpec:
     """Static configuration of the compiled engine; the process-wide
     runner cache is keyed on this (plus an opt cache key), so repeated
-    trainer instances reuse one compilation per spec+shapes."""
+    trainer instances reuse one compilation per spec+shapes.
+
+    Hyperparameters that only scale arithmetic — the learning rate and
+    the DP clip/sigma *values* — are deliberately NOT part of the spec:
+    they enter the jitted runners as runtime scalars (the `hyper` dict),
+    so a sweep varying lr or dp_mu reuses one XLA program.  Only the DP
+    *structure* is static: `dp` selects the fused publish path, `noise`
+    whether a PRNG draw is traced at all."""
     n_rep_a: int
     n_rep_p: int
     task: str
     resnet: bool
-    clip: float
-    sigma: float
+    dp: bool                  # fused clip+noise publish traced
+    noise: bool               # Gaussian noise drawn (sigma > 0)
     has_inscan_agg: bool
     use_pallas: bool
     donate: bool
@@ -185,12 +192,36 @@ class EngineSpec:
     flat_opt: bool = False    # fused flat optimizer update (segmented)
 
 
+class TrainerState(NamedTuple):
+    """The complete, explicit training state of a compiled replay — an
+    immutable pytree that round-trips through `checkpoint.store`
+    (`save_state`/`restore_state`) for mid-training save/resume.
+
+    Fields 0..8 are the jitted scan carry (stacked-replica params and
+    optimizer states, the in-flight embedding/gradient rings, the
+    device-resident per-epoch loss accumulators, and the DP PRNG key);
+    `epoch` counts completed epochs host-side and is what makes a
+    restored state resumable at the right segment."""
+    theta_a: Any
+    opt_a: Any
+    theta_p: Any
+    opt_p: Any
+    ring_e: Any
+    ring_g: Any
+    loss_vec: Any
+    cnt_vec: Any
+    key: Any
+    epoch: int = 0
+
+    @property
+    def carry(self) -> tuple:
+        return tuple(self)[:9]
+
+
 _RUNNER_CACHE: Dict[tuple, object] = {}
 
 
 def _phase_ops(spec: EngineSpec):
-    dp_on = spec.sigma > 0.0 or math.isfinite(spec.clip)
-
     def p_backward(th, x, gz):
         return tabular.passive_backward(th, x, gz, resnet=spec.resnet)
 
@@ -198,22 +229,24 @@ def _phase_ops(spec: EngineSpec):
         return tabular.active_step(th, x, z, y, task=spec.task,
                                    resnet=spec.resnet)
 
-    def publish(th, x, nz):
-        if not dp_on:
+    def publish(th, x, nz, clip, sigma):
+        if not spec.dp:
             return tabular.passive_forward(th, x, resnet=spec.resnet)
-        return tabular.publish_embedding(th, x, nz, clip=spec.clip,
-                                         sigma=spec.sigma,
+        return tabular.publish_embedding(th, x, nz, clip=clip,
+                                         sigma=sigma,
                                          resnet=spec.resnet,
-                                         use_pallas=spec.use_pallas)
+                                         use_pallas=spec.use_pallas,
+                                         dynamic=True)
 
     return p_backward, a_step, publish
 
 
-def _make_dense_tick(spec: EngineSpec, opt):
+def _make_dense_tick(spec: EngineSpec):
     p_backward, a_step, publish = _phase_ops(spec)
 
-    def tick(carry, xs, data):
+    def tick(carry, xs, data, opt, hyper):
         rows_tab, Xa, Xp, Y = data
+        clip, sigma = hyper["clip"], hyper["sigma"]
         ta, oa, tp, op_, ring_e, ring_g, loss_vec, cnt_vec, key = carry
 
         # each phase runs under a lax.cond on "any lane active": padded /
@@ -236,17 +269,20 @@ def _make_dense_tick(spec: EngineSpec, opt):
 
         # --- phase 1b: passive forwards, DP-publish to embedding ring ---
         pf_mask = xs["pf_bid"] >= 0
-        if spec.sigma > 0.0:
+        if spec.noise:
             key, sub = jax.random.split(key)
 
         def pf_phase(ring_e):
             xf = Xp[rows_tab[jnp.maximum(xs["pf_bid"], 0)]]
-            if spec.sigma > 0.0:
+            if spec.noise:
                 noise = jax.random.normal(
                     sub, xf.shape[:2] + (ring_e.shape[-1],), jnp.float32)
-                z_pub = jax.vmap(publish)(tp, xf, noise)
+                z_pub = jax.vmap(
+                    lambda th, x, nz: publish(th, x, nz, clip, sigma))(
+                        tp, xf, noise)
             else:
-                z_pub = jax.vmap(lambda th, x: publish(th, x, None))(tp, xf)
+                z_pub = jax.vmap(
+                    lambda th, x: publish(th, x, None, clip, sigma))(tp, xf)
             return slot_ring_write(ring_e, xs["pf_slot"], z_pub, pf_mask)
 
         ring_e = jax.lax.cond(jnp.any(pf_mask), pf_phase,
@@ -286,7 +322,7 @@ def _make_dense_tick(spec: EngineSpec, opt):
     return tick
 
 
-def _make_packed_tick(spec: EngineSpec, opt):
+def _make_packed_tick(spec: EngineSpec):
     """Tick body for the packed work-row layout: each lane carries a
     replica index; phases gather per-lane params from the stacked
     replica pytrees and merge updates back by index
@@ -295,8 +331,9 @@ def _make_packed_tick(spec: EngineSpec, opt):
     identical to the dense tick."""
     p_backward, a_step, publish = _phase_ops(spec)
 
-    def tick(carry, xs, data):
+    def tick(carry, xs, data, opt, hyper):
         rows_tab, Xa, Xp, Y = data
+        clip, sigma = hyper["clip"], hyper["sigma"]
         ta, oa, tp, op_, ring_e, ring_g, loss_vec, cnt_vec, key = carry
 
         # the two passive sub-phases share ONE lax.cond: packed ticks
@@ -308,7 +345,7 @@ def _make_packed_tick(spec: EngineSpec, opt):
         # exactly the event order the schedule compiler promised.
         pb_mask = xs["pb_rep"] >= 0
         pf_mask = xs["pf_rep"] >= 0
-        if spec.sigma > 0.0:
+        if spec.noise:
             key, sub = jax.random.split(key)
 
         def passive_phase(args):
@@ -324,13 +361,16 @@ def _make_packed_tick(spec: EngineSpec, opt):
             # --- phase 1b: passive forwards, DP-publish to the ring ---
             tp_f = gather_replicas(tp, jnp.maximum(xs["pf_rep"], 0))
             xf = Xp[rows_tab[jnp.maximum(xs["pf_bid"], 0)]]
-            if spec.sigma > 0.0:
+            if spec.noise:
                 noise = jax.random.normal(
                     sub, xf.shape[:2] + (ring_e.shape[-1],), jnp.float32)
-                z_pub = jax.vmap(publish)(tp_f, xf, noise)
+                z_pub = jax.vmap(
+                    lambda th, x, nz: publish(th, x, nz, clip, sigma))(
+                        tp_f, xf, noise)
             else:
-                z_pub = jax.vmap(lambda th, x: publish(th, x, None))(tp_f,
-                                                                    xf)
+                z_pub = jax.vmap(
+                    lambda th, x: publish(th, x, None, clip, sigma))(tp_f,
+                                                                     xf)
             ring_e = slot_ring_write(ring_e, xs["pf_slot"], z_pub, pf_mask)
             return tp, op_, ring_e
 
@@ -374,7 +414,7 @@ def _make_packed_tick(spec: EngineSpec, opt):
     return tick
 
 
-def _make_sig_tick(spec: EngineSpec, opt, sig: Tuple[str, ...],
+def _make_sig_tick(spec: EngineSpec, sig: Tuple[str, ...],
                    has_agg: bool):
     """Cond-free tick body for one phase signature (segmented layout).
 
@@ -389,11 +429,12 @@ def _make_sig_tick(spec: EngineSpec, opt, sig: Tuple[str, ...],
     aggregation ticks (`has_agg`) keep the two in-scan agg conds."""
     p_backward, a_step, publish = _phase_ops(spec)
 
-    def tick(carry, xs, data):
+    def tick(carry, xs, data, opt, hyper):
         rows_tab, Xa, Xp, Y = data
+        clip, sigma = hyper["clip"], hyper["sigma"]
         ta, oa, tp, op_, ring_e, ring_g, loss_vec, cnt_vec, key = carry
 
-        if "pf" in sig and spec.sigma > 0.0:
+        if "pf" in sig and spec.noise:
             key, sub = jax.random.split(key)
 
         if "pb" in sig:
@@ -410,13 +451,16 @@ def _make_sig_tick(spec: EngineSpec, opt, sig: Tuple[str, ...],
             pf_mask = xs["pf_rep"] >= 0
             tp_f = gather_replicas(tp, jnp.maximum(xs["pf_rep"], 0))
             xf = Xp[rows_tab[jnp.maximum(xs["pf_bid"], 0)]]
-            if spec.sigma > 0.0:
+            if spec.noise:
                 noise = jax.random.normal(
                     sub, xf.shape[:2] + (ring_e.shape[-1],), jnp.float32)
-                z_pub = jax.vmap(publish)(tp_f, xf, noise)
+                z_pub = jax.vmap(
+                    lambda th, x, nz: publish(th, x, nz, clip, sigma))(
+                        tp_f, xf, noise)
             else:
-                z_pub = jax.vmap(lambda th, x: publish(th, x, None))(tp_f,
-                                                                    xf)
+                z_pub = jax.vmap(
+                    lambda th, x: publish(th, x, None, clip, sigma))(tp_f,
+                                                                     xf)
             ring_e = slot_ring_write(ring_e, xs["pf_slot"], z_pub, pf_mask)
 
         if "as" in sig:
@@ -446,27 +490,30 @@ def _make_sig_tick(spec: EngineSpec, opt, sig: Tuple[str, ...],
     return tick
 
 
-def _get_segmented_runner(spec: EngineSpec, opt, opt_key,
+def _get_segmented_runner(spec: EngineSpec, opt_builder, opt_key,
                           structure: tuple):
     """One jitted epoch runner chaining the per-run scans back to back
     with a single donated carry.  `structure` is the epoch's static run
     chain — ((sig, has_agg), ...) — so epochs with the same chain share
     one runner (lane widths and run lengths specialize via jit's shape
-    tracing); tick bodies are built per distinct (sig, has_agg) pair."""
+    tracing); tick bodies are built per distinct (sig, has_agg) pair.
+    The optimizer is (re)built inside the trace from the runtime `hyper`
+    learning rate, so the cached runner serves every lr."""
     cache_key = (spec, opt_key, structure)
     if opt_key is not None and cache_key in _RUNNER_CACHE:
         return _RUNNER_CACHE[cache_key]
     bodies = {}
     for sig, has_agg in structure:
         if (sig, has_agg) not in bodies:
-            bodies[(sig, has_agg)] = _make_sig_tick(spec, opt, sig,
-                                                    has_agg)
+            bodies[(sig, has_agg)] = _make_sig_tick(spec, sig, has_agg)
 
-    def run(carry, xs_list, data):
+    def run(carry, xs_list, data, hyper):
+        opt = opt_builder(hyper["lr"])
         for (sig, has_agg), xs in zip(structure, xs_list):
             body = bodies[(sig, has_agg)]
-            carry = jax.lax.scan(lambda c, x, b=body: (b(c, x, data), None),
-                                 carry, xs)[0]
+            carry = jax.lax.scan(
+                lambda c, x, b=body: (b(c, x, data, opt, hyper), None),
+                carry, xs)[0]
         return carry
 
     runner = jax.jit(run, donate_argnums=(0,) if spec.donate else ())
@@ -475,15 +522,17 @@ def _get_segmented_runner(spec: EngineSpec, opt, opt_key,
     return runner
 
 
-def _get_runner(spec: EngineSpec, opt, opt_key):
+def _get_runner(spec: EngineSpec, opt_builder, opt_key):
     cache_key = (spec, opt_key)
     if opt_key is not None and cache_key in _RUNNER_CACHE:
         return _RUNNER_CACHE[cache_key]
     mk = _make_packed_tick if spec.pack == "packed" else _make_dense_tick
-    tick = mk(spec, opt)
+    tick = mk(spec)
 
-    def run(carry, xs, data):
-        return jax.lax.scan(lambda c, x: (tick(c, x, data), None),
+    def run(carry, xs, data, hyper):
+        opt = opt_builder(hyper["lr"])
+        return jax.lax.scan(lambda c, x: (tick(c, x, data, opt, hyper),
+                                          None),
                             carry, xs)[0]
 
     runner = jax.jit(run, donate_argnums=(0,) if spec.donate else ())
@@ -493,7 +542,14 @@ def _get_runner(spec: EngineSpec, opt, opt_key):
 
 
 class CompiledReplayEngine:
-    """Executes a `CompiledSchedule` as jitted per-epoch scan segments."""
+    """Executes a `CompiledSchedule` as jitted per-epoch scan segments.
+
+    Implements the `ReplayEngine` protocol (`core.engines.ReplayEngine`):
+    ``stage_data`` → ``init_state`` → ``run_epoch``* → ``finish``.  The
+    constructor's `clip`/`sigma`/`lr` only set the engine's *default*
+    `hyper` values — they are runtime scalars of the jitted runners, so
+    one engine instance (and one XLA program) serves every lr/dp_mu of a
+    sweep; only the DP structure (on/off, noise on/off) is compiled in."""
 
     def __init__(self, schedule: CompiledSchedule, *, opt=None,
                  task: str, resnet: bool = False,
@@ -502,8 +558,17 @@ class CompiledReplayEngine:
                  seed: int = 0, flat_opt: Optional[bool] = None):
         enable_persistent_cache()
         self.schedule = schedule
-        self.opt = opt if opt is not None else adam(lr)
-        opt_key = ("adam", lr) if opt is None else None
+        if opt is not None:
+            self.opt = opt
+            opt_builder = lambda _lr: opt        # custom opt: lr fixed
+            opt_key = None
+        else:
+            self.opt = adam(lr)
+            opt_builder = adam
+            opt_key = ("adam",)
+        dp = sigma > 0.0 or math.isfinite(clip)
+        self.hyper = {"lr": jnp.float32(lr), "clip": jnp.float32(clip),
+                      "sigma": jnp.float32(sigma)}
         backend = jax.default_backend()
         if use_pallas is None:
             use_pallas = backend == "tpu"
@@ -517,7 +582,7 @@ class CompiledReplayEngine:
             flat_opt = schedule.pack == "segmented" and backend != "cpu"
         self.spec = EngineSpec(
             n_rep_a=schedule.n_rep_a, n_rep_p=schedule.n_rep_p, task=task,
-            resnet=resnet, clip=float(clip), sigma=float(sigma),
+            resnet=resnet, dp=dp, noise=sigma > 0.0,
             has_inscan_agg=schedule.has_inscan_agg, use_pallas=use_pallas,
             donate=backend != "cpu", pack=schedule.pack,
             flat_opt=bool(flat_opt))
@@ -526,7 +591,7 @@ class CompiledReplayEngine:
             # the same chain) + device-resident per-run xs
             self._runners = [
                 _get_segmented_runner(
-                    self.spec, self.opt, opt_key,
+                    self.spec, opt_builder, opt_key,
                     tuple((r.sig, r.has_agg) for r in seg.runs))
                 if seg.runs else None
                 for seg in schedule.segments]
@@ -535,12 +600,29 @@ class CompiledReplayEngine:
                       for r in seg.runs)
                 for seg in schedule.segments]
         else:
-            self._runner = _get_runner(self.spec, self.opt, opt_key)
+            self._runner = _get_runner(self.spec, opt_builder, opt_key)
             self._xs = {k: jnp.asarray(v)
                         for k, v in schedule.padded().items()}
         self._agg_both = jax.jit(
             lambda ta, tp: (_broadcast_mean(ta), _broadcast_mean(tp)))
-        self._key0 = jax.random.fold_in(jax.random.PRNGKey(seed), 0x5f)
+        self._seed = seed
+
+    # -- ReplayEngine protocol: bookkeeping resolved at compile time -----
+    @property
+    def staleness(self) -> List[int]:
+        return self.schedule.staleness
+
+    @property
+    def n_updates(self) -> int:
+        return self.schedule.n_updates
+
+    @property
+    def versions_p(self) -> List[int]:
+        return list(self.schedule.versions_p)
+
+    @property
+    def n_epochs(self) -> int:
+        return self.schedule.n_epochs
 
     # -- staging ---------------------------------------------------------
     def stage_data(self, Xa, Xp, y) -> tuple:
@@ -552,41 +634,68 @@ class CompiledReplayEngine:
                 jnp.asarray(y))
 
     def init_state(self, theta_a_reps: List, opt_a_reps: List,
-                   theta_p_reps: List, opt_p_reps: List, d_emb: int
-                   ) -> tuple:
+                   theta_p_reps: List, opt_p_reps: List, d_emb: int,
+                   *, seed: Optional[int] = None) -> TrainerState:
+        """Fresh `TrainerState` at epoch 0.  `seed` (default: the
+        engine's construction seed) keys the device DP noise stream — a
+        cached engine serves many runs, each seeding its own state."""
         s = self.schedule
         B = s.batch_rows
-        return (stack_states(theta_a_reps), stack_states(opt_a_reps),
-                stack_states(theta_p_reps), stack_states(opt_p_reps),
-                slot_ring_init(s.emb_slots, (B, d_emb)),
-                slot_ring_init(s.grad_slots, (B, d_emb)),
-                jnp.zeros((s.n_epochs,), jnp.float32),
-                jnp.zeros((s.n_epochs,), jnp.float32),
-                self._key0)
+        key0 = jax.random.fold_in(
+            jax.random.PRNGKey(self._seed if seed is None else seed), 0x5f)
+        return TrainerState(
+            stack_states(theta_a_reps), stack_states(opt_a_reps),
+            stack_states(theta_p_reps), stack_states(opt_p_reps),
+            slot_ring_init(s.emb_slots, (B, d_emb)),
+            slot_ring_init(s.grad_slots, (B, d_emb)),
+            jnp.zeros((s.n_epochs,), jnp.float32),
+            jnp.zeros((s.n_epochs,), jnp.float32),
+            key0, epoch=0)
+
+    def load_state(self, payload) -> TrainerState:
+        """Rebuild a `TrainerState` from a `checkpoint.store.restore_state`
+        payload (the state saved with `save_state`)."""
+        fields = list(payload)
+        return TrainerState(*fields[:9], epoch=int(fields[9]))
 
     # -- execution -------------------------------------------------------
-    def run_segment(self, state: tuple, seg: int, data: tuple) -> tuple:
+    def run_epoch(self, state: TrainerState, seg: int, data: tuple,
+                  hyper: Optional[Dict] = None) -> TrainerState:
+        """Execute epoch `seg` and return the advanced state.  `hyper`
+        overrides the runtime scalars {lr, clip, sigma} for this call
+        (default: the engine's construction values)."""
+        if hyper is None:
+            hyper = self.hyper
+        else:
+            hyper = {k: jnp.float32(hyper[k]) for k in ("lr", "clip",
+                                                        "sigma")}
+        carry = TrainerState(*state).carry
         if self.schedule.pack == "segmented":
             if self.schedule.segments[seg].runs:
-                state = self._runners[seg](state, self._seg_xs[seg], data)
+                carry = self._runners[seg](carry, self._seg_xs[seg], data,
+                                           hyper)
         else:
             xs = {k: v[seg] for k, v in self._xs.items()}
-            state = self._runner(state, xs, data)
+            carry = self._runner(carry, xs, data, hyper)
         if self.schedule.segments[seg].epoch_agg:
-            ta, oa, tp, op_, *rest = state
+            ta, oa, tp, op_, *rest = carry
             ta, tp = self._agg_both(ta, tp)
-            state = (ta, oa, tp, op_, *rest)
-        return state
+            carry = (ta, oa, tp, op_, *rest)
+        return TrainerState(*carry, epoch=seg + 1)
 
-    def params_mean(self, state: tuple) -> tuple:
+    def run_segment(self, state, seg: int, data: tuple) -> TrainerState:
+        """Back-compat alias of `run_epoch` (pre-Session name)."""
+        return self.run_epoch(state, seg, data)
+
+    def params_mean(self, state) -> tuple:
         """(theta_a, theta_p) averaged across replicas — for evaluation."""
-        ta, _, tp, *_ = state
+        ta, _, tp, *_ = tuple(state)
         return replica_mean(ta), replica_mean(tp)
 
-    def finish(self, state: tuple):
+    def finish(self, state):
         """Unstack params/opt back to per-replica lists and pull the
         device-accumulated per-epoch mean losses (ONE host sync)."""
-        ta, oa, tp, op_, _, _, loss_vec, cnt_vec, _ = state
+        ta, oa, tp, op_, _, _, loss_vec, cnt_vec, *_ = tuple(state)
         s = self.schedule
         losses = np.asarray(loss_vec) / np.maximum(np.asarray(cnt_vec), 1.0)
         return (unstack_states(ta, s.n_rep_a), unstack_states(oa, s.n_rep_a),

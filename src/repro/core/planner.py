@@ -21,13 +21,32 @@ DEFAULT_BATCHES = (16, 32, 64, 128, 256, 512, 1024)
 
 
 @dataclass(frozen=True)
+class PlanTable:
+    """The full Algorithm-2 cost tabulation with labeled axes: entry
+    ``costs[i, j, r]`` is the modeled cost at ``w_a = was[i]``,
+    ``w_p = wps[j]``, ``batch_size = batches[r]`` (np.inf where the
+    configuration is infeasible — core caps or the Eq. 13 memory
+    bound)."""
+    was: Tuple[int, ...]
+    wps: Tuple[int, ...]
+    batches: Tuple[int, ...]
+    costs: np.ndarray                    # (len(was), len(wps), len(batches))
+
+    def argmin(self) -> Tuple[int, int, int]:
+        """The (w_a, w_p, batch_size) labels of the cheapest entry."""
+        i, j, r = np.unravel_index(int(np.argmin(self.costs)),
+                                   self.costs.shape)
+        return self.was[i], self.wps[j], self.batches[r]
+
+
+@dataclass(frozen=True)
 class Plan:
     w_a: int
     w_p: int
     batch_size: int
     cost: float
     b_max: float
-    table: Optional[np.ndarray] = None   # (n_wa, n_wp, n_B) cost table
+    table: Optional[PlanTable] = None    # full tabulation (keep_table=True)
 
     def summary(self) -> str:
         return (f"plan: w_a={self.w_a} w_p={self.w_p} B={self.batch_size} "
@@ -57,11 +76,9 @@ def plan(profile: SystemProfile, *,
     feasible = [b for b in batch_sizes if b <= b_max]
     if not feasible:
         feasible = [min(batch_sizes)]
-    was = range(w_a_range[0], w_a_range[1] + 1)
-    wps = range(w_p_range[0], w_p_range[1] + 1)
-    table = np.full((len(list(was)), len(list(wps)), len(feasible)), np.inf)
     was = list(range(w_a_range[0], w_a_range[1] + 1))
     wps = list(range(w_p_range[0], w_p_range[1] + 1))
+    table = np.full((len(was), len(wps), len(feasible)), np.inf)
     best = (np.inf, None)
     for i, wa in enumerate(was):
         if wa > profile.active.cores:
@@ -85,8 +102,10 @@ def plan(profile: SystemProfile, *,
                     best = (cost, (wa, wp, B))
     assert best[1] is not None, "no feasible configuration"
     wa, wp, B = best[1]
-    return Plan(wa, wp, B, best[0], b_max,
-                table if keep_table else None)
+    plan_table = PlanTable(was=tuple(was), wps=tuple(wps),
+                           batches=tuple(feasible), costs=table) \
+        if keep_table else None
+    return Plan(wa, wp, B, best[0], b_max, plan_table)
 
 
 def plan_multiparty(profiles: List[SystemProfile], **kw) -> Plan:

@@ -1,126 +1,27 @@
-"""High-level experiment API: one call = one (method, dataset, config) run.
+"""Legacy one-shot experiment surface — now a thin wrapper over the
+staged Session API (`repro.api.session`).
 
-Couples: planner (optional) -> DES -> trainer replay -> metrics dict.
-This is what benchmarks/ and examples/ call.
+`run_experiment(cfg)` is kept for back-compat and returns the exact
+pre-Session dict (same keys, same values for a fixed seed): it drives
+`Session(cfg, reuse="exact").run()`, whose program cache keys on the
+config seed, so nothing about the DES timetable or training math
+changes — repeated identical configs simply stop re-paying data prep,
+DES and compilation (the schedule memo already did most of that).
+
+New code should use `repro.api` directly: staged artifacts, sweep reuse
+(`run_sweep`), per-epoch callbacks and checkpoint-resume live there.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Sequence
+from typing import Dict
 
-import numpy as np
-
-from repro.core.cost_model import (CostConstants, PartyProfile,
-                                   SystemProfile)
-from repro.core.des import METHODS, RunConfig, SimResult, simulate
-from repro.core.planner import Plan, plan
-from repro.core.trainer import TrainResult, VFLTrainer
-from repro.data.synthetic import Dataset, load
-from repro.data.vertical import psi_align, vertical_split
-from repro.dp.gdp import GDPConfig
-
-
-@dataclass
-class ExperimentConfig:
-    method: str = "pubsub"
-    dataset: str = "bank"
-    scale: float = 0.05              # dataset size multiplier (CI-friendly)
-    n_epochs: int = 5
-    batch_size: int = 256
-    w_a: int = 8
-    w_p: int = 10
-    cores_a: int = 32
-    cores_p: int = 32
-    features_active: Optional[int] = None   # data heterogeneity
-    use_planner: bool = False        # let Algo. 2 pick (w_a, w_p, B)
-    planner_objective: str = "throughput"  # "paper" = literal Eq. 14
-    dp_mu: float = math.inf          # GDP privacy parameter
-    seed: int = 0
-    resnet: bool = False             # "large model" variant (Table 7)
-    depth: int = 10
-    # ablations
-    disable_deadline: bool = False   # T_ddl = 0-like (w/o T_all)
-    disable_semi_async: bool = False # sync every epoch (w/o ΔT)
-    disable_planner: bool = False    # fixed equal workers (w/o DP algo)
-    engine: str = "compiled"         # replay engine: "compiled" | "event"
-    pack: str = "segmented"          # lane layout: "segmented"|"packed"|"dense"
-    t_ddl: float = 10.0
-    dt0: int = 5
-    p: int = 5
-    q: int = 5
-    jitter: float = 0.10
-
-
-def build_profile(cfg: ExperimentConfig, d_a: int, d_p: int
-                  ) -> SystemProfile:
-    ref = (d_a + d_p) / 2
-    return SystemProfile(
-        active=PartyProfile(cores=cfg.cores_a, feature_dim=d_a,
-                            ref_feature_dim=ref),
-        passive=PartyProfile(cores=cfg.cores_p, feature_dim=d_p,
-                             ref_feature_dim=ref),
-    )
+from repro.api.session import (ExperimentConfig, Session,  # noqa: F401
+                               build_profile)
 
 
 def run_experiment(cfg: ExperimentConfig) -> Dict:
-    ds = load(cfg.dataset, seed=cfg.seed, scale=cfg.scale)
-    tr, te = ds.split(seed=cfg.seed)
-    a_tr, p_tr = vertical_split(tr, seed=cfg.seed,
-                                n_features_active=cfg.features_active)
-    a_te, p_te = vertical_split(te, seed=cfg.seed,
-                                n_features_active=cfg.features_active)
-    a_tr, p_tr = psi_align(a_tr, p_tr)
-
-    profile = build_profile(cfg, a_tr.X.shape[1], p_tr.X.shape[1])
-    w_a, w_p, B = cfg.w_a, cfg.w_p, cfg.batch_size
-    plan_obj: Optional[Plan] = None
-    if cfg.use_planner and not cfg.disable_planner:
-        plan_obj = plan(profile, w_a_range=(2, 16), w_p_range=(2, 16),
-                        objective=cfg.planner_objective)
-        w_a, w_p, B = plan_obj.w_a, plan_obj.w_p, plan_obj.batch_size
-        B = max(min(B, a_tr.X.shape[0] // 2), 1)
-
-    run_cfg = RunConfig(
-        method=cfg.method, n_samples=a_tr.X.shape[0], batch_size=B,
-        n_epochs=cfg.n_epochs, w_a=w_a, w_p=w_p, profile=profile,
-        p=cfg.p, q=cfg.q,
-        t_ddl=(0.0 if cfg.disable_deadline else cfg.t_ddl),
-        dt0=cfg.dt0, jitter=cfg.jitter, seed=cfg.seed)
-    sim = simulate(run_cfg)
-
-    gdp = None
-    if math.isfinite(cfg.dp_mu):
-        gdp = GDPConfig(mu=cfg.dp_mu, clip=1.0,
-                        minibatch=B, global_batch=B,
-                        n_queries=run_cfg.n_batches * cfg.n_epochs)
-    trainer = VFLTrainer(run_cfg, a_tr, p_tr, a_te, p_te, ds.task,
-                         seed=cfg.seed, resnet=cfg.resnet, gdp=gdp,
-                         depth=cfg.depth,
-                         disable_semi_async=cfg.disable_semi_async)
-    res = trainer.replay(sim, engine=cfg.engine, pack=cfg.pack)
-
-    return {
-        "method": cfg.method,
-        "dataset": cfg.dataset,
-        "task": ds.task,
-        "metric": res.metric_name,
-        "final": res.final_metric,
-        "history": res.history,
-        "losses": res.losses,
-        "sim_s": sim.total_time,
-        "sim_s_per_epoch": sim.total_time / max(cfg.n_epochs, 1),
-        "cpu_util": sim.cpu_util,
-        "waiting_per_epoch": sim.waiting_per_epoch,
-        "comm_mb": sim.comm_mb,
-        "staleness": res.staleness_mean,
-        "lane_occupancy": res.lane_occupancy,
-        "drops": sim.stats["drops"],
-        "w_a": sim.stats["w_a"],
-        "w_p": sim.stats["w_p"],
-        "batch_size": B,
-        "plan": (plan_obj.summary() if plan_obj else None),
-    }
+    """One (method, dataset, config) run -> the legacy metrics dict."""
+    return Session(cfg, reuse="exact").run().metrics
 
 
 def time_to_target(result: Dict, target: float) -> float:

@@ -12,7 +12,10 @@ Aggregation policy by method (paper semantics):
   avfl_ps  — aggregate replicas every epoch
   pubsub   — semi-async: aggregate at the Eq. 5 Delta_T_t epoch marks
 
-Two replay engines execute the log (`VFLTrainer.replay(engine=...)`):
+Both engines implement the `core.engines.ReplayEngine` protocol
+(`stage_data` → `init_state` → `run_epoch`* → `finish`) over an explicit
+immutable state pytree, so the trainer's replay loop, per-epoch
+callbacks, and checkpoint save/resume are engine-agnostic:
 
   engine="compiled" (default) — the hot path.  `core.schedule` lowers the
       event log to a dense tick program; `core.jit_pipeline`'s
@@ -20,37 +23,46 @@ Two replay engines execute the log (`VFLTrainer.replay(engine=...)`):
       replica-vmapped, with device-resident DP (fused cut-layer publish)
       and device-accumulated losses.  No per-event Python dispatch, no
       per-step host<->device round trips.
-  engine="event" — the legacy per-event Python loop, kept as the
-      readable reference semantics and for parity testing.  Its DP
-      publish routes through the same fused `tabular.publish_embedding`
-      op as the compiled engine; only the Gaussian noise is still drawn
-      from the legacy host numpy rng (see docs/architecture.md §DP).
+  engine="event" — the per-event Python loop
+      (`core.engines.EventReplayEngine`), kept as the readable reference
+      semantics and for parity testing.  Its DP publish routes through
+      the same fused `tabular.publish_embedding` op as the compiled
+      engine; only the Gaussian noise is still drawn from the legacy
+      host numpy rng (see docs/architecture.md §DP).
 
 For non-DP runs both engines produce the same losses/metrics for the
 same seed (see tests/test_engine_parity.py); only wall-clock differs.
 With DP enabled the clip/projection math is shared, but the noise
 *streams* differ (host numpy rng vs. JAX PRNG), so per-run numbers
 diverge while the clip/sigma semantics match.
+
+Per-epoch **callbacks** replace the old hardcoded eval cadence: a
+callback is any callable taking an `EpochContext`; it can evaluate on
+its own schedule (`ctx.evaluate()`), stream metrics, checkpoint
+(`ctx.state` round-trips through `checkpoint.store.save_state`), or
+request early stop (`ctx.stop = True`).  `repro.api.callbacks` ships
+the common ones.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.des import RunConfig, SimResult
+from repro.core.engines import (EventReplayEngine, ReplayEngine,
+                                replica_counts)
 from repro.core.jit_pipeline import CompiledReplayEngine
 from repro.core.schedule import compile_schedule
-from repro.core.semi_async import aggregate, sync_epochs
-from repro.data.synthetic import Dataset
-from repro.data.vertical import VerticalView, batch_ids
+from repro.core.semi_async import aggregate
+from repro.data.vertical import VerticalView
 from repro.dp.gdp import GDPConfig, noise_sigma
 from repro.models import tabular
-from repro.optim.optimizers import adam, apply_updates
+from repro.optim.optimizers import adam
 
 ENGINES = ("compiled", "event")
 
@@ -66,11 +78,45 @@ class TrainResult:
     lane_occupancy: float = 0.0       # compiled engine only (0 = event)
     n_ticks: int = 0                  # compiled engine only
 
-    def epochs_to_target(self, target: float, higher_better: bool) -> int:
+    def epochs_to_target(self, target: float, higher_better: bool) -> float:
+        """Epochs until the test metric first reaches `target`, or
+        ``math.inf`` if it never does — the same unreachable sentinel as
+        `time_to_target`, so "reached on the last epoch" and "never
+        reached" are distinguishable."""
         for i, v in enumerate(self.history):
             if (v >= target) if higher_better else (v <= target):
                 return i + 1
-        return len(self.history)
+        return math.inf
+
+
+@dataclass
+class EpochContext:
+    """What a per-epoch callback sees.  `epoch` counts COMPLETED epochs
+    (1-based).  `evaluate()` lazily computes the test metric at the
+    replica-averaged params and caches it for this epoch, so several
+    callbacks share one evaluation.  `in_history` is True once this
+    epoch's metric has been appended to `history` (by the trainer's
+    `eval_every_epoch` path or by a callback) — cadence callbacks check
+    it to avoid double-appending.  Setting `stop = True` ends the
+    replay after this epoch (the state remains finishable/resumable)."""
+    epoch: int
+    n_epochs: int
+    state: object
+    engine: ReplayEngine
+    trainer: "VFLTrainer"
+    history: List[float]
+    stop: bool = False
+    in_history: bool = False
+    _metric: Optional[float] = None
+
+    def evaluate(self) -> float:
+        if self._metric is None:
+            ta, tp = self.engine.params_mean(self.state)
+            self._metric = self.trainer._metric(ta, tp)
+        return self._metric
+
+
+Callback = Callable[[EpochContext], None]
 
 
 def _auc(y_true: np.ndarray, scores: np.ndarray) -> float:
@@ -106,16 +152,13 @@ class VFLTrainer:
         self.Xa, self.Xp, self.y = active.X, passive.X, active.y
         self.tXa, self.tXp, self.ty = (test_active.X, test_passive.X,
                                        test_active.y)
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
         key = jax.random.PRNGKey(seed)
         ka, kp, kt = jax.random.split(key, 3)
 
         # replica counts per method
-        m = cfg.method
-        self.n_rep_a = 1 if m in ("vfl", "avfl") else cfg.w_a
-        self.n_rep_p = 1 if m in ("vfl", "avfl") else cfg.w_p
-        if m in ("vfl_ps", "avfl_ps"):
-            self.n_rep_a = self.n_rep_p = min(cfg.w_a, cfg.w_p)
+        self.n_rep_a, self.n_rep_p = replica_counts(cfg.method, cfg.w_a,
+                                                    cfg.w_p)
 
         def mk_a(k):
             kb, kt_ = jax.random.split(k)
@@ -136,203 +179,112 @@ class VFLTrainer:
         self.opt_p = [self.opt.init(t) for t in self.theta_p]
         self.version_p = [0] * self.n_rep_p
         self.staleness: List[int] = []
-        self._emb_buf: Dict[int, tuple] = {}   # bid -> (z_p, rows, rep_p, ver)
-        self._grad_buf: Dict[int, tuple] = {}  # bid -> (g_zp, rows, rep_p)
-        self._epoch_ids: Dict[int, np.ndarray] = {}
         self.n_updates = 0
 
     # ------------------------------------------------------------------
-    def _rows(self, bid: int) -> np.ndarray:
-        ep = bid // self.cfg.n_batches
-        b = bid % self.cfg.n_batches
-        if ep not in self._epoch_ids:
-            self._epoch_ids[ep] = batch_ids(
-                len(self.y), self.cfg.batch_size, seed=self.cfg.seed,
-                epoch=ep)
-        return self._epoch_ids[ep][b % len(self._epoch_ids[ep])]
+    @property
+    def d_emb(self) -> int:
+        return self.theta_p[0]["layers"][-1]["b"].shape[0]
 
-    def _rep(self, w: int, party: str) -> int:
-        n = self.n_rep_a if party == "a" else self.n_rep_p
-        return w % n
+    def hyper(self) -> Dict:
+        """The runtime scalar dict {lr, clip, sigma} for `run_epoch` —
+        the hyperparameters that are *arguments* of a replay, not part
+        of a compiled engine (see core.jit_pipeline.EngineSpec)."""
+        return {"lr": self.lr, "clip": self.clip, "sigma": self.sigma}
 
     # ------------------------------------------------------------------
-    def replay(self, sim: SimResult, *, eval_every_epoch: bool = True,
-               engine: str = "compiled", pack: str = "segmented"
-               ) -> TrainResult:
-        """Execute the event log.  `engine="compiled"` (default) runs the
-        jitted scan engine; `engine="event"` runs the legacy per-event
-        loop (reference semantics, used for parity testing).  `pack`
-        selects the compiled engine's lane layout: "segmented" (default,
-        phase-signature runs executed by cond-free per-signature tick
-        bodies with fused flat optimizer updates), "packed" (uniform
-        work-row lanes, the PR 2 baseline) or "dense" (the legacy
-        one-lane-per-replica layout, kept for parity/benchmark
-        baselines)."""
+    def make_engine(self, sim: SimResult, *, engine: str = "compiled",
+                    pack: str = "segmented") -> ReplayEngine:
+        """Build a `ReplayEngine` for this trainer's config and event
+        log.  The compiled engine is safe to cache and share across
+        trainers of the same shape (the Session API does exactly that):
+        params, seed and hyperparameters all enter per run."""
         if engine not in ENGINES:
             raise ValueError(f"engine {engine!r} not in {ENGINES}")
         if engine == "compiled":
-            return self._replay_compiled(
-                sim, eval_every_epoch=eval_every_epoch, pack=pack)
-        return self._replay_event(sim, eval_every_epoch=eval_every_epoch)
+            sched = compile_schedule(
+                self.cfg, sim.events, n_rep_a=self.n_rep_a,
+                n_rep_p=self.n_rep_p, n_samples=len(self.y),
+                disable_semi_async=self.disable_semi_async, pack=pack)
+            return CompiledReplayEngine(
+                sched, task=self.task, resnet=self.resnet, clip=self.clip,
+                sigma=self.sigma, lr=self.lr, seed=self.cfg.seed)
+        return EventReplayEngine(
+            self.cfg, sim.events, n_rep_a=self.n_rep_a,
+            n_rep_p=self.n_rep_p, n_samples=len(self.y), task=self.task,
+            resnet=self.resnet, clip=self.clip, sigma=self.sigma,
+            lr=self.lr, seed=self.seed,
+            disable_semi_async=self.disable_semi_async)
 
     # ------------------------------------------------------------------
-    def _replay_compiled(self, sim: SimResult, *,
-                         eval_every_epoch: bool = True,
-                         pack: str = "segmented") -> TrainResult:
+    def replay(self, sim: SimResult, *, eval_every_epoch: bool = True,
+               engine: str = "compiled", pack: str = "segmented",
+               callbacks: Sequence[Callback] = ()) -> TrainResult:
+        """Execute the event log.  `engine="compiled"` (default) runs the
+        jitted scan engine; `engine="event"` runs the per-event loop
+        (reference semantics, used for parity testing).  `pack` selects
+        the compiled engine's lane layout: "segmented" (default),
+        "packed" or "dense" (see core.schedule).  `callbacks` run after
+        every epoch (see `EpochContext`)."""
+        return self.replay_with(self.make_engine(sim, engine=engine,
+                                                 pack=pack),
+                                eval_every_epoch=eval_every_epoch,
+                                callbacks=callbacks)
+
+    def replay_with(self, eng: ReplayEngine, *,
+                    eval_every_epoch: bool = True,
+                    callbacks: Sequence[Callback] = (),
+                    state=None, seed: Optional[int] = None) -> TrainResult:
+        """Drive a prebuilt engine through the staged protocol.  `state`
+        resumes a checkpointed replay from `state.epoch` (see
+        `checkpoint.store.save_state` / `engine.load_state`); `seed`
+        keys the device DP noise stream (default: the trainer's)."""
         cfg = self.cfg
-        sched = compile_schedule(
-            cfg, sim.events, n_rep_a=self.n_rep_a, n_rep_p=self.n_rep_p,
-            n_samples=len(self.y),
-            disable_semi_async=self.disable_semi_async, pack=pack)
-        eng = CompiledReplayEngine(
-            sched, task=self.task, resnet=self.resnet, clip=self.clip,
-            sigma=self.sigma, lr=self.lr, seed=cfg.seed)
-        d_emb = self.theta_p[0]["layers"][-1]["b"].shape[0]
         data = eng.stage_data(self.Xa, self.Xp, self.y)
-        state = eng.init_state(self.theta_a, self.opt_a,
-                               self.theta_p, self.opt_p, d_emb)
+        if state is None:
+            # seed=None keeps each engine's own default noise keying
+            # (compiled: the schedule cfg seed; event: the trainer seed)
+            state = eng.init_state(
+                self.theta_a, self.opt_a, self.theta_p, self.opt_p,
+                self.d_emb, seed=seed)
+        hyper = self.hyper()
         history: List[float] = []
-        for e in range(cfg.n_epochs):
-            state = eng.run_segment(state, e, data)
+        for e in range(int(state.epoch), cfg.n_epochs):
+            state = eng.run_epoch(state, e, data, hyper)
+            ctx = EpochContext(epoch=e + 1, n_epochs=cfg.n_epochs,
+                               state=state, engine=eng, trainer=self,
+                               history=history)
             if eval_every_epoch:
-                ta, tp = eng.params_mean(state)
-                history.append(self._metric(ta, tp))
+                history.append(ctx.evaluate())
+                ctx.in_history = True
+            for cb in callbacks:
+                cb(ctx)
+            if ctx.stop:
+                break
+        # executed active steps come from the state's per-epoch count
+        # buckets, so an early-stopped or resumed replay reports what
+        # actually ran (== the schedule pre-pass count on a full replay)
+        executed = int(np.asarray(state.cnt_vec, dtype=np.float64).sum())
         (self.theta_a, self.opt_a, self.theta_p, self.opt_p,
          losses) = eng.finish(state)
-        self.version_p = list(sched.versions_p)
-        self.staleness.extend(sched.staleness)
-        self.n_updates += sched.n_updates
+        self.version_p = list(eng.versions_p)
+        # staleness is the schedule-wide compile-time sequence (no
+        # per-epoch attribution); on an early-stopped replay it covers
+        # the full schedule, not the executed prefix
+        self.staleness.extend(eng.staleness)
+        self.n_updates += executed
         if not history:
             history.append(self.evaluate())
         metric = "auc" if self.task == "classification" else "rmse"
+        sched = getattr(eng, "schedule", None)
         return TrainResult(
             metric_name=metric, history=history, losses=losses,
             final_metric=history[-1],
             staleness_mean=(float(np.mean(self.staleness))
                             if self.staleness else 0.0),
             n_updates=self.n_updates,
-            lane_occupancy=sched.lane_occupancy(), n_ticks=sched.n_ticks)
-
-    # ------------------------------------------------------------------
-    def _replay_event(self, sim: SimResult, *,
-                      eval_every_epoch: bool = True) -> TrainResult:
-        cfg = self.cfg
-        m = cfg.method
-        sync_marks = set(sync_epochs(cfg.n_epochs, cfg.dt0))
-        if self.disable_semi_async:                    # ablation: w/o ΔT
-            sync_marks = set(range(1, cfg.n_epochs + 1))
-        history, losses = [], []
-        ep_loss, ep_count = 0.0, 0
-        a_steps_total = 0
-        round_size = min(cfg.w_a, cfg.w_p)
-        epoch_of_step = lambda s: min(s // max(cfg.n_batches, 1),
-                                      cfg.n_epochs - 1)
-        cur_epoch = 0
-
-        for t, kind, pl in sim.events:
-            if kind == "p_fwd":
-                bid, w = pl["bid"], pl["w"]
-                rep = self._rep(w, "p")
-                rows = self._rows(bid)
-                if self.sigma > 0 or math.isfinite(self.clip):
-                    # same fused DP publish as the compiled engine
-                    # (projection+tanh+clip+noise via the cut-layer op);
-                    # only the noise SOURCE stays host-side — the legacy
-                    # numpy rng stream — so event-engine DP runs remain
-                    # reproducible against pre-fusion results
-                    noise = None
-                    if self.sigma > 0:
-                        d_emb = self.theta_p[rep]["layers"][-1]["b"].shape[0]
-                        noise = jnp.asarray(self.rng.normal(
-                            size=(len(rows), d_emb)).astype(np.float32))
-                    z = tabular.publish_embedding(
-                        self.theta_p[rep], jnp.asarray(self.Xp[rows]),
-                        noise, clip=self.clip, sigma=self.sigma,
-                        resnet=self.resnet)
-                else:
-                    z = tabular.passive_forward(
-                        self.theta_p[rep], jnp.asarray(self.Xp[rows]),
-                        resnet=self.resnet)
-                self._emb_buf[bid] = (z, rows, rep, self.version_p[rep])
-            elif kind == "a_step":
-                bid, w = pl["bid"], pl["w"]
-                if bid not in self._emb_buf:
-                    continue                            # dropped upstream
-                z, rows, rep_p, fwd_ver = self._emb_buf.pop(bid)
-                rep = self._rep(w, "a")
-                loss, g_a, g_z = tabular.active_step(
-                    self.theta_a[rep], jnp.asarray(self.Xa[rows]), z,
-                    jnp.asarray(self.y[rows]), task=self.task,
-                    resnet=self.resnet)
-                ups, self.opt_a[rep] = self.opt.update(
-                    g_a, self.opt_a[rep], self.theta_a[rep])
-                self.theta_a[rep] = apply_updates(self.theta_a[rep], ups)
-                self._grad_buf[bid] = (g_z, rows, rep_p, fwd_ver)
-                ep_loss += float(loss)
-                ep_count += 1
-                a_steps_total += 1
-                self.n_updates += 1
-                # --- synchronous VFL-PS: aggregate every round ---
-                if m == "vfl_ps" and a_steps_total % round_size == 0:
-                    self._aggregate_a()
-            elif kind == "p_bwd":
-                bid = pl["bid"]
-                if bid not in self._grad_buf:
-                    continue
-                g_z, rows, rep_p, fwd_ver = self._grad_buf.pop(bid)
-                self.staleness.append(self.version_p[rep_p] - fwd_ver)
-                g_p = tabular.passive_backward(
-                    self.theta_p[rep_p], jnp.asarray(self.Xp[rows]), g_z,
-                    resnet=self.resnet)
-                ups, self.opt_p[rep_p] = self.opt.update(
-                    g_p, self.opt_p[rep_p], self.theta_p[rep_p])
-                self.theta_p[rep_p] = apply_updates(self.theta_p[rep_p],
-                                                    ups)
-                self.version_p[rep_p] += 1
-                if m == "vfl_ps" and self.version_p[rep_p] % \
-                        max(round_size, 1) == 0:
-                    self._aggregate_p()
-
-            # epoch boundary bookkeeping (driven by completed a_steps)
-            new_epoch = epoch_of_step(a_steps_total)
-            if new_epoch > cur_epoch or (t == sim.events[-1][0] and
-                                         kind == sim.events[-1][1]):
-                for ep_done in range(cur_epoch + 1, new_epoch + 1):
-                    if m == "avfl_ps" or (m == "pubsub" and
-                                          ep_done in sync_marks):
-                        self._aggregate_a()
-                        self._aggregate_p()
-                    losses.append(ep_loss / max(ep_count, 1))
-                    ep_loss, ep_count = 0.0, 0
-                    if eval_every_epoch:
-                        history.append(self.evaluate())
-                cur_epoch = new_epoch
-
-        while len(losses) < cfg.n_epochs:
-            losses.append(ep_loss / max(ep_count, 1))
-            ep_loss, ep_count = 0.0, 0
-            history.append(self.evaluate())
-        if not history:
-            history.append(self.evaluate())
-
-        metric = "auc" if self.task == "classification" else "rmse"
-        return TrainResult(
-            metric_name=metric, history=history, losses=losses,
-            final_metric=history[-1],
-            staleness_mean=(float(np.mean(self.staleness))
-                            if self.staleness else 0.0),
-            n_updates=self.n_updates)
-
-    # ------------------------------------------------------------------
-    def _aggregate_a(self):
-        agg = aggregate(self.theta_a)
-        self.theta_a = [jax.tree.map(lambda x: x, agg)
-                        for _ in range(self.n_rep_a)]
-
-    def _aggregate_p(self):
-        agg = aggregate(self.theta_p)
-        self.theta_p = [jax.tree.map(lambda x: x, agg)
-                        for _ in range(self.n_rep_p)]
+            lane_occupancy=sched.lane_occupancy() if sched else 0.0,
+            n_ticks=sched.n_ticks if sched else 0)
 
     # ------------------------------------------------------------------
     def evaluate(self) -> float:

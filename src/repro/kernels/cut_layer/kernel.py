@@ -18,12 +18,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _cut_layer_kernel(*refs, n_k: int, clip: float, sigma: float,
-                      with_residual: bool):
+def _cut_layer_kernel(*refs, n_k: int, with_residual: bool):
     if with_residual:
-        x_ref, w_ref, b_ref, n_ref, r_ref, o_ref, acc = refs
+        x_ref, w_ref, b_ref, n_ref, r_ref, cs_ref, o_ref, acc = refs
     else:
-        x_ref, w_ref, b_ref, n_ref, o_ref, acc = refs
+        x_ref, w_ref, b_ref, n_ref, cs_ref, o_ref, acc = refs
         r_ref = None
     kj = pl.program_id(1)
 
@@ -36,6 +35,11 @@ def _cut_layer_kernel(*refs, n_k: int, clip: float, sigma: float,
 
     @pl.when(kj == n_k - 1)
     def _epilogue():
+        # clip/sigma arrive as an SMEM scalar pair so the compiled kernel
+        # is reused across DP settings (a Session sweep varies dp_mu with
+        # one XLA program; see api/session.py)
+        clip = cs_ref[0, 0]
+        sigma = cs_ref[0, 1]
         y = jnp.tanh(acc[...] + b_ref[...].astype(jnp.float32))
         if r_ref is not None:           # residual enters BEFORE the clip
             y = y + r_ref[...].astype(jnp.float32)
@@ -54,14 +58,19 @@ def _clamp_block(dim: int, block: int) -> int:
     return max(block, 1)
 
 
-@functools.partial(jax.jit, static_argnames=("clip", "sigma", "block_m",
-                                             "block_k", "interpret"))
-def cut_layer_pallas(x, w, b, noise, residual=None, *, clip: float,
-                     sigma: float, block_m: int = 128, block_k: int = 512,
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k",
+                                             "interpret"))
+def cut_layer_pallas(x, w, b, noise, residual=None, *, clip,
+                     sigma, block_m: int = 128, block_k: int = 512,
                      interpret: bool = None):
     """interpret=None auto-selects: compiled on TPU, interpreter off-TPU
     (Mosaic does not lower on host platforms); REPRO_PALLAS_INTERPRET
     overrides either way.
+
+    `clip` and `sigma` are *runtime* scalars (Python floats or traced
+    f32 scalars): they ride into the kernel as one (1, 2) SMEM pair, so
+    a compiled kernel is reused across DP settings instead of
+    specializing per (clip, sigma).
 
     `residual` (optional, (M, N)) is the skip input of the residual
     ("large model") bottom variant: added to the tanh output in the
@@ -88,9 +97,14 @@ def cut_layer_pallas(x, w, b, noise, residual=None, *, clip: float,
     if residual is not None:
         in_specs.append(row_spec)
         args = args + (residual,)
+    cs = jnp.stack([jnp.asarray(clip, jnp.float32),
+                    jnp.asarray(sigma, jnp.float32)]).reshape(1, 2)
+    in_specs.append(pl.BlockSpec((1, 2), lambda i, j: (0, 0),
+                                 memory_space=pltpu.SMEM))
+    args = args + (cs,)
     return pl.pallas_call(
-        functools.partial(_cut_layer_kernel, n_k=n_k, clip=clip,
-                          sigma=sigma, with_residual=residual is not None),
+        functools.partial(_cut_layer_kernel, n_k=n_k,
+                          with_residual=residual is not None),
         grid=(M // block_m, n_k),
         in_specs=in_specs,
         out_specs=row_spec,

@@ -61,8 +61,8 @@ def hidden_forward(params: Dict, x, resnet: bool = False) -> jnp.ndarray:
 
 def publish_embedding(theta_p, x_p, noise: Optional[jnp.ndarray] = None, *,
                       clip: float = math.inf, sigma: float = 0.0,
-                      resnet: bool = False, use_pallas: bool = False
-                      ) -> jnp.ndarray:
+                      resnet: bool = False, use_pallas: bool = False,
+                      dynamic: bool = False) -> jnp.ndarray:
     """Passive forward fused with the DP publish transform (device-resident).
 
     The last bottom layer IS the cut layer, so both bottom variants route
@@ -72,11 +72,18 @@ def publish_embedding(theta_p, x_p, noise: Optional[jnp.ndarray] = None, *,
     the cut layer's skip connection by feeding the hidden activation to
     the kernel's residual input; only when the cut layer's shapes make the
     skip inapplicable (emb_dim != hidden width — `bottom_forward` skips it
-    there too) does it fall back to a plain projection."""
-    if not (sigma > 0.0 or math.isfinite(clip)):
-        return bottom_forward(theta_p, x_p, resnet)
-    if sigma > 0.0:
-        assert noise is not None, "need noise (std normal) when sigma > 0"
+    there too) does it fall back to a plain projection.
+
+    `dynamic=True` declares the DP transform structurally ON while `clip`
+    and `sigma` are *runtime* values (possibly traced scalars): the
+    Python fast-path/assert gating is skipped so one compiled program
+    serves every (clip, sigma) — the compiled replay engine's sweep-reuse
+    path (api/session.py)."""
+    if not dynamic:
+        if not (sigma > 0.0 or math.isfinite(clip)):
+            return bottom_forward(theta_p, x_p, resnet)
+        if sigma > 0.0:
+            assert noise is not None, "need noise (std normal) when sigma > 0"
     from repro.kernels.cut_layer.ops import cut_layer
     h = hidden_forward(theta_p, x_p, resnet)
     last = theta_p["layers"][-1]

@@ -1,0 +1,260 @@
+"""Session API: staged lifecycle, compile-once/run-many sweep reuse,
+back-compat of the `run_experiment` wrapper, per-epoch callbacks, and
+the planner `PlanTable` satellite."""
+import math
+
+import pytest
+
+from repro.api import (EarlyStop, EvalEvery, ExperimentConfig, History,
+                       MetricStream, Session, compile_stats, run_sweep)
+from repro.api.session import CompiledProgram, Planned, Prepared
+from repro.core.runtime import run_experiment
+
+BASE = dict(method="pubsub", dataset="credit", scale=0.05, n_epochs=2,
+            batch_size=64, w_a=4, w_p=4)
+
+
+def _cfg(**kw):
+    d = dict(BASE)
+    d.update(kw)
+    return ExperimentConfig(**d)
+
+
+# ---------------------------------------------------------------------------
+# staged lifecycle
+# ---------------------------------------------------------------------------
+def test_stages_return_inspectable_artifacts():
+    sess = Session(_cfg())
+    prep = sess.prepare()
+    assert isinstance(prep, Prepared)
+    assert prep.n_samples > 0 and prep.d_a > 0 and prep.d_p > 0
+    pl = sess.plan()
+    assert isinstance(pl, Planned)
+    assert (pl.w_a, pl.w_p, pl.batch_size) == (4, 4, 64)
+    sim = sess.simulate()
+    assert len(sim.events) > 0
+    prog = sess.compile()
+    assert isinstance(prog, CompiledProgram)
+    assert prog.schedule is not None and prog.sim is sim
+    # stages memoize on the session
+    assert sess.prepare() is prep
+    assert sess.plan() is pl
+    assert sess.compile() is prog
+
+
+def test_planner_stage_resolves_workers():
+    sess = Session(_cfg(use_planner=True))
+    pl = sess.plan()
+    assert pl.plan is not None
+    assert pl.w_a >= 2 and pl.w_p >= 2
+    assert pl.run_cfg.w_a == pl.w_a and pl.run_cfg.batch_size == \
+        pl.batch_size
+
+
+def test_structural_key_drops_seed_lr_dp_value():
+    a = Session(_cfg(seed=0)).structural_key()
+    b = Session(_cfg(seed=7)).structural_key()
+    assert a == b
+    assert Session(_cfg(lr=5e-3)).structural_key() == a
+    d1 = Session(_cfg(dp_mu=0.5)).structural_key()
+    d2 = Session(_cfg(dp_mu=2.0)).structural_key()
+    assert d1 == d2 and d1 != a          # dp on/off IS structural
+    assert Session(_cfg(batch_size=32)).structural_key() != a
+    assert Session(_cfg(engine="event")).structural_key() != a
+
+
+# ---------------------------------------------------------------------------
+# compile-once / run-many
+# ---------------------------------------------------------------------------
+def test_sweep_reuses_compiled_program_across_seeds_and_lr():
+    """>=4 same-shape points -> exactly one compile (the acceptance
+    criterion), warm points flagged as cache hits."""
+    cfgs = [_cfg(seed=0), _cfg(seed=1), _cfg(seed=2, lr=3e-3),
+            _cfg(seed=3)]
+    before = compile_stats()
+    sw = run_sweep(cfgs)
+    assert sw.stats["n_points"] == 4
+    assert sw.stats["compiles"] <= 1     # 0 if an earlier test compiled it
+    assert [r.compile_cache_hit for r in sw.results].count(True) >= 3
+    after = compile_stats()
+    assert after["hits"] - before["hits"] >= 3
+    # different seeds still produce different training runs
+    finals = [r["final"] for r in sw.results]
+    assert len(set(finals)) > 1
+
+
+def test_sweep_reuse_across_dp_mu():
+    """dp_mu varies the runtime sigma, not the compiled structure."""
+    sw = run_sweep([_cfg(dp_mu=0.5), _cfg(dp_mu=1.0), _cfg(dp_mu=2.0)])
+    assert sw.stats["compiles"] <= 1
+    assert sum(r.compile_cache_hit for r in sw.results) >= 2
+    finals = [r["final"] for r in sw.results]
+    assert len(set(finals)) == 3         # sigma really took effect
+
+
+def test_exact_reuse_is_seed_faithful():
+    """reuse="exact" (the run_experiment scope) never adopts another
+    seed's timetable."""
+    s0 = Session(_cfg(seed=11), reuse="exact")
+    s0.compile()
+    s1 = Session(_cfg(seed=12), reuse="exact")
+    s1.compile()
+    assert not s1.compile_cache_hit
+    s2 = Session(_cfg(seed=11), reuse="exact")
+    s2.compile()
+    assert s2.compile_cache_hit
+
+
+def test_dp_flip_raises_on_compiled_program():
+    sess = Session(_cfg())
+    sess.compile()
+    with pytest.raises(ValueError, match="dp"):
+        sess.run(dp_mu=0.5)
+
+
+# ---------------------------------------------------------------------------
+# back-compat: run_experiment == the pre-redesign monolith
+# ---------------------------------------------------------------------------
+def _legacy_run_experiment(cfg: ExperimentConfig) -> dict:
+    """The pre-Session `run_experiment` body, verbatim (data -> profile
+    -> DES -> trainer.replay -> dict), as the golden reference."""
+    from repro.api.session import build_profile
+    from repro.core.des import RunConfig, simulate
+    from repro.core.trainer import VFLTrainer
+    from repro.data.synthetic import load
+    from repro.data.vertical import psi_align, vertical_split
+    from repro.dp.gdp import GDPConfig
+
+    ds = load(cfg.dataset, seed=cfg.seed, scale=cfg.scale)
+    tr, te = ds.split(seed=cfg.seed)
+    a_tr, p_tr = vertical_split(tr, seed=cfg.seed,
+                                n_features_active=cfg.features_active)
+    a_te, p_te = vertical_split(te, seed=cfg.seed,
+                                n_features_active=cfg.features_active)
+    a_tr, p_tr = psi_align(a_tr, p_tr)
+    profile = build_profile(cfg, a_tr.X.shape[1], p_tr.X.shape[1])
+    w_a, w_p, B = cfg.w_a, cfg.w_p, cfg.batch_size
+    run_cfg = RunConfig(
+        method=cfg.method, n_samples=a_tr.X.shape[0], batch_size=B,
+        n_epochs=cfg.n_epochs, w_a=w_a, w_p=w_p, profile=profile,
+        p=cfg.p, q=cfg.q,
+        t_ddl=(0.0 if cfg.disable_deadline else cfg.t_ddl),
+        dt0=cfg.dt0, jitter=cfg.jitter, seed=cfg.seed)
+    sim = simulate(run_cfg)
+    gdp = None
+    if math.isfinite(cfg.dp_mu):
+        gdp = GDPConfig(mu=cfg.dp_mu, clip=1.0, minibatch=B,
+                        global_batch=B,
+                        n_queries=run_cfg.n_batches * cfg.n_epochs)
+    trainer = VFLTrainer(run_cfg, a_tr, p_tr, a_te, p_te, ds.task,
+                         seed=cfg.seed, resnet=cfg.resnet, gdp=gdp,
+                         depth=cfg.depth,
+                         disable_semi_async=cfg.disable_semi_async)
+    res = trainer.replay(sim, engine=cfg.engine, pack=cfg.pack)
+    return {
+        "method": cfg.method, "dataset": cfg.dataset, "task": ds.task,
+        "metric": res.metric_name, "final": res.final_metric,
+        "history": res.history, "losses": res.losses,
+        "sim_s": sim.total_time,
+        "sim_s_per_epoch": sim.total_time / max(cfg.n_epochs, 1),
+        "cpu_util": sim.cpu_util,
+        "waiting_per_epoch": sim.waiting_per_epoch,
+        "comm_mb": sim.comm_mb, "staleness": res.staleness_mean,
+        "lane_occupancy": res.lane_occupancy,
+        "drops": sim.stats["drops"], "w_a": sim.stats["w_a"],
+        "w_p": sim.stats["w_p"], "batch_size": B,
+        "plan": None,
+    }
+
+
+@pytest.mark.parametrize("method", ["vfl", "pubsub"])
+@pytest.mark.parametrize("engine", ["compiled", "event"])
+def test_run_experiment_matches_legacy_monolith(method, engine):
+    """The wrapper returns a dict with the same keys and same values
+    (fixed seed) as the pre-redesign one-shot implementation."""
+    cfg = _cfg(method=method, engine=engine, seed=3)
+    got = run_experiment(cfg)
+    want = _legacy_run_experiment(cfg)
+    assert set(got) == set(want)
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# callbacks
+# ---------------------------------------------------------------------------
+def test_eval_every_custom_cadence():
+    sess = Session(_cfg(n_epochs=4))
+    out = sess.run(eval_every_epoch=False, callbacks=[EvalEvery(2)])
+    assert len(out["history"]) == 2      # epochs 2 and 4 only
+
+
+def test_early_stop_by_target():
+    sess = Session(_cfg(n_epochs=4))
+    out = sess.run(callbacks=[EarlyStop(target=-1.0,
+                                        higher_better=True)])
+    assert len(out["history"]) == 1      # stopped after epoch 1
+
+
+def test_eval_every_composes_with_eval_every_epoch():
+    """EvalEvery is a no-op on epochs already in the history, so the
+    default eval_every_epoch=True path never double-appends."""
+    sess = Session(_cfg(n_epochs=2))
+    out = sess.run(callbacks=[EvalEvery(1)])     # eval_every_epoch=True
+    assert len(out["history"]) == 2
+
+
+def test_early_stop_patience_resets_between_sweep_points():
+    """A shared EarlyStop instance must not leak patience state from
+    one sweep point into the next (it resets at epoch 1)."""
+    cb = EarlyStop(patience=1, higher_better=True)
+    sw = run_sweep([_cfg(n_epochs=2, seed=21), _cfg(n_epochs=2, seed=22)],
+                   callbacks=[cb])
+    # each point ran at least its first epoch on its own merits
+    for r in sw.results:
+        assert len(r["history"]) >= 1
+
+
+def test_metric_stream_and_history_callbacks():
+    records = []
+    hist = History()
+    sess = Session(_cfg())
+    sess.run(callbacks=[MetricStream(records.append), hist])
+    assert [r["epoch"] for r in records] == [1, 2]
+    assert all("metric" in r for r in records)
+    assert [r["metric"] for r in hist.records] == \
+        [r["metric"] for r in records]
+
+
+# ---------------------------------------------------------------------------
+# satellites: epochs_to_target sentinel + planner PlanTable
+# ---------------------------------------------------------------------------
+def test_epochs_to_target_returns_inf_when_unreached():
+    from repro.core.trainer import TrainResult
+    res = TrainResult(metric_name="auc", history=[0.5, 0.7, 0.9],
+                      losses=[1.0, 0.5, 0.2], final_metric=0.9,
+                      staleness_mean=0.0, n_updates=3)
+    assert res.epochs_to_target(0.7, True) == 2
+    assert res.epochs_to_target(0.9, True) == 3      # reached on last
+    assert res.epochs_to_target(0.95, True) == math.inf   # never
+    assert res.epochs_to_target(0.2, False) == math.inf   # lower-better
+
+
+def test_plan_table_argmin_matches_plan():
+    from repro.core.cost_model import PartyProfile, SystemProfile
+    from repro.core.planner import plan
+
+    profile = SystemProfile(active=PartyProfile(cores=16),
+                            passive=PartyProfile(cores=24))
+    for objective in ("paper", "throughput"):
+        p = plan(profile, w_a_range=(2, 10), w_p_range=(2, 10),
+                 keep_table=True, objective=objective)
+        t = p.table
+        assert t is not None
+        assert t.costs.shape == (len(t.was), len(t.wps), len(t.batches))
+        assert t.argmin() == (p.w_a, p.w_p, p.batch_size)
+        i = t.was.index(p.w_a)
+        j = t.wps.index(p.w_p)
+        r = t.batches.index(p.batch_size)
+        assert t.costs[i, j, r] == pytest.approx(p.cost)
+    assert plan(profile, w_a_range=(2, 10), w_p_range=(2, 10)).table \
+        is None
