@@ -52,6 +52,11 @@ from benchmarks.common import EPOCHS, SCALE, SEED, emit
 
 PACKS = ("dense", "packed", "segmented")
 
+# worker shape of the point-stacked sweep record (same as the main
+# section: at larger pools the 4-point carry outgrows this box's cache
+# and the stacking win drowns in DRAM traffic — w=8/10 measured ~1.0x)
+SWEEP_STACKED_WORKERS = (4, 4)
+
 
 def _build(method: str = "pubsub", batch_size: int = 256):
     ds = load("synthetic", seed=SEED, scale=max(SCALE * 0.4, 0.004))
@@ -70,11 +75,11 @@ def _build(method: str = "pubsub", batch_size: int = 256):
     return cfg, sim, mk
 
 
-def _timed(mk, sim, engine, pack="segmented"):
+def _timed(mk, sim, engine, pack="segmented", **kw):
     trainer = mk()
     t0 = time.perf_counter()
     res = trainer.replay(sim, engine=engine, pack=pack,
-                         eval_every_epoch=False)
+                         eval_every_epoch=False, **kw)
     return time.perf_counter() - t0, res
 
 
@@ -115,16 +120,42 @@ def _micro_row(B: int, best: dict, res: dict) -> dict:
     return row
 
 
-def _micro(record: dict, best_256: dict, res_256: dict) -> None:
-    """Per-tick fixed-cost sweep: B in {32, 256} x the three layouts.
+def _drop_row(mk, sim, B: int, row: dict) -> None:
+    """A/B the donation-aliased ``.at[].set(mode="drop")`` replica
+    scatter against the default where-merge on the segmented layout
+    (the ROADMAP "re-measure on accelerators" item, one command away:
+    ``python -m benchmarks.replay_throughput``).  On CPU the where-merge
+    is expected to stay ahead — the scatter serializes — so the default
+    is unchanged; on accelerators the drop-scatter can alias the donated
+    carry in place."""
+    _timed(mk, sim, "compiled", "segmented", scatter_drop=True)  # warm
+    t1, r1 = _timed(mk, sim, "compiled", "segmented", scatter_drop=True)
+    t2, _ = _timed(mk, sim, "compiled", "segmented", scatter_drop=True)
+    t = min(t1, t2)
+    us_tick = t / max(r1.n_ticks, 1) * 1e6
+    vs_where = row["segmented"]["total_s"] / t
+    emit(f"replay/micro_b{B}_segmented_drop", us_tick,
+         f"total_s={t:.3f};n_ticks={r1.n_ticks};"
+         f"drop_vs_where_x={vs_where:.2f}")
+    row["segmented_drop"] = {"total_s": t, "us_per_tick": us_tick,
+                             "n_ticks": r1.n_ticks,
+                             "drop_vs_where_x": vs_where}
+
+
+def _micro(record: dict, best_256: dict, res_256: dict,
+           mk_256, sim_256) -> None:
+    """Per-tick fixed-cost sweep: B in {32, 256} x the three layouts,
+    plus the segmented drop-scatter variant at each B.
     The B=256 point reuses the steady measurements of the main section
     (same config, just measured); only B=32 is built and timed here."""
     record["micro"] = {"B256": _micro_row(256, best_256, res_256)}
+    _drop_row(mk_256, sim_256, 256, record["micro"]["B256"])
     cfg, sim, mk = _build(batch_size=32)
     for pack in PACKS:
         _timed(mk, sim, "compiled", pack)            # warm
     best, res = _steady(mk, sim, reps=2)
     record["micro"]["B32"] = _micro_row(32, best, res)
+    _drop_row(mk, sim, 32, record["micro"]["B32"])
 
 
 def _sweep_reuse(record: dict) -> None:
@@ -175,6 +206,78 @@ def _sweep_reuse(record: dict) -> None:
          f"sweep_cold_s={cold:.2f}")
 
 
+def _sweep_stacked(record: dict) -> None:
+    """Point-stacked vs sequential sweep execution: the same 4-point
+    same-shape seed sweep (B=256, the paper's operating regime) run warm
+    both ways.  Sequential warm points pay the full per-point epoch
+    dispatch + per-tick program N times; the stacked sweep fuses the
+    group into ONE vmapped device program (`run_sweep(stacked=True)`),
+    so the per-tick fixed costs are paid once and the batched math
+    amortizes XLA-CPU's small-op inefficiency.  Both directions measure
+    `run_sweep` wall clock with eval off (eval cost is identical per
+    point in both modes and only dilutes the ratio).  Emitted as the
+    `sweep_stacked` record + `replay/sweep_stacked` row."""
+    from repro.api import (ExperimentConfig, compile_stats,
+                           reset_compile_cache, run_sweep)
+
+    mk_cfg = lambda s: ExperimentConfig(
+        method="pubsub", dataset="synthetic",
+        scale=max(SCALE * 0.4, 0.004), n_epochs=EPOCHS, batch_size=256,
+        w_a=SWEEP_STACKED_WORKERS[0], w_p=SWEEP_STACKED_WORKERS[1],
+        seed=s)
+    cfgs = [mk_cfg(s) for s in range(4)]
+    reset_compile_cache()
+    run_sweep(cfgs, eval_every_epoch=False)          # compile + warm seq
+    before = compile_stats()
+    t0 = time.perf_counter()
+    st = run_sweep(cfgs, stacked=True, stack_chunk=4,
+                   eval_every_epoch=False)
+    stacked_cold_s = time.perf_counter() - t0        # + the vmap trace
+    # both modes warm; interleave best-of-3 so drifting machine load
+    # biases neither (the same protocol as `_steady`).  Two stacked
+    # strategies are tracked: the platform default (per-point chunks on
+    # CPU) and the whole-group single vmapped program (the accelerator
+    # default, forced here with stack_chunk=4).
+    seq_s = stacked_s = one_prog_s = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        seq = run_sweep(cfgs, eval_every_epoch=False)
+        dt = time.perf_counter() - t0
+        seq_s = dt if seq_s is None else min(seq_s, dt)
+        t0 = time.perf_counter()
+        st = run_sweep(cfgs, stacked=True, eval_every_epoch=False)
+        dt = time.perf_counter() - t0
+        stacked_s = dt if stacked_s is None else min(stacked_s, dt)
+        t0 = time.perf_counter()
+        op = run_sweep(cfgs, stacked=True, stack_chunk=4,
+                       eval_every_epoch=False)
+        dt = time.perf_counter() - t0
+        one_prog_s = dt if one_prog_s is None else min(one_prog_s, dt)
+    compiles = compile_stats()["compiles"] - before["compiles"]
+    assert compiles == 0, "stacked sweep must reuse the cached program"
+    for a, b, c in zip(seq, st, op):
+        assert a.train.history == b.train.history == c.train.history, \
+            "stacked point diverged from sequential"
+    speedup = seq_s / stacked_s
+    record["sweep_stacked"] = {
+        "n_points": 4, "batch_size": 256,
+        "w_a": SWEEP_STACKED_WORKERS[0], "w_p": SWEEP_STACKED_WORKERS[1],
+        "sequential_warm_s": seq_s, "stacked_warm_s": stacked_s,
+        "stacked_one_program_warm_s": one_prog_s,
+        "stacked_cold_s": stacked_cold_s,
+        "stacked_vs_sequential_x": speedup,
+        "one_program_vs_sequential_x": seq_s / one_prog_s,
+        "compiles_during_stacked": compiles,
+        "points_per_group": st.stats["points_per_group"],
+        "stacked_groups": st.stats["stacked_groups"],
+    }
+    emit("replay/sweep_stacked", stacked_s * 1e6,
+         f"stacked_vs_sequential_x={speedup:.2f};"
+         f"one_program_vs_sequential_x={seq_s / one_prog_s:.2f};"
+         f"sequential_warm_s={seq_s:.2f};stacked_warm_s={stacked_s:.2f};"
+         f"stacked_groups={st.stats['stacked_groups']}")
+
+
 def run() -> None:
     cfg, sim, mk = _build()
     n_events = len(sim.events)
@@ -221,8 +324,9 @@ def run() -> None:
         "packed_vs_dense": best["dense"] / best["packed"],
     }
 
-    _micro(record, best, res)
+    _micro(record, best, res, mk, sim)
     _sweep_reuse(record)
+    _sweep_stacked(record)
 
     with open("BENCH_replay.json", "w") as fh:
         json.dump(record, fh, indent=2)

@@ -6,10 +6,16 @@ DES, schedule lowering and XLA tracing entirely (and data prep too for
 points sharing the data seed) — the compile-once/run-many path the
 Session API exists for.
 
-    PYTHONPATH=src python examples/sweep.py [n_points]
+    PYTHONPATH=src python examples/sweep.py [n_points] [--stacked]
 
-Exits non-zero if the warm points did not hit the compile cache (used
-as the CI smoke assertion).
+With ``--stacked`` the same points are then re-run point-stacked
+(`run_sweep(..., stacked=True)`): the whole structural group executes
+as ONE vmapped device program against the already-cached compile, and
+per-point finals are asserted equal to the sequential path.
+
+Exits non-zero if the warm points did not hit the compile cache, or (in
+stacked mode) if the group did not stack / the per-point results
+diverge (used as the CI smoke assertion).
 """
 import sys
 
@@ -18,11 +24,14 @@ sys.path.insert(0, "src")
 from repro.api import ExperimentConfig, run_sweep  # noqa: E402
 
 
-def main(n_points: int = 2) -> int:
-    cfgs = [ExperimentConfig(method="pubsub", dataset="bank", scale=0.05,
+def _cfgs(n_points: int):
+    return [ExperimentConfig(method="pubsub", dataset="bank", scale=0.05,
                              n_epochs=3, batch_size=64, w_a=4, w_p=4,
                              seed=s) for s in range(n_points)]
-    sw = run_sweep(cfgs)
+
+
+def main(n_points: int = 2, stacked: bool = False) -> int:
+    sw = run_sweep(_cfgs(n_points))
     for i, r in enumerate(sw.results):
         kind = "warm (cache hit)" if r.compile_cache_hit else "cold"
         print(f"point {i}: seed={r.seed} final={r['final']:.4f} "
@@ -38,9 +47,37 @@ def main(n_points: int = 2) -> int:
     print(f"amortization: warm points ran "
           f"{s['cold_wall_s_mean'] / max(s['warm_wall_s_mean'], 1e-9):.1f}x "
           f"faster than the cold point")
+    if not stacked:
+        return 0
+
+    # stack_chunk pins the whole group into ONE vmapped device program
+    # (the CPU default would tile into per-point chunks), so this smoke
+    # genuinely exercises the vmapped stacked path
+    st = run_sweep(_cfgs(n_points), stacked=True, stack_chunk=n_points)
+    ss = st.stats
+    print(f"\nstacked: groups={ss['points_per_group']} "
+          f"stacked_groups={ss['stacked_groups']} "
+          f"compiles={ss['compiles']} wall={ss['wall_s']:.2f}s "
+          f"(sequential {s['wall_s']:.2f}s)")
+    if ss["compiles"] != 0 or ss["stacked_groups"] != 1 or \
+            ss["points_per_group"] != [n_points]:
+        print("ERROR: stacked sweep should reuse the one compiled "
+              "program and stack all points into one group",
+              file=sys.stderr)
+        return 1
+    for i, (a, b) in enumerate(zip(sw.results, st.results)):
+        if a["final"] != b["final"] or \
+                a.train.history != b.train.history:
+            print(f"ERROR: stacked point {i} diverged from sequential "
+                  f"({a['final']} vs {b['final']})", file=sys.stderr)
+            return 1
+    print("stacked finals match the sequential path bit-for-bit")
     return 0
 
 
 if __name__ == "__main__":
-    n = int(sys.argv[1]) if len(sys.argv) > 1 else 2
-    raise SystemExit(main(n))
+    args = [a for a in sys.argv[1:]]
+    stacked = "--stacked" in args
+    args = [a for a in args if a != "--stacked"]
+    n = int(args[0]) if args else 2
+    raise SystemExit(main(n, stacked=stacked))

@@ -388,37 +388,44 @@ class Session:
                          global_batch=pl.batch_size,
                          n_queries=pl.run_cfg.n_batches * self.cfg.n_epochs)
 
-    def run(self, *, seed: Optional[int] = None, lr: Optional[float] = None,
-            dp_mu: Optional[float] = None,
-            callbacks: Sequence[Callback] = (),
-            eval_every_epoch: bool = True, state=None) -> RunResult:
-        """Train against the compiled program.  `seed` re-keys the model
-        init and DP noise; `lr` and `dp_mu` override the runtime
-        hyperparameters — none of the three invalidates the compiled
-        program (DP must stay on/off as compiled, since that is
-        structure).  `state` resumes a checkpointed mid-training state
-        (`checkpoint.store.restore_state` + `engine.load_state`)."""
+    def _resolve_point(self, seed, lr, dp_mu) -> tuple:
+        """Fill run-point defaults from the config and validate that
+        `dp_mu` keeps DP on/off as compiled (that is structure)."""
         cfg = self.cfg
-        t0 = time.perf_counter()
-        prog = self.compile()
-        prep = self.prepare()
-        pl = prog.planned
         seed = cfg.seed if seed is None else seed
         lr = cfg.lr if lr is None else lr
         dp_mu = cfg.dp_mu if dp_mu is None else dp_mu
-        if math.isfinite(dp_mu) != prog.dp_on:
+        if math.isfinite(dp_mu) != self.compile().dp_on:
             raise ValueError(
                 "dp_mu flips DP on/off, which is part of the compiled "
                 "structure — use a Session whose config matches "
-                f"(compiled dp_on={prog.dp_on}, got dp_mu={dp_mu})")
-        trainer = VFLTrainer(
+                f"(compiled dp_on={self.compile().dp_on}, got "
+                f"dp_mu={dp_mu})")
+        return seed, lr, dp_mu
+
+    def _make_trainer(self, seed: int, lr: float,
+                      dp_mu: float) -> VFLTrainer:
+        """A fresh `VFLTrainer` (new model init for `seed`) against this
+        session's prepared data and compiled plan — the per-point work a
+        cache-hit run still pays.  Used by `run()` and, per point, by
+        the stacked sweep driver (`api.sweep`)."""
+        cfg = self.cfg
+        pl = self.compile().planned
+        prep = self.prepare()
+        return VFLTrainer(
             pl.run_cfg, prep.train_active, prep.train_passive,
             prep.test_active, prep.test_passive, prep.task, lr=lr,
             seed=seed, resnet=cfg.resnet, gdp=self._gdp(dp_mu, pl),
             depth=cfg.depth, disable_semi_async=cfg.disable_semi_async)
-        res = trainer.replay_with(prog.engine, callbacks=callbacks,
-                                  eval_every_epoch=eval_every_epoch,
-                                  state=state, seed=seed)
+
+    def _result(self, res: TrainResult, *, wall_s: float, seed: int,
+                lr: float, dp_mu: float) -> RunResult:
+        """Wrap a finished `TrainResult` into the legacy-metrics
+        `RunResult` for this session's compiled program."""
+        cfg = self.cfg
+        prog = self.compile()
+        prep = self.prepare()
+        pl = prog.planned
         sim = prog.sim
         metrics = {
             "method": cfg.method,
@@ -443,5 +450,24 @@ class Session:
         }
         return RunResult(metrics=metrics, train=res,
                          compile_cache_hit=self.compile_cache_hit,
-                         wall_s=time.perf_counter() - t0, seed=seed,
-                         lr=lr, dp_mu=dp_mu)
+                         wall_s=wall_s, seed=seed, lr=lr, dp_mu=dp_mu)
+
+    def run(self, *, seed: Optional[int] = None, lr: Optional[float] = None,
+            dp_mu: Optional[float] = None,
+            callbacks: Sequence[Callback] = (),
+            eval_every_epoch: bool = True, state=None) -> RunResult:
+        """Train against the compiled program.  `seed` re-keys the model
+        init and DP noise; `lr` and `dp_mu` override the runtime
+        hyperparameters — none of the three invalidates the compiled
+        program (DP must stay on/off as compiled, since that is
+        structure).  `state` resumes a checkpointed mid-training state
+        (`checkpoint.store.restore_state` + `engine.load_state`)."""
+        t0 = time.perf_counter()
+        prog = self.compile()
+        seed, lr, dp_mu = self._resolve_point(seed, lr, dp_mu)
+        trainer = self._make_trainer(seed, lr, dp_mu)
+        res = trainer.replay_with(prog.engine, callbacks=callbacks,
+                                  eval_every_epoch=eval_every_epoch,
+                                  state=state, seed=seed)
+        return self._result(res, wall_s=time.perf_counter() - t0,
+                            seed=seed, lr=lr, dp_mu=dp_mu)

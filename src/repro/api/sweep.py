@@ -1,18 +1,46 @@
 """`run_sweep`: the compile-once/run-many driver over a list of configs.
 
-Points are executed in order, each through its own `Session` with
-``reuse="structural"`` by default, so every point whose structural key
-matches an earlier one reuses that point's compiled program (schedule +
-jitted engine + pinned DES timetable) and only pays model init + the
-actual training scans.  `SweepResult.stats` exposes the compile-cache
-counters and per-point wall clock, which is how the amortization win is
-asserted in CI and tracked in `BENCH_replay.json`.
+Two execution modes over the same structural-reuse cache:
+
+* **sequential** (default) — points run in order, each through its own
+  `Session` with ``reuse="structural"``, so every point whose structural
+  key matches an earlier one reuses that point's compiled program
+  (schedule + jitted engine + pinned DES timetable) and only pays model
+  init + the actual training scans.
+* **point-stacked** (``stacked=True``) — points are first grouped by
+  structural key; each multi-point group of compiled-engine points then
+  executes point-stacked: per-point model/opt/DP-PRNG state is stacked
+  along a new leading point axis, lr/clip/sigma become per-point
+  vectors, the pinned tick schedule is broadcast, and the cached epoch
+  runners execute vmapped over the point axis
+  (`CompiledReplayEngine.run_epoch_stacked`).  A group runs as chunks
+  of `stack_chunk` points — one vmapped device program each — with
+  chunks on a core-bounded pool of executor threads; the default is
+  the whole group in one program on accelerators and per-point chunks
+  on CPU (`_default_chunk`), where concurrency recovers the cores
+  XLA-CPU's intra-op parallelism leaves idle.  The stacked state is unstacked
+  back into ordinary per-point `RunResult`s, so callers see exactly
+  the sequential surface.  Per-point results match sequential
+  execution bit-for-bit (each point's params, data, hyper scalars and
+  noise key are its own; only the *batching* differs) while the
+  per-tick dispatch and fixed costs are paid once per chunk instead of
+  once per point.  Device memory scales with chunk × (state + data).
+
+`SweepResult.stats` exposes the compile-cache counters, per-point wall
+clock, and the structural-group composition (``points_per_group``,
+``stacked_groups``), which is how the amortization win is asserted in
+CI and tracked in `BENCH_replay.json` (``sweep_reuse`` /
+``sweep_stacked`` records).
 """
 from __future__ import annotations
 
+import os
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
 
 from repro.api.session import (ExperimentConfig, RunResult, Session,
                                compile_stats)
@@ -33,11 +61,133 @@ class SweepResult:
         return self.results[i]
 
 
+def _group_by_key(cfgs, sessions) -> "Dict[tuple, List[tuple]]":
+    """Structural groups in first-seen order: key -> [(index, cfg,
+    session), ...].  Calling `structural_key()` prepares/plans a point,
+    so the sequential driver only calls this after the runs (when the
+    stages are memoized) while the stacked driver calls it up front."""
+    groups: "Dict[tuple, List[tuple]]" = {}
+    for i, (cfg, sess) in enumerate(zip(cfgs, sessions)):
+        groups.setdefault(sess.structural_key(), []).append(
+            (i, cfg, sess))
+    return groups
+
+
+def _default_chunk(n_points: int) -> int:
+    """Points per stacked device program.  On accelerators the whole
+    group is one program — batched gemms are what the hardware wants,
+    and the vmapped runner pays the per-tick fixed cost once for every
+    point.  On CPU the replay is dot-bound and XLA-CPU gemms scale
+    ~linearly under the point axis, so the single big program wins only
+    ~1.0-1.1x; the driver instead runs per-point chunks on a
+    core-bounded executor pool, recovering the cores a single replay
+    leaves idle (~1.4 of 2 utilized).  Recorded total-sweep win on the
+    2-core box: ~1.26x (BENCH_replay.json `sweep_stacked` tracks both
+    strategies; engine-only, the concurrent chunks reach ~1.5-2x —
+    per-point host costs dilute the total).  `stack_chunk=` overrides
+    either default."""
+    return n_points if jax.default_backend() != "cpu" else 1
+
+
+def _run_group_stacked(group: List[tuple], *, eval_every_epoch: bool,
+                       stack_chunk: Optional[int] = None) -> List[tuple]:
+    """Execute one structural group — [(index, cfg, session), ...] —
+    point-stacked and unstack to per-point results.
+
+    The group is split into chunks of `stack_chunk` points (default:
+    `_default_chunk`); each chunk runs as ONE vmapped device program
+    through the group's single compiled engine, and chunks execute on
+    concurrent executor threads (independent states; jit calls are
+    thread-safe).  Per-point `wall_s` is the group wall clock split
+    evenly (the points of a chunk are inseparable on the device)."""
+    t0 = time.perf_counter()
+    sessions = [sess for _, _, sess in group]
+    prog = sessions[0].compile()
+    for sess in sessions[1:]:
+        sess.compile()                 # cache hits; keeps counters honest
+    engine = prog.engine
+    engine._ensure_stacked_runners()   # build once, before the threads
+    n_epochs = group[0][1].n_epochs
+
+    points = [sess._resolve_point(None, None, None) for sess in sessions]
+    chunk = _default_chunk(len(group)) if stack_chunk is None \
+        else max(1, stack_chunk)
+    spans = [range(lo, min(lo + chunk, len(group)))
+             for lo in range(0, len(group), chunk)]
+
+    trainers: List = [None] * len(group)
+    histories: List[List[float]] = [[] for _ in group]
+    results: List = [None] * len(group)
+
+    def final_eval(i, t, state) -> None:
+        # the metric `_finish_replay` would otherwise compute serially
+        # on the main thread (`trainer.evaluate()` after finish); the
+        # replica mean of the final state is the same quantity, so
+        # evaluating here keeps the value bit-identical and concurrent
+        if not histories[i]:
+            histories[i].append(t._metric(*engine.params_mean(state)))
+
+    def run_chunk(span) -> None:
+        # per-point model init runs on the chunk's thread too
+        for i in span:
+            trainers[i] = sessions[i]._make_trainer(*points[i])
+        ts = [trainers[i] for i in span]
+        if len(span) == 1:
+            # singleton chunk: an ordinary single run through the shared
+            # driver (the plain runners are already compiled — no P=1
+            # vmap trace needed; `finish` syncs on this thread)
+            i = span[0]
+            results[i] = ts[0].replay_with(
+                engine, eval_every_epoch=eval_every_epoch,
+                seed=points[i][0])
+            return
+        data = engine.stage_data_stacked([(t.Xa, t.Xp, t.y) for t in ts])
+        state = engine.init_state_stacked(
+            [(t.theta_a, t.opt_a, t.theta_p, t.opt_p) for t in ts],
+            ts[0].d_emb, seeds=[points[i][0] for i in span])
+        hyper = {k: [t.hyper()[k] for t in ts]
+                 for k in ("lr", "clip", "sigma")}
+        for e in range(n_epochs):
+            state = engine.run_epoch_stacked(state, e, data, hyper)
+            if eval_every_epoch:
+                for j, i in enumerate(span):
+                    ta, tp = engine.params_mean(
+                        engine.point_state(state, j))
+                    histories[i].append(ts[j]._metric(ta, tp))
+        # drive this chunk's chain to completion on THIS thread: with
+        # async dispatch, deferring the sync to the main thread would
+        # serialize the chunks' executions again — and finish (the
+        # device->host unstack) concurrently per chunk for the same
+        # reason
+        jax.block_until_ready(state.theta_a)
+        for j, i in enumerate(span):
+            ps = engine.point_state(state, j)
+            final_eval(i, ts[j], ps)
+            results[i] = ts[j]._finish_replay(engine, ps, histories[i])
+
+    if len(spans) == 1:
+        run_chunk(spans[0])
+    else:
+        workers = min(len(spans), max(1, os.cpu_count() or 1))
+        with ThreadPoolExecutor(workers) as ex:
+            list(ex.map(run_chunk, spans))
+
+    wall_each = (time.perf_counter() - t0) / len(group)
+    out = []
+    for i, (idx, _, sess) in enumerate(group):
+        seed, lr, dp_mu = points[i]
+        out.append((idx, sess._result(results[i], wall_s=wall_each,
+                                      seed=seed, lr=lr, dp_mu=dp_mu)))
+    return out
+
+
 def run_sweep(cfgs: Sequence[ExperimentConfig], *,
               reuse: str = "structural",
               callbacks: Sequence = (),
               eval_every_epoch: bool = True,
-              progress: Optional[Callable[[int, RunResult], None]] = None
+              progress: Optional[Callable[[int, RunResult], None]] = None,
+              stacked: bool = False,
+              stack_chunk: Optional[int] = None
               ) -> SweepResult:
     """Run every config, grouping compiled programs by structural key.
 
@@ -52,17 +202,56 @@ def run_sweep(cfgs: Sequence[ExperimentConfig], *,
     schedule) of the point that compiled their group, while model init,
     DP noise and hyperparameters are their own — see api.session.
     `reuse="exact"` restores fully per-seed timetables (and compiles
-    once per distinct (shape, seed))."""
+    once per distinct (shape, seed)).
+
+    ``stacked=True`` additionally fuses each multi-point structural
+    group of compiled-engine points into vmapped device programs (see
+    the module docstring) — per-point results are unchanged, total wall
+    clock drops.  `stack_chunk` bounds the points per device program
+    (default: the whole group on accelerators; per-point chunks on a
+    core-bounded concurrent pool on CPU — see `_default_chunk`).
+    Stacking implies structural grouping, so it requires
+    ``reuse="structural"``; per-epoch `callbacks` are a per-run surface
+    and fall back to sequential execution.  Groups of one point, and
+    event-engine points, always run sequentially."""
+    if stacked and reuse != "structural":
+        raise ValueError("stacked=True fuses structural groups into one "
+                         "program and therefore requires "
+                         "reuse='structural'")
     t_start = time.perf_counter()
     before = compile_stats()
-    results: List[RunResult] = []
-    for i, cfg in enumerate(cfgs):
-        sess = Session(cfg, reuse=reuse)
-        rr = sess.run(callbacks=callbacks,
-                      eval_every_epoch=eval_every_epoch)
-        results.append(rr)
-        if progress is not None:
-            progress(i, rr)
+    sessions = [Session(cfg, reuse=reuse) for cfg in cfgs]
+    slots: List[Optional[RunResult]] = [None] * len(cfgs)
+
+    stacked_groups = 0
+    group_sizes: List[int] = []
+    if stacked and not callbacks:
+        # grouping up front prepares/plans each point, which the runs
+        # below would do anyway
+        for group in _group_by_key(cfgs, sessions).values():
+            group_sizes.append(len(group))
+            if len(group) > 1 and group[0][1].engine == "compiled":
+                stacked_groups += 1
+                for idx, rr in _run_group_stacked(
+                        group, eval_every_epoch=eval_every_epoch,
+                        stack_chunk=stack_chunk):
+                    slots[idx] = rr
+                    # a stacked group's points finish together, so
+                    # progress streams per GROUP (point order within it)
+                    if progress is not None:
+                        progress(idx, rr)
+    for i, sess in enumerate(sessions):
+        if slots[i] is None:
+            slots[i] = sess.run(callbacks=callbacks,
+                                eval_every_epoch=eval_every_epoch)
+            if progress is not None:
+                progress(i, slots[i])
+    results: List[RunResult] = slots  # type: ignore[assignment]
+    if not group_sizes:
+        # sequential path: report composition post-hoc (the sessions are
+        # prepared by now, so the keys are memoized lookups)
+        group_sizes = [len(g) for g in _group_by_key(cfgs,
+                                                     sessions).values()]
     after = compile_stats()
     warm = [r.wall_s for r in results if r.compile_cache_hit]
     cold = [r.wall_s for r in results if not r.compile_cache_hit]
@@ -76,5 +265,7 @@ def run_sweep(cfgs: Sequence[ExperimentConfig], *,
         "point_wall_s": [r.wall_s for r in results],
         "cold_wall_s_mean": sum(cold) / len(cold) if cold else 0.0,
         "warm_wall_s_mean": sum(warm) / len(warm) if warm else 0.0,
+        "points_per_group": group_sizes,
+        "stacked_groups": stacked_groups,
     }
     return SweepResult(results=results, stats=stats)

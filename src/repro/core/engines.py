@@ -14,10 +14,10 @@ checkpoint-resume path never care which one runs:
 `state` is an explicit, immutable pytree (no hidden mutable replica
 lists) that round-trips through `checkpoint.store.save_state` /
 `restore_state` + `engine.load_state`, so training can stop after any
-epoch and resume bit-for-bit (non-DP; with DP the compiled engine is
-also bitwise — its PRNG key lives in the state — while the event
-engine's host-numpy noise stream is reseeded, keeping clip/sigma
-semantics but not the exact noise draws).
+epoch and resume bit-for-bit on BOTH engines, DP included: each
+engine's DP noise comes from a counter-based `jax.random` stream whose
+key lives in the state (`TrainerState.key` / `EventState.key`), so a
+restored checkpoint continues the exact noise sequence.
 
 `hyper` is the runtime scalar dict {lr, clip, sigma}: hyperparameters
 that only scale arithmetic are *arguments* of an epoch run, not part of
@@ -50,8 +50,10 @@ from repro.models import tabular
 from repro.optim.optimizers import adam, apply_updates
 
 # re-exported so `core.engines` is the one import site for the protocol
+# (incl. the point-stacking helpers used by the stacked sweep driver)
 from repro.core.jit_pipeline import (CompiledReplayEngine,  # noqa: F401
-                                     TrainerState)
+                                     TrainerState, point_state,
+                                     stack_points, unstack_points)
 
 
 class ReplayEngine(Protocol):
@@ -96,8 +98,11 @@ def replica_counts(method: str, w_a: int, w_p: int) -> Tuple[int, int]:
 class EventState(NamedTuple):
     """Explicit state of the per-event engine: per-replica param/opt
     lists, passive version counters, the executed-step counter, the
-    per-epoch loss buckets and the in-flight embedding/gradient buffers
-    (the pipeline content crossing an epoch boundary)."""
+    per-epoch loss buckets, the in-flight embedding/gradient buffers
+    (the pipeline content crossing an epoch boundary) and the DP noise
+    PRNG key (a counter-based `jax.random` key split once per publish,
+    mirroring the compiled engine's carry key — its presence in the
+    state is what makes DP checkpoint-resume bit-for-bit here too)."""
     theta_a: List
     opt_a: List
     theta_p: List
@@ -108,6 +113,7 @@ class EventState(NamedTuple):
     cnt_vec: List[int]
     emb_buf: Dict[int, tuple]     # bid -> (z, rep_p, fwd_version)
     grad_buf: Dict[int, tuple]    # bid -> (g_z, rep_p, fwd_version)
+    key: Any = None               # DP noise PRNG key
     epoch: int = 0
 
 
@@ -133,7 +139,6 @@ class EventReplayEngine:
         self._seed = seed
         self.n_epochs = cfg.n_epochs
         self.rows = _rows_table(cfg, n_samples)
-        self._rng = np.random.default_rng(seed)
 
         sync_marks = set(sync_epochs(cfg.n_epochs, cfg.dt0))
         if disable_semi_async:
@@ -188,26 +193,32 @@ class EventReplayEngine:
 
     def init_state(self, theta_a, opt_a, theta_p, opt_p, d_emb: int, *,
                    seed: Optional[int] = None) -> EventState:
-        self._rng = np.random.default_rng(
-            self._seed if seed is None else seed)
         n = self.cfg.n_epochs
+        # counter-based jax.random noise key, split once per publish —
+        # the same keying discipline as the compiled engine's carry key,
+        # and like there it rides IN the state so DP resume is bitwise
+        key0 = jax.random.fold_in(
+            jax.random.PRNGKey(self._seed if seed is None else seed), 0xE7)
         return EventState(list(theta_a), list(opt_a), list(theta_p),
                           list(opt_p), [0] * self.n_rep_p, 0,
-                          [0.0] * n, [0] * n, {}, {}, epoch=0)
+                          [0.0] * n, [0] * n, {}, {}, key=key0, epoch=0)
 
     def load_state(self, payload) -> EventState:
         f = list(payload)
-        epoch = int(f[10])
-        # deterministic resume: key the host DP noise stream on
-        # (seed, resume epoch) so a restored checkpoint replays the same
-        # noise whether the process is fresh or previously ran other
-        # replays (the stream still differs from the uninterrupted run's
-        # — event-engine DP resume is clip/sigma-semantic, not bitwise)
-        self._rng = np.random.default_rng([self._seed, epoch])
+        if len(f) == 11:
+            # pre-key checkpoint layout (epoch at f[10], no PRNG key):
+            # migrate by reseeding the noise key from (seed, epoch) —
+            # the old resume semantics (clip/sigma only, not bitwise)
+            epoch = int(f[10])
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(self._seed), 0xE7),
+                epoch)
+        else:
+            key, epoch = jnp.asarray(f[10]), int(f[11])
         return EventState(list(f[0]), list(f[1]), list(f[2]), list(f[3]),
                           [int(v) for v in f[4]], int(f[5]),
                           [float(v) for v in f[6]], [int(v) for v in f[7]],
-                          dict(f[8]), dict(f[9]), epoch=epoch)
+                          dict(f[8]), dict(f[9]), key=key, epoch=epoch)
 
     # -- execution -------------------------------------------------------
     def run_epoch(self, state: EventState, epoch: int, data,
@@ -226,6 +237,7 @@ class EventReplayEngine:
         a_steps = state.a_steps
         loss_vec, cnt_vec = list(state.loss_vec), list(state.cnt_vec)
         emb_buf, grad_buf = dict(state.emb_buf), dict(state.grad_buf)
+        key = jnp.asarray(state.key)
 
         lo = self._cuts[epoch - 1] if epoch > 0 else 0
         hi = self._cuts[epoch]
@@ -235,15 +247,17 @@ class EventReplayEngine:
                 rep = w % self.n_rep_p
                 rows = rows_tab[bid % len(rows_tab)]
                 if sigma > 0 or math.isfinite(clip):
-                    # same fused DP publish as the compiled engine; only
-                    # the noise SOURCE stays host-side (the legacy numpy
-                    # rng stream), so event-engine DP runs remain
-                    # reproducible against pre-fusion results
+                    # same fused DP publish as the compiled engine, and
+                    # since PR 5 the same noise SOURCE discipline too: a
+                    # counter-based jax.random stream keyed in the state
+                    # (one split per publish), replacing the legacy host
+                    # numpy rng — DP resume is bit-for-bit here as well
                     noise = None
                     if sigma > 0:
                         d_emb = tp[rep]["layers"][-1]["b"].shape[0]
-                        noise = jnp.asarray(self._rng.normal(
-                            size=(len(rows), d_emb)).astype(np.float32))
+                        key, sub = jax.random.split(key)
+                        noise = jax.random.normal(
+                            sub, (len(rows), d_emb), jnp.float32)
                     z = tabular.publish_embedding(
                         tp[rep], jnp.asarray(Xp[rows]), noise, clip=clip,
                         sigma=sigma, resnet=self.resnet)
@@ -294,7 +308,7 @@ class EventReplayEngine:
             tp = _aggregate(tp)
         return EventState(ta, oa, tp, op_, version_p, a_steps,
                           loss_vec, cnt_vec, emb_buf, grad_buf,
-                          epoch=epoch + 1)
+                          key=key, epoch=epoch + 1)
 
     def params_mean(self, state: EventState) -> tuple:
         th_a = aggregate(state.theta_a) if self.n_rep_a > 1 \

@@ -45,7 +45,15 @@ Two engines live here:
      segments; per-epoch losses accumulate on device and cross to the
      host exactly once, at the end of the replay;
    * the scan carry is donated back to the runtime (`donate_argnums`) on
-     accelerators, so params/opt buffers are updated in place.
+     accelerators, so params/opt buffers are updated in place;
+   * a structural sweep group can run **point-stacked**: the cached
+     epoch runners are reused vmapped over a new leading point axis
+     (`run_epoch_stacked` — per-point params/opt/rings/DP-keys and
+     per-point {lr, clip, sigma} vectors, one broadcast tick schedule),
+     so N same-shape training runs execute as ONE device program and
+     pay the per-tick dispatch/fixed costs once (`api.sweep
+     run_sweep(stacked=True)`; `stack_points`/`point_state` convert
+     between stacked and single-run `TrainerState`s).
 
    Jitted runners are cached process-wide per engine spec, so many
    trainer instances (e.g. a benchmark sweep) share one compilation per
@@ -190,6 +198,7 @@ class EngineSpec:
     donate: bool
     pack: str = "dense"
     flat_opt: bool = False    # fused flat optimizer update (segmented)
+    scatter_drop: bool = False  # .at[].set(mode="drop") replica scatter
 
 
 class TrainerState(NamedTuple):
@@ -357,7 +366,8 @@ def _make_packed_tick(spec: EngineSpec):
             grads_p = jax.vmap(p_backward)(tp_l, xb, g_in)
             tp, op_ = packed_replica_update(opt, grads_p, op_, tp,
                                             xs["pb_rep"], pb_mask,
-                                            flat=spec.flat_opt)
+                                            flat=spec.flat_opt,
+                                            scatter_drop=spec.scatter_drop)
             # --- phase 1b: passive forwards, DP-publish to the ring ---
             tp_f = gather_replicas(tp, jnp.maximum(xs["pf_rep"], 0))
             xf = Xp[rows_tab[jnp.maximum(xs["pf_bid"], 0)]]
@@ -390,7 +400,8 @@ def _make_packed_tick(spec: EngineSpec):
                                               Y[a_rows])
             ta, oa = packed_replica_update(opt, g_a, oa, ta,
                                            xs["as_rep"], as_mask,
-                                           flat=spec.flat_opt)
+                                           flat=spec.flat_opt,
+                                           scatter_drop=spec.scatter_drop)
             ring_g = slot_ring_write(ring_g, xs["as_gslot"], g_z, as_mask)
             loss_vec = loss_vec.at[xs["as_epoch"]].add(
                 jnp.where(as_mask, loss, 0.0))
@@ -445,7 +456,8 @@ def _make_sig_tick(spec: EngineSpec, sig: Tuple[str, ...],
             grads_p = jax.vmap(p_backward)(tp_l, xb, g_in)
             tp, op_ = packed_replica_update(opt, grads_p, op_, tp,
                                             xs["pb_rep"], pb_mask,
-                                            flat=spec.flat_opt)
+                                            flat=spec.flat_opt,
+                                            scatter_drop=spec.scatter_drop)
 
         if "pf" in sig:
             pf_mask = xs["pf_rep"] >= 0
@@ -472,7 +484,8 @@ def _make_sig_tick(spec: EngineSpec, sig: Tuple[str, ...],
                                               Y[a_rows])
             ta, oa = packed_replica_update(opt, g_a, oa, ta,
                                            xs["as_rep"], as_mask,
-                                           flat=spec.flat_opt)
+                                           flat=spec.flat_opt,
+                                           scatter_drop=spec.scatter_drop)
             ring_g = slot_ring_write(ring_g, xs["as_gslot"], g_z, as_mask)
             loss_vec = loss_vec.at[xs["as_epoch"]].add(
                 jnp.where(as_mask, loss, 0.0))
@@ -490,16 +503,30 @@ def _make_sig_tick(spec: EngineSpec, sig: Tuple[str, ...],
     return tick
 
 
+# vmap axes of a point-stacked epoch run: the carry and the hyper
+# scalars gain a leading point axis; the tick schedule is broadcast
+# (every point replays the SAME pinned timetable — that is what makes a
+# structural sweep group one device program); `data` stacks the feature
+# blocks/labels per point but shares the schedule's batch-row table.
+_STACK_IN_AXES = (0, None, (None, 0, 0, 0), 0)
+
+
 def _get_segmented_runner(spec: EngineSpec, opt_builder, opt_key,
-                          structure: tuple):
+                          structure: tuple, *, stacked: bool = False):
     """One jitted epoch runner chaining the per-run scans back to back
     with a single donated carry.  `structure` is the epoch's static run
     chain — ((sig, has_agg), ...) — so epochs with the same chain share
     one runner (lane widths and run lengths specialize via jit's shape
     tracing); tick bodies are built per distinct (sig, has_agg) pair.
     The optimizer is (re)built inside the trace from the runtime `hyper`
-    learning rate, so the cached runner serves every lr."""
-    cache_key = (spec, opt_key, structure)
+    learning rate, so the cached runner serves every lr.
+
+    ``stacked=True`` returns the point-stacked variant: the same epoch
+    body vmapped over a leading point axis (`_STACK_IN_AXES`), so a
+    whole structural sweep group runs as ONE device program — per-point
+    params/opt/ring/PRNG carries, per-point data and per-point
+    {lr, clip, sigma} vectors, one broadcast tick schedule."""
+    cache_key = (spec, opt_key, structure, stacked)
     if opt_key is not None and cache_key in _RUNNER_CACHE:
         return _RUNNER_CACHE[cache_key]
     bodies = {}
@@ -516,14 +543,16 @@ def _get_segmented_runner(spec: EngineSpec, opt_builder, opt_key,
                 carry, xs)[0]
         return carry
 
-    runner = jax.jit(run, donate_argnums=(0,) if spec.donate else ())
+    fn = jax.vmap(run, in_axes=_STACK_IN_AXES) if stacked else run
+    runner = jax.jit(fn, donate_argnums=(0,) if spec.donate else ())
     if opt_key is not None:
         _RUNNER_CACHE[cache_key] = runner
     return runner
 
 
-def _get_runner(spec: EngineSpec, opt_builder, opt_key):
-    cache_key = (spec, opt_key)
+def _get_runner(spec: EngineSpec, opt_builder, opt_key, *,
+                stacked: bool = False):
+    cache_key = (spec, opt_key, stacked)
     if opt_key is not None and cache_key in _RUNNER_CACHE:
         return _RUNNER_CACHE[cache_key]
     mk = _make_packed_tick if spec.pack == "packed" else _make_dense_tick
@@ -535,10 +564,42 @@ def _get_runner(spec: EngineSpec, opt_builder, opt_key):
                                           None),
                             carry, xs)[0]
 
-    runner = jax.jit(run, donate_argnums=(0,) if spec.donate else ())
+    fn = jax.vmap(run, in_axes=_STACK_IN_AXES) if stacked else run
+    runner = jax.jit(fn, donate_argnums=(0,) if spec.donate else ())
     if opt_key is not None:
         _RUNNER_CACHE[cache_key] = runner
     return runner
+
+
+# ---------------------------------------------------------------------------
+# point-stacking helpers: a structural sweep group's TrainerStates fused
+# into one state with a leading point axis (and back)
+# ---------------------------------------------------------------------------
+def stack_points(states: List["TrainerState"]) -> "TrainerState":
+    """Stack per-point `TrainerState`s along a NEW leading point axis.
+    All points must sit at the same epoch (they advance in lockstep
+    through `run_epoch_stacked`)."""
+    epochs = {int(s.epoch) for s in states}
+    if len(epochs) != 1:
+        raise ValueError(f"cannot stack states at different epochs: "
+                         f"{sorted(epochs)}")
+    carry = jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[TrainerState(*s).carry for s in states])
+    return TrainerState(*carry, epoch=epochs.pop())
+
+
+def point_state(state: "TrainerState", i: int) -> "TrainerState":
+    """Slice point `i` out of a point-stacked `TrainerState` — the
+    result is an ordinary single-run state, usable with `finish`,
+    `params_mean` and `checkpoint.store.save_state`."""
+    carry = jax.tree.map(lambda x: x[i], TrainerState(*state).carry)
+    return TrainerState(*carry, epoch=state.epoch)
+
+
+def unstack_points(state: "TrainerState", n_points: int
+                   ) -> List["TrainerState"]:
+    """Inverse of `stack_points`: the per-point single-run states."""
+    return [point_state(state, i) for i in range(n_points)]
 
 
 class CompiledReplayEngine:
@@ -555,7 +616,8 @@ class CompiledReplayEngine:
                  task: str, resnet: bool = False,
                  clip: float = math.inf, sigma: float = 0.0,
                  lr: float = 1e-3, use_pallas: Optional[bool] = None,
-                 seed: int = 0, flat_opt: Optional[bool] = None):
+                 seed: int = 0, flat_opt: Optional[bool] = None,
+                 scatter_drop: bool = False):
         enable_persistent_cache()
         self.schedule = schedule
         if opt is not None:
@@ -585,16 +647,19 @@ class CompiledReplayEngine:
             resnet=resnet, dp=dp, noise=sigma > 0.0,
             has_inscan_agg=schedule.has_inscan_agg, use_pallas=use_pallas,
             donate=backend != "cpu", pack=schedule.pack,
-            flat_opt=bool(flat_opt))
+            flat_opt=bool(flat_opt), scatter_drop=scatter_drop)
+        self._opt_builder, self._opt_key = opt_builder, opt_key
         if schedule.pack == "segmented":
             # one runner per epoch run-chain (shared across epochs with
             # the same chain) + device-resident per-run xs
-            self._runners = [
-                _get_segmented_runner(
-                    self.spec, opt_builder, opt_key,
-                    tuple((r.sig, r.has_agg) for r in seg.runs))
-                if seg.runs else None
+            self._structures = [
+                tuple((r.sig, r.has_agg) for r in seg.runs)
                 for seg in schedule.segments]
+            self._runners = [
+                _get_segmented_runner(self.spec, opt_builder, opt_key,
+                                      structure)
+                if structure else None
+                for structure in self._structures]
             self._seg_xs = [
                 tuple({k: jnp.asarray(v) for k, v in r.arrays.items()}
                       for r in seg.runs)
@@ -605,6 +670,10 @@ class CompiledReplayEngine:
                         for k, v in schedule.padded().items()}
         self._agg_both = jax.jit(
             lambda ta, tp: (_broadcast_mean(ta), _broadcast_mean(tp)))
+        # the point-stacked runners (the same epoch bodies vmapped over a
+        # leading point axis) are built lazily on the first stacked call,
+        # so single-run users never pay their traces
+        self._stacked_ready = False
         self._seed = seed
 
     # -- ReplayEngine protocol: bookkeeping resolved at compile time -----
@@ -686,6 +755,83 @@ class CompiledReplayEngine:
     def run_segment(self, state, seg: int, data: tuple) -> TrainerState:
         """Back-compat alias of `run_epoch` (pre-Session name)."""
         return self.run_epoch(state, seg, data)
+
+    # -- point-stacked execution (whole sweep groups as one program) -----
+    def _ensure_stacked_runners(self) -> None:
+        if self._stacked_ready:
+            return
+        if self.schedule.pack == "segmented":
+            self._stacked_runners = [
+                _get_segmented_runner(self.spec, self._opt_builder,
+                                      self._opt_key, structure,
+                                      stacked=True)
+                if structure else None
+                for structure in self._structures]
+        else:
+            self._stacked_runner = _get_runner(
+                self.spec, self._opt_builder, self._opt_key, stacked=True)
+        self._agg_both_stacked = jax.jit(jax.vmap(
+            lambda ta, tp: (_broadcast_mean(ta), _broadcast_mean(tp))))
+        self._stacked_ready = True
+
+    def stage_data_stacked(self, points: List[tuple]) -> tuple:
+        """Device-put a sweep group's feature blocks with a leading point
+        axis.  `points` is a list of per-point ``(Xa, Xp, y)``; shapes
+        must match across points (they do within a structural group —
+        n_samples/d_a/d_p are part of the key).  The schedule's batch-row
+        table is shared: every point replays the same pinned timetable."""
+        return (jnp.asarray(self.schedule.rows),
+                jnp.stack([jnp.asarray(xa, jnp.float32)
+                           for xa, _, _ in points]),
+                jnp.stack([jnp.asarray(xp, jnp.float32)
+                           for _, xp, _ in points]),
+                jnp.stack([jnp.asarray(y) for _, _, y in points]))
+
+    def init_state_stacked(self, points: List[tuple], d_emb: int, *,
+                           seeds: List[int]) -> TrainerState:
+        """Fresh point-stacked `TrainerState`: per-point model/opt
+        replicas stacked along a new leading axis, one DP PRNG key per
+        point (keyed exactly like the per-point `init_state`, so a
+        stacked DP run draws the same noise its sequential run would).
+        `points` is a list of per-point
+        ``(theta_a_reps, opt_a_reps, theta_p_reps, opt_p_reps)``."""
+        states = [self.init_state(ta, oa, tp, op_, d_emb, seed=s)
+                  for (ta, oa, tp, op_), s in zip(points, seeds)]
+        return stack_points(states)
+
+    def run_epoch_stacked(self, state: TrainerState, seg: int,
+                          data: tuple, hyper: Dict) -> TrainerState:
+        """Execute epoch `seg` for EVERY point of a stacked state in one
+        device program.  `hyper` holds per-point vectors — {lr, clip,
+        sigma} each of shape (n_points,) — so a group may mix learning
+        rates and DP budgets (DP on/off is structure and uniform across
+        the group)."""
+        hyper = {k: jnp.asarray(hyper[k], jnp.float32).reshape(-1)
+                 for k in ("lr", "clip", "sigma")}
+        self._ensure_stacked_runners()
+        carry = TrainerState(*state).carry
+        if self.schedule.pack == "segmented":
+            if self.schedule.segments[seg].runs:
+                carry = self._stacked_runners[seg](
+                    carry, self._seg_xs[seg], data, hyper)
+        else:
+            xs = {k: v[seg] for k, v in self._xs.items()}
+            carry = self._stacked_runner(carry, xs, data, hyper)
+        if self.schedule.segments[seg].epoch_agg:
+            ta, oa, tp, op_, *rest = carry
+            ta, tp = self._agg_both_stacked(ta, tp)
+            carry = (ta, oa, tp, op_, *rest)
+        return TrainerState(*carry, epoch=seg + 1)
+
+    def point_state(self, state: TrainerState, i: int) -> TrainerState:
+        """Point `i`'s ordinary single-run state (see `point_state`)."""
+        return point_state(state, i)
+
+    def unstack_points(self, state: TrainerState, n_points: int
+                       ) -> List[TrainerState]:
+        """All per-point states of a stacked state (for `finish` /
+        checkpointing)."""
+        return unstack_points(state, n_points)
 
     def params_mean(self, state) -> tuple:
         """(theta_a, theta_p) averaged across replicas — for evaluation."""

@@ -27,14 +27,17 @@ callbacks, and checkpoint save/resume are engine-agnostic:
       (`core.engines.EventReplayEngine`), kept as the readable reference
       semantics and for parity testing.  Its DP publish routes through
       the same fused `tabular.publish_embedding` op as the compiled
-      engine; only the Gaussian noise is still drawn from the legacy
-      host numpy rng (see docs/architecture.md §DP).
+      engine, and its Gaussian noise now comes from a counter-based
+      `jax.random` stream keyed in `EventState` (see
+      docs/architecture.md §DP), so DP checkpoint-resume is bit-for-bit
+      on both engines.
 
 For non-DP runs both engines produce the same losses/metrics for the
 same seed (see tests/test_engine_parity.py); only wall-clock differs.
 With DP enabled the clip/projection math is shared, but the noise
-*streams* differ (host numpy rng vs. JAX PRNG), so per-run numbers
-diverge while the clip/sigma semantics match.
+*streams* differ (per-event draws vs. per-tick lane blocks, and
+different key folds), so per-run numbers diverge while the clip/sigma
+semantics match.
 
 Per-epoch **callbacks** replace the old hardcoded eval cadence: a
 callback is any callable taking an `EpochContext`; it can evaluate on
@@ -194,7 +197,8 @@ class VFLTrainer:
 
     # ------------------------------------------------------------------
     def make_engine(self, sim: SimResult, *, engine: str = "compiled",
-                    pack: str = "segmented") -> ReplayEngine:
+                    pack: str = "segmented",
+                    scatter_drop: bool = False) -> ReplayEngine:
         """Build a `ReplayEngine` for this trainer's config and event
         log.  The compiled engine is safe to cache and share across
         trainers of the same shape (the Session API does exactly that):
@@ -208,7 +212,8 @@ class VFLTrainer:
                 disable_semi_async=self.disable_semi_async, pack=pack)
             return CompiledReplayEngine(
                 sched, task=self.task, resnet=self.resnet, clip=self.clip,
-                sigma=self.sigma, lr=self.lr, seed=self.cfg.seed)
+                sigma=self.sigma, lr=self.lr, seed=self.cfg.seed,
+                scatter_drop=scatter_drop)
         return EventReplayEngine(
             self.cfg, sim.events, n_rep_a=self.n_rep_a,
             n_rep_p=self.n_rep_p, n_samples=len(self.y), task=self.task,
@@ -219,7 +224,8 @@ class VFLTrainer:
     # ------------------------------------------------------------------
     def replay(self, sim: SimResult, *, eval_every_epoch: bool = True,
                engine: str = "compiled", pack: str = "segmented",
-               callbacks: Sequence[Callback] = ()) -> TrainResult:
+               callbacks: Sequence[Callback] = (),
+               scatter_drop: bool = False) -> TrainResult:
         """Execute the event log.  `engine="compiled"` (default) runs the
         jitted scan engine; `engine="event"` runs the per-event loop
         (reference semantics, used for parity testing).  `pack` selects
@@ -227,7 +233,8 @@ class VFLTrainer:
         "packed" or "dense" (see core.schedule).  `callbacks` run after
         every epoch (see `EpochContext`)."""
         return self.replay_with(self.make_engine(sim, engine=engine,
-                                                 pack=pack),
+                                                 pack=pack,
+                                                 scatter_drop=scatter_drop),
                                 eval_every_epoch=eval_every_epoch,
                                 callbacks=callbacks)
 
@@ -261,6 +268,14 @@ class VFLTrainer:
                 cb(ctx)
             if ctx.stop:
                 break
+        return self._finish_replay(eng, state, history)
+
+    def _finish_replay(self, eng: ReplayEngine, state,
+                       history: List[float]) -> TrainResult:
+        """Fold a finished (or early-stopped) replay state back into the
+        trainer and build its `TrainResult`.  Shared by `replay_with`
+        and the point-stacked sweep driver (`api.sweep`), which finishes
+        each unstacked per-point state through its own trainer."""
         # executed active steps come from the state's per-epoch count
         # buckets, so an early-stopped or resumed replay reports what
         # actually ran (== the schedule pre-pass count on a full replay)

@@ -195,17 +195,31 @@ def gather_replicas(stack, idx):
     return jax.tree.map(lambda x: x[idx], stack)
 
 
-def scatter_replicas(stack, lanes, rep, mask):
+def scatter_replicas(stack, lanes, rep, mask, *, drop: bool = False):
     """Merge per-lane pytrees back into the replica stack:
     `stack[rep[j]] <- lanes[j]` where `mask[j]`.  Safe because the
     schedule compiler guarantees each replica appears at most once per
     phase per tick, so replica r is served by at most one lane.
 
-    Implemented as a per-replica lane lookup + elementwise select rather
-    than an XLA scatter: the select fuses into the surrounding update
-    (like the dense layout's masked merge), whereas a scatter op forces
-    a serialized copy of the whole stack on CPU."""
+    Two implementations:
+
+    * ``drop=False`` (default) — a per-replica lane lookup + elementwise
+      select rather than an XLA scatter: the select fuses into the
+      surrounding update (like the dense layout's masked merge), whereas
+      a scatter op forced a serialized copy of the whole stack on CPU
+      when last measured (PR 2).
+    * ``drop=True`` — a real ``.at[idx].set(..., mode="drop")`` scatter:
+      masked-out lanes index one past the stack so XLA drops them.
+      Under a donated scan carry the scatter can alias the stack
+      in place instead of re-materializing n_rep × params per executed
+      phase — the candidate win on accelerators the ROADMAP asks to
+      re-measure (`benchmarks/replay_throughput.py` has the A/B entry:
+      ``replay/micro_*_segmented_drop``)."""
     n = jax.tree.leaves(stack)[0].shape[0]
+    if drop:
+        idx = jnp.where(mask, jnp.maximum(rep, 0), n)   # n -> dropped
+        return jax.tree.map(lambda x, l: x.at[idx].set(l, mode="drop"),
+                            stack, lanes)
     hit = (rep[None, :] == jnp.arange(n)[:, None]) & mask[None, :]  # (n,L)
     found = hit.any(axis=1)
     lane_of = jnp.argmax(hit, axis=1)        # lane serving replica r
@@ -219,14 +233,18 @@ def scatter_replicas(stack, lanes, rep, mask):
 
 
 def packed_replica_update(opt: Optimizer, grads, state, params, rep, mask,
-                          *, flat: bool = False):
+                          *, flat: bool = False,
+                          scatter_drop: bool = False):
     """One optimizer step on packed work lanes: gather each lane's replica
     params/state by index, step vmapped across lanes, scatter the results
     back by replica index.  Replicas not referenced by any valid lane keep
     params AND state (their Adam step counters do not advance) — identical
     to `masked_replica_update` on the dense layout, but executing only
     len(rep) lanes instead of the full replica stack.  `flat=True` routes
-    the step through the fused flat-vector path (`_flat_lane_step`)."""
+    the step through the fused flat-vector path (`_flat_lane_step`);
+    `scatter_drop=True` merges back via the donation-aliased
+    ``.at[].set(mode="drop")`` scatter instead of the where-merge (see
+    `scatter_replicas`)."""
     idx = jnp.maximum(rep, 0)
     p_l = gather_replicas(params, idx)
     s_l = gather_replicas(state, idx)
@@ -239,8 +257,8 @@ def packed_replica_update(opt: Optimizer, grads, state, params, rep, mask,
         new_p, new_s = _flat_lane_step(opt, grads, s_l, p_l)
     else:
         new_p, new_s = jax.vmap(one)(grads, s_l, p_l)
-    return (scatter_replicas(params, new_p, rep, mask),
-            scatter_replicas(state, new_s, rep, mask))
+    return (scatter_replicas(params, new_p, rep, mask, drop=scatter_drop),
+            scatter_replicas(state, new_s, rep, mask, drop=scatter_drop))
 
 
 def clip_by_global_norm(grads, max_norm: float):

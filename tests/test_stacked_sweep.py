@@ -1,0 +1,178 @@
+"""Point-stacked sweeps: `run_sweep(stacked=True)` fuses a structural
+group into one vmapped device program and must reproduce the sequential
+warm path per point — bit-for-bit parameter trajectories (history and
+finals) for non-DP runs, with independent deterministic per-point DP
+noise streams.  The per-epoch loss *telemetry* is accumulated by a
+device scatter-add whose lane ordering may differ under vmap, so losses
+are compared to f32-accumulation tolerance (they are usually bitwise
+too)."""
+import numpy as np
+import pytest
+
+from repro.api import (ExperimentConfig, Session, compile_stats,
+                       reset_compile_cache, run_sweep)
+
+BASE = dict(method="pubsub", dataset="credit", scale=0.05, n_epochs=3,
+            batch_size=64, w_a=4, w_p=4)
+
+
+def _cfgs(n=3, **kw):
+    d = dict(BASE)
+    d.update(kw)
+    return [ExperimentConfig(**d, seed=s) for s in range(n)]
+
+
+def _assert_point_parity(seq, st):
+    for a, b in zip(seq, st):
+        assert a.train.history == b.train.history      # bit-for-bit
+        assert a["final"] == b["final"]
+        np.testing.assert_allclose(a.train.losses, b.train.losses,
+                                   rtol=1e-6)
+        assert a.seed == b.seed and a.lr == b.lr
+
+
+def test_stacked_matches_sequential():
+    """Whole-group single vmapped program (stack_chunk pins it — the
+    CPU default tiles into per-point chunks) reproduces the sequential
+    warm path per point."""
+    reset_compile_cache()
+    cfgs = _cfgs(3)
+    seq = run_sweep(cfgs)
+    st = run_sweep(cfgs, stacked=True, stack_chunk=3)
+    _assert_point_parity(seq, st)
+    # the stacked sweep reused the program the sequential sweep compiled
+    assert seq.stats["compiles"] == 1
+    assert st.stats["compiles"] == 0
+    assert st.stats["stacked_groups"] == 1
+    assert st.stats["points_per_group"] == [3]
+    # sequential mode reports composition too (but stacks nothing)
+    assert seq.stats["points_per_group"] == [3]
+    assert seq.stats["stacked_groups"] == 0
+
+
+def test_stacked_mixed_groups_and_singletons():
+    """Two structural groups (different batch sizes) plus per-group
+    singletons: multi-point groups stack, singletons run sequentially,
+    and result order follows the input configs."""
+    reset_compile_cache()
+    cfgs = _cfgs(2) + _cfgs(1, batch_size=32)
+    st = run_sweep(cfgs, stacked=True, stack_chunk=2)
+    assert [r.seed for r in st] == [0, 1, 0]
+    assert sorted(st.stats["points_per_group"]) == [1, 2]
+    assert st.stats["stacked_groups"] == 1
+    assert st.stats["n_points"] == 3
+    seq = run_sweep(cfgs)
+    _assert_point_parity(seq, st)
+
+
+def test_stacked_lr_sweep_vectors():
+    """Same-seed points varying only lr: one group, per-point lr vectors
+    reach the vmapped optimizer (finals must differ across lr and match
+    the sequential path)."""
+    reset_compile_cache()
+    base = dict(BASE, n_epochs=2)
+    cfgs = [ExperimentConfig(**base, seed=0, lr=lr)
+            for lr in (1e-3, 1e-2)]
+    seq = run_sweep(cfgs)
+    st = run_sweep(cfgs, stacked=True, stack_chunk=2)
+    _assert_point_parity(seq, st)
+    assert st[0].train.losses != st[1].train.losses
+    assert st.stats["stacked_groups"] == 1
+    # the platform-default chunking (per-point chunks on CPU) must
+    # produce identical results too
+    st_default = run_sweep(cfgs, stacked=True)
+    _assert_point_parity(seq, st_default)
+
+
+def test_stacked_dp_noise_independent_and_deterministic():
+    """DP under stacking: per-point noise keys are independent (same
+    data + params with different seeds diverge) and deterministic (the
+    same stacked sweep twice is identical)."""
+    reset_compile_cache()
+    cfgs = _cfgs(2, n_epochs=2, dp_mu=0.5)
+    s1 = run_sweep(cfgs, stacked=True, stack_chunk=2)
+    s2 = run_sweep(cfgs, stacked=True, stack_chunk=2)
+    for a, b in zip(s1, s2):
+        assert a.train.losses == b.train.losses
+        assert a.train.history == b.train.history
+    seq = run_sweep(cfgs)
+    _assert_point_parity(seq, s1)
+
+    # engine-level: identical data/params, different noise seeds — the
+    # per-point streams must differ (independent jax.random keys)
+    sess = Session(cfgs[0], reuse="structural")
+    eng = sess.compile().engine
+    t = sess._make_trainer(*sess._resolve_point(None, None, None))
+    data = eng.stage_data_stacked([(t.Xa, t.Xp, t.y)] * 2)
+    state = eng.init_state_stacked(
+        [(t.theta_a, t.opt_a, t.theta_p, t.opt_p)] * 2, t.d_emb,
+        seeds=[0, 1])
+    hyper = {k: [t.hyper()[k]] * 2 for k in ("lr", "clip", "sigma")}
+    state = eng.run_epoch_stacked(state, 0, data, hyper)
+    l0 = np.asarray(eng.point_state(state, 0).loss_vec)
+    l1 = np.asarray(eng.point_state(state, 1).loss_vec)
+    assert not np.array_equal(l0, l1)
+
+
+def test_stacked_requires_structural_reuse():
+    with pytest.raises(ValueError, match="structural"):
+        run_sweep(_cfgs(2), stacked=True, reuse="exact")
+
+
+def test_stacked_callbacks_fall_back_to_sequential():
+    """Per-epoch callbacks are a per-run surface: with callbacks the
+    sweep runs sequentially (correct results, nothing stacked)."""
+    reset_compile_cache()
+    seen = []
+    st = run_sweep(_cfgs(2), stacked=True,
+                   callbacks=[lambda ctx: seen.append(ctx.epoch)])
+    assert st.stats["stacked_groups"] == 0
+    assert len(seen) == 2 * BASE["n_epochs"]
+
+
+def test_scatter_replicas_drop_matches_where_merge():
+    """The donation-aliased ``.at[].set(mode="drop")`` scatter variant is
+    numerically identical to the default where-merge (masked lanes
+    dropped, unreferenced replicas untouched)."""
+    import jax.numpy as jnp
+
+    from repro.optim.optimizers import scatter_replicas
+
+    rng = np.random.default_rng(0)
+    stack = {"w": jnp.asarray(rng.normal(size=(5, 3, 4)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(5, 4)), jnp.float32)}
+    lanes = {"w": jnp.asarray(rng.normal(size=(3, 3, 4)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(3, 4)), jnp.float32)}
+    rep = jnp.asarray([2, -1, 0])
+    mask = jnp.asarray([True, False, True])
+    where = scatter_replicas(stack, lanes, rep, mask)
+    drop = scatter_replicas(stack, lanes, rep, mask, drop=True)
+    for k in stack:
+        np.testing.assert_array_equal(np.asarray(where[k]),
+                                      np.asarray(drop[k]))
+    # masked-out lane 1 and unreferenced replicas 1,3,4 stay untouched
+    np.testing.assert_array_equal(np.asarray(drop["w"][1]),
+                                  np.asarray(stack["w"][1]))
+    np.testing.assert_array_equal(np.asarray(drop["w"][2]),
+                                  np.asarray(lanes["w"][0]))
+
+
+def test_stack_unstack_roundtrip():
+    """`stack_points`/`point_state` round-trip the full TrainerState."""
+    import jax
+    from repro.core.engines import point_state, stack_points
+
+    reset_compile_cache()
+    sess = Session(_cfgs(1)[0], reuse="structural")
+    eng = sess.compile().engine
+    t = sess._make_trainer(*sess._resolve_point(None, None, None))
+    states = [eng.init_state(t.theta_a, t.opt_a, t.theta_p, t.opt_p,
+                             t.d_emb, seed=s) for s in (0, 7)]
+    stacked = stack_points(states)
+    for i, ref in enumerate(states):
+        got = point_state(stacked, i)
+        assert got.epoch == ref.epoch
+        for leaf_g, leaf_r in zip(jax.tree.leaves(got),
+                                  jax.tree.leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(leaf_g),
+                                          np.asarray(leaf_r))
