@@ -17,6 +17,7 @@ plus `r.train` (the TrainResult, e.g. `epochs_to_target`) and
 from __future__ import annotations
 
 import os
+import resource
 import sys
 import time
 from typing import Iterable, List
@@ -29,11 +30,22 @@ EPOCHS = int(os.environ.get("REPRO_BENCH_EPOCHS", "5"))
 SEED = int(os.environ.get("REPRO_BENCH_SEED", "0"))
 
 
+def peak_host_mb() -> float:
+    """Process peak RSS in MB (ru_maxrss is KB on Linux).  A high-water
+    mark: it never decreases, so per-row readings in a multi-row run
+    reflect the largest-footprint row so far."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
 def run_point(cfg: ExperimentConfig, *, reuse: str = "structural"
               ) -> RunResult:
     """One sweep point through the Session lifecycle, reusing any
-    already-compiled same-shape program."""
-    return Session(cfg, reuse=reuse).run()
+    already-compiled same-shape program.  The result's metrics gain
+    `peak_host_mb` — the process-wide peak RSS after the run — so the
+    memory footprint of the data path is visible on every row."""
+    r = Session(cfg, reuse=reuse).run()
+    r.metrics["peak_host_mb"] = peak_host_mb()
+    return r
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

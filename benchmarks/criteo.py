@@ -4,19 +4,162 @@ The paper uses Criteo 1TB (4.5B samples); no network access here, so the
 generator mirrors its shape (39 features, sparse-ish, noisy labels) at
 REPRO_BENCH_SCALE x 4.5M samples (a further /1000 of the paper's run,
 flagged in the row name).  Metrics mirror Table 9: AUC, runtime,
-utilization, waiting, comm.
+utilization, waiting, comm; every row also reports the process peak RSS.
+
+A second **data-path** section runs one pubsub point at the full
+4.5M-row target (REPRO_CRITEO_ROWS overrides) through the streaming
+pipeline — chunked-PSI alignment, on-disk per-party feature shards,
+windowed double-buffered staging — under a host-RAM budget
+(REPRO_CRITEO_BUDGET_MB, default 256) that the resident data path could
+not meet: resident `stage_data` materializes + device-puts the full
+train block at once.  It emits `table9/criteo/data_path` and merges a
+`data_path` record (rows/s, window size, staged-bytes high-water mark,
+peak RSS) into `BENCH_replay.json`, plus a `stream_overhead` sub-record
+measuring streaming-vs-resident warm wall clock on the B=256 synthetic
+config where both fit in RAM (the ISSUE 6 >=0.9x criterion).
 """
 from __future__ import annotations
 
-from repro.api import ExperimentConfig
+import json
+import os
+import time
 
-from benchmarks.common import EPOCHS, SCALE, SEED, emit, run_point
+from repro.api import ExperimentConfig, Session
+
+from benchmarks.common import (EPOCHS, SCALE, SEED, emit, peak_host_mb,
+                               run_point)
 
 METHODS = ("vfl", "vfl_ps", "avfl", "avfl_ps", "pubsub")
 
+CRITEO_BASE_ROWS = 4_500_000
+DATA_PATH_ROWS = int(os.environ.get("REPRO_CRITEO_ROWS",
+                                    str(CRITEO_BASE_ROWS)))
+DATA_BUDGET_MB = float(os.environ.get("REPRO_CRITEO_BUDGET_MB", "256"))
+
+
+def _merge_bench_record(key: str, value: dict) -> None:
+    """Insert `key` into BENCH_replay.json, preserving the replay
+    benchmark's records if the file exists."""
+    record = {}
+    if os.path.exists("BENCH_replay.json"):
+        with open("BENCH_replay.json") as fh:
+            record = json.load(fh)
+    record[key] = value
+    with open("BENCH_replay.json", "w") as fh:
+        json.dump(record, fh, indent=2)
+
+
+def _stream_overhead() -> dict:
+    """Warm streaming-vs-resident epoch throughput on the B=256
+    synthetic config (the replay benchmark's operating regime) where
+    both paths fit in RAM, at the default window size.  Measured at the
+    engine level — warm `run_epoch` loops over pre-staged data, best of
+    5, interleaved — so the identical per-run trainer/eval costs don't
+    dilute the ratio; final states must stay bit-identical.  Streaming
+    re-gathers and re-stages every window each epoch (that is the
+    point), so this ratio IS the staging overhead double-buffering must
+    hide; expected >=0.9x."""
+    import jax
+    import numpy as np
+
+    from repro.data.shards import ArrayFeatures
+
+    base = dict(method="pubsub", dataset="synthetic",
+                scale=max(SCALE * 0.4, 0.004), n_epochs=EPOCHS,
+                batch_size=256, w_a=4, w_p=4, seed=SEED)
+    sess = Session(ExperimentConfig(**base))
+    eng = sess.compile().engine
+    t = sess._make_trainer(*sess._resolve_point(None, None, None))
+    hy = t.hyper()
+    data = {"resident": eng.stage_data(t.Xa, t.Xp, t.y),
+            "streaming": eng.stage_data(ArrayFeatures(np.asarray(t.Xa)),
+                                        ArrayFeatures(np.asarray(t.Xp)),
+                                        t.y, window_batches=32)}
+    st0 = eng.init_state(t.theta_a, t.opt_a, t.theta_p, t.opt_p,
+                         t.d_emb, seed=SEED)
+    n_epochs = base["n_epochs"]
+
+    def epochs(d):
+        st = st0
+        for e in range(n_epochs):
+            st = eng.run_epoch(st, e, d, hy)
+        jax.block_until_ready(jax.tree.leaves(st.carry)[0])
+        return st
+
+    finals = {k: epochs(d) for k, d in data.items()}       # compile+warm
+    for a, b in zip(jax.tree.leaves(finals["resident"].carry),
+                    jax.tree.leaves(finals["streaming"].carry)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    best = {}
+    for _ in range(5):                  # interleaved best-of-5 (vs drift)
+        for label, d in data.items():
+            t0 = time.perf_counter()
+            epochs(d)
+            dt = time.perf_counter() - t0
+            best[label] = min(best.get(label, dt), dt)
+    ratio = best["resident"] / best["streaming"]
+    emit("table9/criteo/stream_overhead", best["streaming"] * 1e6,
+         f"stream_vs_resident_x={ratio:.3f};"
+         f"resident_s={best['resident']:.2f};"
+         f"streaming_s={best['streaming']:.2f}")
+    return {"batch_size": 256, "n_epochs": n_epochs,
+            "resident_warm_s": best["resident"],
+            "streaming_warm_s": best["streaming"],
+            "stream_vs_resident_x": ratio,
+            "windows_per_epoch":
+                data["streaming"].stats["windows_per_epoch"][:n_epochs]}
+
+
+def data_path() -> None:
+    """The 4.5M-row Table 9 row through the streaming data path."""
+    scale = DATA_PATH_ROWS / CRITEO_BASE_ROWS
+    cfg = ExperimentConfig(
+        method="pubsub", dataset="criteo", scale=scale, n_epochs=1,
+        batch_size=4096, depth=3, w_a=4, w_p=4, seed=SEED,
+        stream=True, stream_backing="shards",
+        data_budget_mb=DATA_BUDGET_MB)
+    sess = Session(cfg)
+    t0 = time.perf_counter()
+    prep = sess.prepare()          # chunked generate + shard + PSI-align
+    prep_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r = sess.run(eval_every_epoch=False)
+    train_s = time.perf_counter() - t0
+    stats = dict(r.data_path)
+    n, d = prep.n_samples, prep.d_a + prep.d_p
+    rows_per_s = stats["rows_staged"] / max(stats["epoch_s"], 1e-9)
+    resident_mb = n * (d + 1) * 4 / 1e6   # what stage_data would stage
+    record = {
+        "rows_total": DATA_PATH_ROWS, "rows_train": n, "d": d,
+        "batch_size": cfg.batch_size, "depth": cfg.depth,
+        "budget_mb": DATA_BUDGET_MB,
+        "resident_train_block_mb": resident_mb,
+        "window_batches": stats["window_batches"],
+        "windows_per_epoch": stats["windows_per_epoch"],
+        "peak_staged_mb": stats["peak_staged_bytes"] / 1e6,
+        "rows_per_s": rows_per_s,
+        "stage_s": stats["stage_s"], "epoch_s": stats["epoch_s"],
+        "prep_s": prep_s, "train_wall_s": train_s,
+        "peak_host_rss_mb": peak_host_mb(),
+        "auc": r["final"],
+        "stream_overhead": _stream_overhead(),
+    }
+    assert stats["peak_staged_bytes"] <= DATA_BUDGET_MB * 1e6, \
+        "staged high-water mark exceeded the budget"
+    assert resident_mb > DATA_BUDGET_MB, \
+        "budget must be one the resident path exceeds"
+    _merge_bench_record("data_path", record)
+    emit("table9/criteo/data_path", stats["epoch_s"] * 1e6,
+         f"rows={DATA_PATH_ROWS};rows_per_s={rows_per_s:.0f};"
+         f"window_batches={stats['window_batches']};"
+         f"peak_staged_mb={stats['peak_staged_bytes'] / 1e6:.1f};"
+         f"budget_mb={DATA_BUDGET_MB:.0f};"
+         f"resident_mb={resident_mb:.0f};"
+         f"peak_rss_mb={peak_host_mb():.0f}")
+
 
 def run() -> None:
-    scale = max(SCALE * 0.01, 5e-4)           # criteo is 4.5B rows
+    scale = SCALE       # REPRO_BENCH_SCALE=1.0 is the full 4.5M target
     for m in METHODS:
         r = run_point(ExperimentConfig(
             method=m, dataset="criteo", scale=scale, n_epochs=EPOCHS,
@@ -24,7 +167,9 @@ def run() -> None:
         emit(f"table9/criteo/{m}", r["sim_s_per_epoch"] * 1e6,
              f"auc={r['final']:.4f};sim_s={r['sim_s']:.2f};"
              f"util={r['cpu_util']*100:.1f}%;"
-             f"wait={r['waiting_per_epoch']:.3f};comm_mb={r['comm_mb']:.1f}")
+             f"wait={r['waiting_per_epoch']:.3f};comm_mb={r['comm_mb']:.1f};"
+             f"peak_host_mb={r['peak_host_mb']:.0f}")
+    data_path()
 
 
 if __name__ == "__main__":

@@ -47,10 +47,14 @@ mid-training state.
 from __future__ import annotations
 
 import math
+import os
+import tempfile
 import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, Optional, Sequence
+
+import numpy as np
 
 from repro.core.cost_model import PartyProfile, SystemProfile
 from repro.core.des import RunConfig, SimResult, simulate
@@ -59,8 +63,10 @@ from repro.core.engines import (CompiledReplayEngine, EventReplayEngine,
 from repro.core.planner import Plan, plan as run_planner
 from repro.core.schedule import compile_schedule
 from repro.core.trainer import Callback, TrainResult, VFLTrainer
-from repro.data.synthetic import load
-from repro.data.vertical import psi_align, vertical_split
+from repro.data.shards import ArrayFeatures, Permuted
+from repro.data.synthetic import load, open_sharded, shape_of, write_sharded
+from repro.data.vertical import (VerticalView, psi_align, psi_intersect,
+                                 vertical_split)
 from repro.dp.gdp import GDPConfig, noise_sigma
 
 
@@ -94,6 +100,23 @@ class ExperimentConfig:
     q: int = 5
     jitter: float = 0.10
     lr: float = 1e-3
+    # --- streaming data path (docs/architecture.md §Streaming) ---
+    # host-RAM budget for staged feature data; when the resident f32
+    # feature block would exceed it, prepare() switches to streaming
+    # (windowed double-buffered staging) and sizes the window from it
+    data_budget_mb: Optional[float] = None
+    stream: Optional[bool] = None        # force streaming on/off
+                                         # (None = budget-driven auto)
+    stream_backing: str = "auto"         # "auto" | "wrap" (in-RAM arrays
+                                         # through the windowed path) |
+                                         # "shards" (on-disk party shards)
+    stream_window_batches: Optional[int] = None  # pin the window size
+                                                 # (tests/CI); default:
+                                                 # derived from budget
+    shard_dir: Optional[str] = None      # shard root (default:
+                                         # $REPRO_SHARD_DIR or tmp)
+    stream_chunk_rows: int = 131_072     # generator chunk (shards)
+    stream_test_cap: int = 65_536        # resident eval rows (shards)
 
 
 def build_profile(cfg: ExperimentConfig, d_a: int, d_p: int
@@ -113,7 +136,10 @@ def build_profile(cfg: ExperimentConfig, d_a: int, d_p: int
 @dataclass(frozen=True)
 class Prepared:
     """Stage 1: loaded, vertically split, PSI-aligned data + the system
-    profile fitted to its dimensions."""
+    profile fitted to its dimensions.  In streaming mode the train
+    feature views hold `data.shards` sources (on-disk shard stores or
+    wrapped arrays) instead of resident ndarrays; test views are always
+    resident (capped in shards mode)."""
     task: str
     train_active: object
     train_passive: object
@@ -123,6 +149,8 @@ class Prepared:
     n_samples: int
     d_a: int
     d_p: int
+    streaming: bool = False
+    backing: Optional[str] = None    # "wrap" | "shards" when streaming
 
 
 @dataclass(frozen=True)
@@ -167,6 +195,8 @@ class RunResult:
     seed: int
     lr: float
     dp_mu: float
+    data_path: Optional[Dict] = None   # streaming staging stats
+                                       # (None = resident data path)
 
     def __getitem__(self, k):
         return self.metrics[k]
@@ -225,32 +255,129 @@ class Session:
         self.compile_cache_hit = False
 
     # -- stage 1: data + profile ----------------------------------------
+    def _streaming(self) -> bool:
+        """Whether this config takes the streaming data path: forced by
+        `stream=`, else on when the resident f32 feature block would
+        exceed `data_budget_mb`, else off (small configs pay nothing)."""
+        cfg = self.cfg
+        if cfg.stream is not None:
+            return bool(cfg.stream)
+        if cfg.data_budget_mb is None:
+            return False
+        n, d, _ = shape_of(cfg.dataset, cfg.scale)
+        return n * d * 4 > cfg.data_budget_mb * 1e6
+
+    def _backing(self) -> str:
+        """Streaming backing: "shards" when even *holding* the features
+        in host RAM would bust the budget (so they are generated
+        chunk-by-chunk straight to per-party shard dirs), "wrap"
+        otherwise (resident arrays routed through the windowed staging
+        path — bit-identical data to the resident run)."""
+        cfg = self.cfg
+        if cfg.stream_backing in ("wrap", "shards"):
+            return cfg.stream_backing
+        if cfg.stream_backing != "auto":
+            raise ValueError(f"stream_backing {cfg.stream_backing!r} not "
+                             "in ('auto', 'wrap', 'shards')")
+        if cfg.data_budget_mb is None:
+            return "wrap"
+        n, d, _ = shape_of(cfg.dataset, cfg.scale)
+        return "shards" if n * d * 4 > cfg.data_budget_mb * 1e6 else "wrap"
+
+    def _prepare_resident(self) -> tuple:
+        """(task, a_tr, p_tr, a_te, p_te) via the resident load/split/PSI
+        pipeline, shared across sessions through `_DATA_CACHE`."""
+        cfg = self.cfg
+        dkey = (cfg.dataset, cfg.seed, cfg.scale, cfg.features_active)
+        if dkey in _DATA_CACHE:
+            _DATA_CACHE.move_to_end(dkey)
+            return _DATA_CACHE[dkey]
+        ds = load(cfg.dataset, seed=cfg.seed, scale=cfg.scale)
+        tr, te = ds.split(seed=cfg.seed)
+        a_tr, p_tr = vertical_split(
+            tr, seed=cfg.seed, n_features_active=cfg.features_active)
+        a_te, p_te = vertical_split(
+            te, seed=cfg.seed, n_features_active=cfg.features_active)
+        a_tr, p_tr = psi_align(a_tr, p_tr)
+        entry = (ds.task, a_tr, p_tr, a_te, p_te)
+        _DATA_CACHE[dkey] = entry
+        while len(_DATA_CACHE) > _DATA_CAP:
+            _DATA_CACHE.popitem(last=False)
+        return entry
+
+    def _shard_root(self) -> str:
+        cfg = self.cfg
+        if cfg.shard_dir:
+            return cfg.shard_dir
+        base = os.environ.get(
+            "REPRO_SHARD_DIR",
+            os.path.join(tempfile.gettempdir(), "repro_shards"))
+        tag = (f"{cfg.dataset}_s{cfg.seed}_x{cfg.scale:g}"
+               f"_f{cfg.features_active}")
+        return os.path.join(base, tag)
+
+    def _prepare_shards(self) -> tuple:
+        """(task, a_tr, p_tr, a_te, p_te) from on-disk per-party shards:
+        features are generated chunk-by-chunk straight into each party's
+        shard directory (never materializing the full array), PSI runs
+        on the chunked digest intersection, and its alignment is applied
+        as a row-permutation *view* over the shard stores.  Test rows
+        stay resident, capped at `stream_test_cap` (evaluation gathers
+        them once)."""
+        cfg = self.cfg
+        dkey = ("shards", cfg.dataset, cfg.seed, cfg.scale,
+                cfg.features_active, cfg.stream_chunk_rows,
+                cfg.stream_test_cap, self._shard_root())
+        if dkey in _DATA_CACHE:
+            _DATA_CACHE.move_to_end(dkey)
+            return _DATA_CACHE[dkey]
+        root = self._shard_root()
+        write_sharded(cfg.dataset, root, seed=cfg.seed, scale=cfg.scale,
+                      chunk_rows=cfg.stream_chunk_rows,
+                      n_features_active=cfg.features_active)
+        meta, store_a, store_p, y, ids_tr, ids_te = open_sharded(root)
+        # PSI over the aligned train-row id space (both parties hold the
+        # same ids, as in the resident path); the digest-sorted
+        # intersection order becomes a permutation view over the shards
+        local = np.arange(len(ids_tr), dtype=np.int64)
+        ia, ip = psi_intersect(local, local)
+        perm_a = ids_tr[ia]
+        perm_p = ids_tr[ip]
+        a_tr = VerticalView(perm_a, Permuted(store_a, perm_a), y[perm_a])
+        p_tr = VerticalView(perm_p, Permuted(store_p, perm_p), None)
+        te = ids_te[:max(int(cfg.stream_test_cap), 1)]
+        a_te = VerticalView(te, store_a.gather(te), y[te])
+        p_te = VerticalView(te, store_p.gather(te), None)
+        entry = (meta["task"], a_tr, p_tr, a_te, p_te)
+        _DATA_CACHE[dkey] = entry
+        while len(_DATA_CACHE) > _DATA_CAP:
+            _DATA_CACHE.popitem(last=False)
+        return entry
+
     def prepare(self) -> Prepared:
         if self._prepared is not None:
             return self._prepared
         cfg = self.cfg
-        dkey = (cfg.dataset, cfg.seed, cfg.scale, cfg.features_active)
-        if dkey in _DATA_CACHE:
-            task, a_tr, p_tr, a_te, p_te = _DATA_CACHE[dkey]
-            _DATA_CACHE.move_to_end(dkey)
+        streaming = self._streaming()
+        backing = self._backing() if streaming else None
+        if backing == "shards":
+            task, a_tr, p_tr, a_te, p_te = self._prepare_shards()
         else:
-            ds = load(cfg.dataset, seed=cfg.seed, scale=cfg.scale)
-            tr, te = ds.split(seed=cfg.seed)
-            a_tr, p_tr = vertical_split(
-                tr, seed=cfg.seed, n_features_active=cfg.features_active)
-            a_te, p_te = vertical_split(
-                te, seed=cfg.seed, n_features_active=cfg.features_active)
-            a_tr, p_tr = psi_align(a_tr, p_tr)
-            task = ds.task
-            _DATA_CACHE[dkey] = (task, a_tr, p_tr, a_te, p_te)
-            while len(_DATA_CACHE) > _DATA_CAP:
-                _DATA_CACHE.popitem(last=False)
+            task, a_tr, p_tr, a_te, p_te = self._prepare_resident()
+            if streaming:
+                # same bytes as the resident run, staged windowed: the
+                # wrapper is what routes stage_data onto the streaming
+                # path (and what the parity tests compare against)
+                a_tr = VerticalView(a_tr.ids, ArrayFeatures(a_tr.X),
+                                    a_tr.y)
+                p_tr = VerticalView(p_tr.ids, ArrayFeatures(p_tr.X),
+                                    p_tr.y)
         profile = build_profile(cfg, a_tr.X.shape[1], p_tr.X.shape[1])
         self._prepared = Prepared(
             task=task, train_active=a_tr, train_passive=p_tr,
             test_active=a_te, test_passive=p_te, profile=profile,
             n_samples=a_tr.X.shape[0], d_a=a_tr.X.shape[1],
-            d_p=p_tr.X.shape[1])
+            d_p=p_tr.X.shape[1], streaming=streaming, backing=backing)
         return self._prepared
 
     # -- stage 2: planning ----------------------------------------------
@@ -403,6 +530,29 @@ class Session:
                 f"dp_mu={dp_mu})")
         return seed, lr, dp_mu
 
+    def window_batches(self) -> Optional[int]:
+        """Streaming window size in batches (None on the resident path):
+        the pinned `stream_window_batches` if given, else sized so the
+        double buffer (two staged windows) fits `data_budget_mb`, else a
+        default of 32."""
+        if not self._streaming():
+            return None
+        cfg = self.cfg
+        if cfg.stream_window_batches is not None:
+            return max(1, int(cfg.stream_window_batches))
+        pl = self.plan()
+        prep = self.prepare()
+        if cfg.data_budget_mb is not None:
+            per_batch = pl.batch_size * (prep.d_a + prep.d_p + 1) * 4
+            wb = int(cfg.data_budget_mb * 1e6 / 2 // max(per_batch, 1))
+            # a window's staged bid count can exceed its tick span by the
+            # batches in flight across its boundary (up to one per
+            # replica — see jit_pipeline._fixed_window_len), so leave
+            # that many batches of slack under the half-budget
+            wb -= pl.n_rep_a + pl.n_rep_p
+            return max(1, min(wb, max(pl.run_cfg.n_batches, 1)))
+        return 32
+
     def _make_trainer(self, seed: int, lr: float,
                       dp_mu: float) -> VFLTrainer:
         """A fresh `VFLTrainer` (new model init for `seed`) against this
@@ -416,7 +566,8 @@ class Session:
             pl.run_cfg, prep.train_active, prep.train_passive,
             prep.test_active, prep.test_passive, prep.task, lr=lr,
             seed=seed, resnet=cfg.resnet, gdp=self._gdp(dp_mu, pl),
-            depth=cfg.depth, disable_semi_async=cfg.disable_semi_async)
+            depth=cfg.depth, disable_semi_async=cfg.disable_semi_async,
+            stream_window_batches=self.window_batches())
 
     def _result(self, res: TrainResult, *, wall_s: float, seed: int,
                 lr: float, dp_mu: float) -> RunResult:
@@ -448,9 +599,15 @@ class Session:
             "batch_size": pl.batch_size,
             "plan": (pl.plan.summary() if pl.plan else None),
         }
+        data_path = None
+        if res.data_path is not None:
+            data_path = dict(res.data_path)
+            data_path["backing"] = prep.backing
+            data_path["budget_mb"] = cfg.data_budget_mb
         return RunResult(metrics=metrics, train=res,
                          compile_cache_hit=self.compile_cache_hit,
-                         wall_s=wall_s, seed=seed, lr=lr, dp_mu=dp_mu)
+                         wall_s=wall_s, seed=seed, lr=lr, dp_mu=dp_mu,
+                         data_path=data_path)
 
     def run(self, *, seed: Optional[int] = None, lr: Optional[float] = None,
             dp_mu: Optional[float] = None,

@@ -230,7 +230,8 @@ def run_sweep(cfgs: Sequence[ExperimentConfig], *,
         # below would do anyway
         for group in _group_by_key(cfgs, sessions).values():
             group_sizes.append(len(group))
-            if len(group) > 1 and group[0][1].engine == "compiled":
+            if len(group) > 1 and group[0][1].engine == "compiled" \
+                    and not group[0][2]._streaming():
                 stacked_groups += 1
                 for idx, rr in _run_group_stacked(
                         group, eval_every_epoch=eval_every_epoch,

@@ -52,12 +52,26 @@ from repro.optim.optimizers import adam, apply_updates
 # re-exported so `core.engines` is the one import site for the protocol
 # (incl. the point-stacking helpers used by the stacked sweep driver)
 from repro.core.jit_pipeline import (CompiledReplayEngine,  # noqa: F401
-                                     TrainerState, point_state,
-                                     stack_points, unstack_points)
+                                     TrainerState, WindowedData,
+                                     point_state, stack_points,
+                                     unstack_points)
+from repro.data.shards import is_feature_source
 
 
 class ReplayEngine(Protocol):
-    """Staged replay surface shared by the compiled and event engines."""
+    """Staged replay surface shared by the compiled and event engines.
+
+    Streaming contract: `Xa`/`Xp` may be `data.shards` feature sources
+    (row-gatherable, not ndarray) instead of resident arrays.  The value
+    `stage_data` returns is then an engine-private *window plan* rather
+    than staged device arrays, and `run_epoch` consumes the epoch as a
+    sequence of bounded staging windows — the compiled engine
+    double-buffers a window ahead (`core.jit_pipeline.WindowedData`),
+    the event engine gathers per event (each event IS a bounded
+    window).  Either way the executed tick/event stream is identical to
+    the resident path, so results stay bit-for-bit equal; `max_windows`
+    (compiled engine) parks the state mid-epoch on a window boundary
+    for checkpointing."""
 
     # bookkeeping resolved ahead of the replay (control flow only)
     staleness: List[int]
@@ -65,7 +79,8 @@ class ReplayEngine(Protocol):
     versions_p: List[int]
     n_epochs: int
 
-    def stage_data(self, Xa, Xp, y) -> Any: ...
+    def stage_data(self, Xa, Xp, y, *,
+                   window_batches: Optional[int] = None) -> Any: ...
 
     def init_state(self, theta_a, opt_a, theta_p, opt_p, d_emb: int, *,
                    seed: Optional[int] = None) -> Any: ...
@@ -188,8 +203,15 @@ class EventReplayEngine:
         self.versions_p = list(version_p)
 
     # -- staging ---------------------------------------------------------
-    def stage_data(self, Xa, Xp, y) -> tuple:
-        return (self.rows, np.asarray(Xa), np.asarray(Xp), np.asarray(y))
+    def stage_data(self, Xa, Xp, y, *,
+                   window_batches: Optional[int] = None) -> tuple:
+        """Feature sources (`data.shards`) pass through unchanged — the
+        replay below gathers `Xp[rows]` per event, so the event engine
+        streams inherently one batch at a time; `window_batches` is
+        accepted for protocol compatibility and ignored."""
+        def host(x):
+            return x if is_feature_source(x) else np.asarray(x)
+        return (self.rows, host(Xa), host(Xp), np.asarray(y))
 
     def init_state(self, theta_a, opt_a, theta_p, opt_p, d_emb: int, *,
                    seed: Optional[int] = None) -> EventState:

@@ -71,6 +71,8 @@ final params agree with the event loop to float tolerance.
 from __future__ import annotations
 
 import math
+import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
@@ -81,6 +83,7 @@ import numpy as np
 from repro.core.channels import (slot_ring_init, slot_ring_read,
                                  slot_ring_write)
 from repro.core.schedule import CompiledSchedule
+from repro.data.shards import is_feature_source
 from repro.core.xla_cache import enable_persistent_cache
 from repro.models import tabular
 from repro.optim.optimizers import (adam, apply_updates, gather_replicas,
@@ -210,7 +213,11 @@ class TrainerState(NamedTuple):
     optimizer states, the in-flight embedding/gradient rings, the
     device-resident per-epoch loss accumulators, and the DP PRNG key);
     `epoch` counts completed epochs host-side and is what makes a
-    restored state resumable at the right segment."""
+    restored state resumable at the right segment.  `window` counts
+    completed staging windows *within* the current epoch on the
+    streaming data path (always 0 at epoch boundaries and on the
+    resident path), so a checkpoint taken mid-epoch resumes on the
+    correct window."""
     theta_a: Any
     opt_a: Any
     theta_p: Any
@@ -221,6 +228,7 @@ class TrainerState(NamedTuple):
     cnt_vec: Any
     key: Any
     epoch: int = 0
+    window: int = 0
 
     @property
     def carry(self) -> tuple:
@@ -602,6 +610,108 @@ def unstack_points(state: "TrainerState", n_points: int
     return [point_state(state, i) for i in range(n_points)]
 
 
+# ---------------------------------------------------------------------------
+# streaming data path: windowed staging plans (see docs/architecture.md
+# §Streaming data path)
+# ---------------------------------------------------------------------------
+class _Window(NamedTuple):
+    """One staging window: a contiguous slice of an epoch's tick stream
+    plus the (padded) list of batch ids those ticks touch.  `xs` holds
+    the window's tick arrays with batch ids REMAPPED to window-local
+    indices, so the jitted tick bodies gather from the small staged
+    block instead of the full feature arrays."""
+    structure: Optional[tuple]   # segmented run chain; None for flat packs
+    xs: Any                      # device tick arrays (tuple of dicts | dict)
+    bids: np.ndarray             # (cap,) int64 global batch ids (padded)
+    n_bids: int                  # real (unpadded) batch-id count
+
+
+class WindowedData:
+    """`stage_data`'s return value in streaming mode: per-epoch window
+    plans plus the host-side feature sources.  `stage(window)` gathers
+    the window's rows from the sources and device-puts one bounded block
+    — `run_epoch` calls it from a background thread one window ahead of
+    execution (double buffering), so at most two windows of features are
+    ever staged."""
+
+    def __init__(self, rows: np.ndarray, sources: tuple, plans: list,
+                 table, cap: int, window_batches: int):
+        self.rows = rows                      # host (n_bids, B) int32
+        self.src_a, self.src_p, self.y = sources
+        self.plans = plans                    # [seg][k] -> _Window
+        self.table = table                    # device (cap, B) int32
+        self.cap = cap
+        self.window_batches = window_batches
+        B = rows.shape[1] if rows.ndim == 2 else 0
+        self.stats = {
+            "window_batches": int(window_batches),
+            "window_cap_bids": int(cap),
+            "windows_per_epoch": [len(p) for p in plans],
+            "window_rows": int(cap) * int(B),
+            "rows_staged": 0, "bytes_staged": 0,
+            "peak_staged_bytes": 0, "stage_s": 0.0, "epoch_s": 0.0,
+        }
+        self._last_bytes = 0
+
+    def n_windows(self, seg: int) -> int:
+        return len(self.plans[seg])
+
+    def stage(self, w: _Window) -> tuple:
+        t0 = time.perf_counter()
+        rows = self.rows[w.bids].reshape(-1)
+        Xa = self.src_a[rows]
+        Xp = self.src_p[rows]
+        yw = self.y[rows]
+        nbytes = Xa.size * 4 + Xp.size * 4 + yw.size * 4
+        blk = (jnp.asarray(Xa, jnp.float32), jnp.asarray(Xp, jnp.float32),
+               jnp.asarray(yw))
+        st = self.stats
+        st["stage_s"] += time.perf_counter() - t0
+        st["rows_staged"] += len(rows)
+        st["bytes_staged"] += nbytes
+        # double buffering keeps at most this window + the previous one
+        st["peak_staged_bytes"] = max(st["peak_staged_bytes"],
+                                      nbytes + self._last_bytes)
+        self._last_bytes = nbytes
+        return blk
+
+
+def _fixed_window_len(tick_bids: List[np.ndarray], cap: int
+                      ) -> Tuple[int, int]:
+    """Largest uniform tick-window length whose every aligned window
+    touches at most `cap` distinct batch ids.  Uniform length keeps the
+    steady-state windows shape-identical (one jit specialization); `cap`
+    is raised to the densest single tick when necessary, so the search
+    always terminates.  Returns (window_len, effective_cap)."""
+    sizes = [len(b) for b in tick_bids]
+    cap = max(int(cap), max(sizes) if sizes else 1, 1)
+    T = len(tick_bids)
+    T_w = max(T, 1)
+    while True:
+        worst = 0
+        for lo in range(0, T, T_w):
+            cat = np.concatenate(tick_bids[lo:lo + T_w])
+            worst = max(worst, len(np.unique(cat)))
+        if worst <= cap:
+            return T_w, cap
+        T_w = max(1, min(T_w - 1, (T_w * cap) // worst))
+
+
+def _remap_bids(arrs: Dict[str, np.ndarray], bids: np.ndarray,
+                n_total: int) -> Dict[str, np.ndarray]:
+    """Rewrite `*_bid` tick arrays from global batch ids to window-local
+    indices (position within `bids`); -1 (idle lane) is preserved."""
+    local = np.full(max(n_total, 1), -1, np.int32)
+    local[bids] = np.arange(len(bids), dtype=np.int32)
+    out = {}
+    for k, v in arrs.items():
+        if k.endswith("_bid"):
+            v = np.where(v >= 0, local[np.maximum(v, 0)],
+                         -1).astype(np.int32)
+        out[k] = v
+    return out
+
+
 class CompiledReplayEngine:
     """Executes a `CompiledSchedule` as jitted per-epoch scan segments.
 
@@ -675,6 +785,9 @@ class CompiledReplayEngine:
         # so single-run users never pay their traces
         self._stacked_ready = False
         self._seed = seed
+        # streaming window plans, keyed by window_batches (built lazily
+        # on the first windowed stage_data; resident users never pay)
+        self._stream_plans: Dict[int, tuple] = {}
 
     # -- ReplayEngine protocol: bookkeeping resolved at compile time -----
     @property
@@ -694,13 +807,151 @@ class CompiledReplayEngine:
         return self.schedule.n_epochs
 
     # -- staging ---------------------------------------------------------
-    def stage_data(self, Xa, Xp, y) -> tuple:
-        """Device-put the full feature blocks and the batch-row table once;
-        every tick gathers its minibatch on device (no per-step host
-        staging, no per-step transfers)."""
-        return (jnp.asarray(self.schedule.rows),
-                jnp.asarray(Xa, jnp.float32), jnp.asarray(Xp, jnp.float32),
-                jnp.asarray(y))
+    def stage_data(self, Xa, Xp, y, *,
+                   window_batches: Optional[int] = None):
+        """Resident mode (plain arrays, no `window_batches`): device-put
+        the full feature blocks and the batch-row table once; every tick
+        gathers its minibatch on device (no per-step host staging, no
+        per-step transfers).
+
+        Streaming mode (a `data.shards` feature source for either party,
+        or an explicit `window_batches`): returns a `WindowedData` plan
+        instead — `run_epoch` then scans the epoch in staging windows of
+        at most ~`window_batches` batches, double-buffering the
+        host-gather + device-put of window k+1 behind the execution of
+        window k.  Windows partition the exact resident tick stream
+        (same ticks, same order, same per-tick PRNG splits), so streamed
+        results are bit-for-bit equal to the resident path."""
+        streaming = (window_batches is not None
+                     or is_feature_source(Xa) or is_feature_source(Xp))
+        if not streaming:
+            return (jnp.asarray(self.schedule.rows),
+                    jnp.asarray(Xa, jnp.float32),
+                    jnp.asarray(Xp, jnp.float32), jnp.asarray(y))
+        wb = int(window_batches) if window_batches else 32
+        plans, table, cap = self._stream_plan(wb)
+        rows = np.asarray(self.schedule.rows)
+        y = np.asarray(y)
+        return WindowedData(rows, (Xa, Xp, y), plans, table, cap, wb)
+
+    # -- streaming window plans -----------------------------------------
+    def _stream_plan(self, window_batches: int) -> tuple:
+        """(plans, table, cap) for a window budget: per-epoch lists of
+        `_Window`s partitioning that epoch's tick stream, the shared
+        window-local batch-row table, and the padded per-window batch-id
+        capacity (shared across windows so steady-state windows are
+        shape-identical and reuse one jit specialization)."""
+        plan = self._stream_plans.get(window_batches)
+        if plan is not None:
+            return plan
+        s = self.schedule
+        if s.pack == "segmented":
+            raw = [self._plan_segmented(seg, window_batches)
+                   for seg in s.segments]
+        else:
+            padded = s.padded()
+            raw = [self._plan_flat({k: v[i] for k, v in padded.items()},
+                                   window_batches)
+                   for i in range(len(s.segments))]
+        cap = max((w["n_bids"] for ws in raw for w in ws), default=1)
+        cap = max(cap, 1)
+        n_total = int(s.rows.shape[0])
+        plans = [[self._finalize_window(w, cap, n_total) for w in ws]
+                 for ws in raw]
+        table = jnp.arange(cap * s.batch_rows,
+                           dtype=jnp.int32).reshape(cap, s.batch_rows)
+        plan = (plans, table, cap)
+        self._stream_plans[window_batches] = plan
+        return plan
+
+    @staticmethod
+    def _tick_bid_sets(arr_list: List[np.ndarray], T: int
+                       ) -> List[np.ndarray]:
+        out = []
+        for t in range(T):
+            if arr_list:
+                b = np.concatenate([np.asarray(a[t]).ravel()
+                                    for a in arr_list])
+                out.append(np.unique(b[b >= 0]))
+            else:
+                out.append(np.empty(0, np.int64))
+        return out
+
+    def _plan_segmented(self, seg, window_batches: int) -> List[dict]:
+        """Partition one epoch's run chain into tick windows.  A window
+        boundary may fall inside a run — the run is sliced along its
+        tick axis (slices keep the run's signature/has_agg, so the
+        chained per-slice scans execute the identical tick sequence)."""
+        tick_bids: List[np.ndarray] = []
+        owner: List[int] = []
+        starts: List[int] = []
+        t0 = 0
+        for ri, r in enumerate(seg.runs):
+            starts.append(t0)
+            bid_arrs = [np.asarray(r.arrays[f"{ph}_bid"]) for ph in r.sig]
+            tick_bids.extend(self._tick_bid_sets(bid_arrs, r.n_ticks))
+            owner.extend([ri] * r.n_ticks)
+            t0 += r.n_ticks
+        T = len(tick_bids)
+        if T == 0:
+            return []
+        T_w, _ = _fixed_window_len(tick_bids, window_batches)
+        windows = []
+        for lo in range(0, T, T_w):
+            hi = min(T, lo + T_w)
+            bids = np.unique(np.concatenate(tick_bids[lo:hi]))
+            pieces = []
+            t = lo
+            while t < hi:
+                ri = owner[t]
+                r = seg.runs[ri]
+                a = t - starts[ri]
+                b = min(r.n_ticks, a + (hi - t))
+                arrs = {k: np.asarray(v)[a:b]
+                        for k, v in r.arrays.items()}
+                pieces.append((r.sig, r.has_agg, arrs))
+                t += b - a
+            windows.append({"bids": bids, "pieces": pieces,
+                            "n_bids": len(bids)})
+        return windows
+
+    def _plan_flat(self, xs_host: Dict[str, np.ndarray],
+                   window_batches: int) -> List[dict]:
+        """Partition one epoch's padded tick arrays (packed/dense packs)
+        into tick windows.  The padded tick count is preserved exactly —
+        padding ticks also split the DP PRNG key, so dropping them would
+        break bit-parity with the resident scan."""
+        bid_keys = [k for k in xs_host if k.endswith("_bid")]
+        T = int(next(iter(xs_host.values())).shape[0])
+        tick_bids = self._tick_bid_sets([xs_host[k] for k in bid_keys], T)
+        if T == 0:
+            return []
+        T_w, _ = _fixed_window_len(tick_bids, window_batches)
+        windows = []
+        for lo in range(0, T, T_w):
+            hi = min(T, lo + T_w)
+            bids = np.unique(np.concatenate(tick_bids[lo:hi]))
+            arrs = {k: v[lo:hi] for k, v in xs_host.items()}
+            windows.append({"bids": bids, "pieces": arrs,
+                            "n_bids": len(bids)})
+        return windows
+
+    def _finalize_window(self, w: dict, cap: int, n_total: int) -> _Window:
+        bids = np.asarray(w["bids"], np.int64)
+        n = len(bids)
+        padded = np.full(cap, bids[-1] if n else 0, np.int64)
+        padded[:n] = bids
+        pieces = w["pieces"]
+        if isinstance(pieces, dict):              # packed/dense
+            xs = {k: jnp.asarray(v)
+                  for k, v in _remap_bids(pieces, bids, n_total).items()}
+            structure = None
+        else:                                     # segmented run slices
+            structure = tuple((sig, has_agg) for sig, has_agg, _ in pieces)
+            xs = tuple({k: jnp.asarray(v) for k, v in
+                        _remap_bids(arrs, bids, n_total).items()}
+                       for _, _, arrs in pieces)
+        return _Window(structure=structure, xs=xs, bids=padded, n_bids=n)
 
     def init_state(self, theta_a_reps: List, opt_a_reps: List,
                    theta_p_reps: List, opt_p_reps: List, d_emb: int,
@@ -723,21 +974,39 @@ class CompiledReplayEngine:
 
     def load_state(self, payload) -> TrainerState:
         """Rebuild a `TrainerState` from a `checkpoint.store.restore_state`
-        payload (the state saved with `save_state`)."""
+        payload (the state saved with `save_state`).  Accepts both the
+        10-field pre-streaming layout (no `window`; mid-epoch resume did
+        not exist) and the current 11-field one."""
         fields = list(payload)
-        return TrainerState(*fields[:9], epoch=int(fields[9]))
+        window = int(fields[10]) if len(fields) > 10 else 0
+        return TrainerState(*fields[:9], epoch=int(fields[9]),
+                            window=window)
 
     # -- execution -------------------------------------------------------
-    def run_epoch(self, state: TrainerState, seg: int, data: tuple,
-                  hyper: Optional[Dict] = None) -> TrainerState:
+    def run_epoch(self, state: TrainerState, seg: int, data,
+                  hyper: Optional[Dict] = None, *,
+                  max_windows: Optional[int] = None) -> TrainerState:
         """Execute epoch `seg` and return the advanced state.  `hyper`
         overrides the runtime scalars {lr, clip, sigma} for this call
-        (default: the engine's construction values)."""
+        (default: the engine's construction values).
+
+        With a `WindowedData` plan (streaming `stage_data`), the epoch
+        runs window by window with double-buffered staging; execution
+        resumes from `state.window` and `max_windows` (tests /
+        checkpointing) stops after that many windows, returning a state
+        parked mid-epoch (`epoch` unchanged, `window` advanced)."""
         if hyper is None:
             hyper = self.hyper
         else:
             hyper = {k: jnp.float32(hyper[k]) for k in ("lr", "clip",
                                                         "sigma")}
+        if isinstance(data, WindowedData):
+            return self._run_epoch_windowed(state, seg, data, hyper,
+                                            max_windows)
+        if int(getattr(state, "window", 0)):
+            raise ValueError("state is parked mid-epoch (window "
+                             f"{int(state.window)}); resuming requires "
+                             "the streaming data path")
         carry = TrainerState(*state).carry
         if self.schedule.pack == "segmented":
             if self.schedule.segments[seg].runs:
@@ -751,6 +1020,47 @@ class CompiledReplayEngine:
             ta, tp = self._agg_both(ta, tp)
             carry = (ta, oa, tp, op_, *rest)
         return TrainerState(*carry, epoch=seg + 1)
+
+    def _run_epoch_windowed(self, state: TrainerState, seg: int,
+                            data: WindowedData, hyper: Dict,
+                            max_windows: Optional[int]) -> TrainerState:
+        wins = data.plans[seg]
+        w0 = int(getattr(state, "window", 0))
+        end = len(wins)
+        if max_windows is not None:
+            end = min(end, w0 + max(1, int(max_windows)))
+        carry = TrainerState(*state).carry
+        t0 = time.perf_counter()
+        pool = ThreadPoolExecutor(max_workers=1)
+        try:
+            fut = pool.submit(data.stage, wins[w0]) if w0 < end else None
+            for k in range(w0, end):
+                blk = fut.result()
+                if k + 1 < end:
+                    # prefetch: host-gather + device-put window k+1 while
+                    # window k's (async-dispatched) scan executes
+                    fut = pool.submit(data.stage, wins[k + 1])
+                w = wins[k]
+                wdata = (data.table, *blk)
+                if self.schedule.pack == "segmented":
+                    if w.structure:
+                        runner = _get_segmented_runner(
+                            self.spec, self._opt_builder, self._opt_key,
+                            w.structure)
+                        carry = runner(carry, w.xs, wdata, hyper)
+                else:
+                    carry = self._runner(carry, w.xs, wdata, hyper)
+        finally:
+            pool.shutdown(wait=True)
+        data.stats["epoch_s"] += time.perf_counter() - t0
+        if end < len(wins):
+            return TrainerState(*carry, epoch=int(state.epoch),
+                                window=end)
+        if self.schedule.segments[seg].epoch_agg:
+            ta, oa, tp, op_, *rest = carry
+            ta, tp = self._agg_both(ta, tp)
+            carry = (ta, oa, tp, op_, *rest)
+        return TrainerState(*carry, epoch=seg + 1, window=0)
 
     def run_segment(self, state, seg: int, data: tuple) -> TrainerState:
         """Back-compat alias of `run_epoch` (pre-Session name)."""
@@ -780,6 +1090,10 @@ class CompiledReplayEngine:
         must match across points (they do within a structural group —
         n_samples/d_a/d_p are part of the key).  The schedule's batch-row
         table is shared: every point replays the same pinned timetable."""
+        if any(is_feature_source(xa) or is_feature_source(xp)
+               for xa, xp, _ in points):
+            raise TypeError("point stacking requires resident feature "
+                            "arrays; streaming sources run sequentially")
         return (jnp.asarray(self.schedule.rows),
                 jnp.stack([jnp.asarray(xa, jnp.float32)
                            for xa, _, _ in points]),

@@ -80,6 +80,8 @@ class TrainResult:
     n_updates: int
     lane_occupancy: float = 0.0       # compiled engine only (0 = event)
     n_ticks: int = 0                  # compiled engine only
+    data_path: Optional[Dict] = None  # streaming staging stats (None =
+                                      # resident path)
 
     def epochs_to_target(self, target: float, higher_better: bool) -> float:
         """Epochs until the test metric first reaches `target`, or
@@ -142,7 +144,8 @@ class VFLTrainer:
                  test_passive: VerticalView, task: str, *,
                  lr: float = 1e-3, seed: int = 0, resnet: bool = False,
                  gdp: Optional[GDPConfig] = None, depth: int = 10,
-                 disable_semi_async: bool = False):
+                 disable_semi_async: bool = False,
+                 stream_window_batches: Optional[int] = None):
         self.cfg = cfg
         self.task = task
         self.resnet = resnet
@@ -152,6 +155,10 @@ class VFLTrainer:
         self.sigma = noise_sigma(gdp) if gdp else 0.0
         self.clip = gdp.clip if gdp else math.inf
         self.disable_semi_async = disable_semi_async
+        # streaming knob: not-None opts this trainer into windowed
+        # staging (labels and the batch table stay resident; features
+        # may be shard stores or wrapped arrays — see data.shards)
+        self.stream_window_batches = stream_window_batches
         self.Xa, self.Xp, self.y = active.X, passive.X, active.y
         self.tXa, self.tXp, self.ty = (test_active.X, test_passive.X,
                                        test_active.y)
@@ -247,7 +254,8 @@ class VFLTrainer:
         `checkpoint.store.save_state` / `engine.load_state`); `seed`
         keys the device DP noise stream (default: the trainer's)."""
         cfg = self.cfg
-        data = eng.stage_data(self.Xa, self.Xp, self.y)
+        data = eng.stage_data(self.Xa, self.Xp, self.y,
+                              window_batches=self.stream_window_batches)
         if state is None:
             # seed=None keeps each engine's own default noise keying
             # (compiled: the schedule cfg seed; event: the trainer seed)
@@ -268,10 +276,12 @@ class VFLTrainer:
                 cb(ctx)
             if ctx.stop:
                 break
-        return self._finish_replay(eng, state, history)
+        return self._finish_replay(eng, state, history,
+                                   data_path=getattr(data, "stats", None))
 
     def _finish_replay(self, eng: ReplayEngine, state,
-                       history: List[float]) -> TrainResult:
+                       history: List[float], *,
+                       data_path: Optional[Dict] = None) -> TrainResult:
         """Fold a finished (or early-stopped) replay state back into the
         trainer and build its `TrainResult`.  Shared by `replay_with`
         and the point-stacked sweep driver (`api.sweep`), which finishes
@@ -299,7 +309,8 @@ class VFLTrainer:
                             if self.staleness else 0.0),
             n_updates=self.n_updates,
             lane_occupancy=sched.lane_occupancy() if sched else 0.0,
-            n_ticks=sched.n_ticks if sched else 0)
+            n_ticks=sched.n_ticks if sched else 0,
+            data_path=dict(data_path) if data_path else None)
 
     # ------------------------------------------------------------------
     def evaluate(self) -> float:

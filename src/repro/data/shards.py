@@ -1,0 +1,233 @@
+"""Per-party on-disk feature shard store for the streaming data path.
+
+Each party owns its own shard directory — feature rows never cross the
+party/trust boundary on disk, mirroring the paper's deployment where the
+publisher and subscribers hold disjoint feature columns:
+
+    <party_dir>/meta.json        {"n", "d", "dtype", "rows_per_shard", ...}
+    <party_dir>/shard_00000.npy  rows [0, rows_per_shard)
+    <party_dir>/shard_00001.npy  rows [rows_per_shard, 2*rows_per_shard)
+    ...
+
+`ShardWriter` appends feature chunks (bounded memory, any chunk size) and
+`ShardStore` reads them back through lazily-opened ``np.load(mmap_mode="r")``
+handles, so a gather touches only the pages holding the requested rows.
+
+Everything downstream of `Session.prepare()` consumes features through the
+minimal *feature source* surface:
+
+    src.shape  -> (n, d)
+    src.dtype
+    src[rows]  -> np.ndarray (len(rows), d)   # arbitrary int row gather
+
+`ShardStore`, `Permuted` (a PSI row-permutation view) and `ArrayFeatures`
+(an in-RAM array opted into windowed staging) all implement it, which is
+what lets the compiled replay engine's windowed `stage_data` and the event
+engine's per-event gathers stream from RAM or disk interchangeably.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional, Tuple
+
+import numpy as np
+
+META_NAME = "meta.json"
+DEFAULT_ROWS_PER_SHARD = 262_144
+
+
+def is_feature_source(x) -> bool:
+    """True for streaming feature sources (anything gatherable by row that
+    is not a plain ndarray)."""
+    return hasattr(x, "gather") and not isinstance(x, np.ndarray)
+
+
+class ShardWriter:
+    """Append-only writer producing the shard layout above.
+
+    Peak memory is one shard (`rows_per_shard * d * itemsize`), regardless
+    of total rows or of the chunk sizes appended."""
+
+    def __init__(self, party_dir: str, d: int, *,
+                 rows_per_shard: int = DEFAULT_ROWS_PER_SHARD,
+                 dtype=np.float32):
+        os.makedirs(party_dir, exist_ok=True)
+        self.dir = party_dir
+        self.d = int(d)
+        self.rows_per_shard = int(rows_per_shard)
+        self.dtype = np.dtype(dtype)
+        self._buf = np.empty((self.rows_per_shard, self.d), self.dtype)
+        self._fill = 0                     # rows currently buffered
+        self._n = 0                        # total rows written + buffered
+        self._n_shards = 0
+
+    def append(self, block: np.ndarray) -> None:
+        block = np.asarray(block, self.dtype)
+        if block.ndim != 2 or block.shape[1] != self.d:
+            raise ValueError(f"expected (k, {self.d}) block, "
+                             f"got {block.shape}")
+        pos = 0
+        while pos < len(block):
+            take = min(self.rows_per_shard - self._fill, len(block) - pos)
+            self._buf[self._fill:self._fill + take] = block[pos:pos + take]
+            self._fill += take
+            pos += take
+            if self._fill == self.rows_per_shard:
+                self._flush()
+        self._n += len(block)
+
+    def _flush(self) -> None:
+        if not self._fill:
+            return
+        path = os.path.join(self.dir, f"shard_{self._n_shards:05d}.npy")
+        np.save(path, self._buf[:self._fill])
+        self._n_shards += 1
+        self._fill = 0
+
+    def close(self) -> dict:
+        self._flush()
+        meta = {"n": self._n, "d": self.d, "dtype": self.dtype.name,
+                "rows_per_shard": self.rows_per_shard,
+                "n_shards": self._n_shards}
+        with open(os.path.join(self.dir, META_NAME), "w") as f:
+            json.dump(meta, f)
+        return meta
+
+
+class ShardStore:
+    """Memory-mapped reader over one party's shard directory."""
+
+    def __init__(self, party_dir: str):
+        with open(os.path.join(party_dir, META_NAME)) as f:
+            meta = json.load(f)
+        self.dir = party_dir
+        self.n = int(meta["n"])
+        self.d = int(meta["d"])
+        self.dtype = np.dtype(meta["dtype"])
+        self.rows_per_shard = int(meta["rows_per_shard"])
+        self.n_shards = int(meta["n_shards"])
+        self._maps: list = [None] * self.n_shards
+
+    @classmethod
+    def open(cls, party_dir: str) -> "ShardStore":
+        return cls(party_dir)
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n, self.d)
+
+    @property
+    def nbytes(self) -> int:
+        return self.n * self.d * self.dtype.itemsize
+
+    def _shard(self, s: int) -> np.ndarray:
+        m = self._maps[s]
+        if m is None:
+            path = os.path.join(self.dir, f"shard_{s:05d}.npy")
+            m = np.load(path, mmap_mode="r")
+            self._maps[s] = m
+        return m
+
+    def gather(self, rows: np.ndarray) -> np.ndarray:
+        """Gather arbitrary rows into a fresh in-RAM array.  Rows are
+        grouped per shard (one fancy-index per touched shard) so a
+        window gather does a handful of sequential-ish mmap reads
+        instead of `len(rows)` random ones."""
+        rows = np.asarray(rows, np.int64).ravel()
+        out = np.empty((len(rows), self.d), self.dtype)
+        order = np.argsort(rows, kind="stable")
+        sr = rows[order]
+        sid = sr // self.rows_per_shard
+        bounds = np.searchsorted(sid, np.arange(self.n_shards + 1))
+        for s in range(self.n_shards):
+            lo, hi = bounds[s], bounds[s + 1]
+            if lo == hi:
+                continue
+            out[order[lo:hi]] = \
+                self._shard(s)[sr[lo:hi] - s * self.rows_per_shard]
+        return out
+
+    def __getitem__(self, rows) -> np.ndarray:
+        return self.gather(rows)
+
+    def __len__(self) -> int:
+        return self.n
+
+
+class ArrayFeatures:
+    """In-RAM feature array wrapped as a streaming source.
+
+    Numerically a no-op — gathers hit the underlying ndarray — but its
+    presence tells `stage_data` to stage windows instead of device-putting
+    the whole block, which is what the streaming-vs-resident parity tests
+    and the CI streaming smoke run on (identical bytes, windowed path)."""
+
+    def __init__(self, X: np.ndarray):
+        self.X = np.asarray(X)
+
+    @property
+    def shape(self):
+        return self.X.shape
+
+    @property
+    def dtype(self):
+        return self.X.dtype
+
+    @property
+    def nbytes(self):
+        return self.X.nbytes
+
+    def gather(self, rows) -> np.ndarray:
+        return self.X[np.asarray(rows, np.int64)]
+
+    __getitem__ = gather
+
+    def __len__(self):
+        return self.X.shape[0]
+
+
+class Permuted:
+    """Row-permutation view over another source: ``self[rows] ==
+    base[perm[rows]]``.  Applies the PSI alignment (and the train-split
+    permutation) without physically reordering shards on disk."""
+
+    def __init__(self, base, perm: np.ndarray):
+        self.base = base
+        self.perm = np.asarray(perm, np.int64)
+
+    @property
+    def shape(self):
+        return (len(self.perm), self.base.shape[1])
+
+    @property
+    def dtype(self):
+        return self.base.dtype
+
+    @property
+    def nbytes(self):
+        return len(self.perm) * self.base.shape[1] * \
+            np.dtype(self.base.dtype).itemsize
+
+    def gather(self, rows) -> np.ndarray:
+        rows = np.asarray(rows, np.int64)
+        base = self.base
+        sub = self.perm[rows]
+        return base.gather(sub) if hasattr(base, "gather") else base[sub]
+
+    __getitem__ = gather
+
+    def __len__(self):
+        return len(self.perm)
+
+
+def write_array_shards(party_dir: str, X: np.ndarray, *,
+                       rows_per_shard: int = DEFAULT_ROWS_PER_SHARD
+                       ) -> ShardStore:
+    """Shard an in-RAM array (test helper / small-data migration)."""
+    w = ShardWriter(party_dir, X.shape[1], rows_per_shard=rows_per_shard,
+                    dtype=X.dtype)
+    for lo in range(0, len(X), rows_per_shard):
+        w.append(X[lo:lo + rows_per_shard])
+    w.close()
+    return ShardStore.open(party_dir)

@@ -15,8 +15,10 @@ features on gaussian class centroids + redundant linear mixtures + noise.
 """
 from __future__ import annotations
 
+import json
+import os
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Iterator, Optional, Tuple
 
 import numpy as np
 
@@ -107,3 +109,147 @@ def load(name: str, *, seed: int = 0, scale: float = 1.0) -> Dataset:
 
 
 DATASETS = ["energy", "blog", "bank", "credit", "synthetic"]
+
+# base (n, d, task) of each generator before `scale` — lets the streaming
+# path size budgets and shard layouts without materializing anything
+_SHAPES = {
+    "energy":    (19_735, 27, "regression"),
+    "blog":      (60_021, 280, "regression"),
+    "bank":      (40_787, 48, "classification"),
+    "credit":    (30_000, 23, "classification"),
+    "synthetic": (1_000_000, 500, "classification"),
+    "criteo":    (4_500_000, 39, "classification"),
+}
+
+# classification generator params (n_informative, class_sep, flip_y),
+# shared by `load` above and the chunked generator below
+_CLS_PARAMS = {
+    "bank": (16, 1.4, 0.01),
+    "credit": (10, 1.0, 0.01),
+    "synthetic": (40, 1.2, 0.01),
+    "criteo": (20, 0.8, 0.1),
+}
+
+
+def shape_of(name: str, scale: float = 1.0) -> Tuple[int, int, str]:
+    """(n_samples, n_features, task) of `load(name, scale=scale)` without
+    generating any data."""
+    n, d, task = _SHAPES[name.lower()]
+    return max(64, int(n * scale)), d, task
+
+
+def iter_classification_chunks(name: str, n: int, *, seed: int,
+                               chunk_rows: int = 131_072
+                               ) -> Iterator[Tuple[int, np.ndarray,
+                                                   np.ndarray]]:
+    """Yield (row_offset, X_chunk float32, y_chunk int64) blocks of a
+    classification dataset, never holding more than one chunk.
+
+    The class centroids, redundant mixture and column permutation are
+    drawn once from the base seed; per-chunk sample draws come from a
+    SeedSequence spawned on (seed, chunk_index), so the stream is
+    deterministic for a given (name, n, seed, chunk_rows) and any chunk
+    can in principle be regenerated independently.  Note this is a
+    *different* (chunk-invariant, memory-bounded) draw order than the
+    resident `load()` — the streaming shards back a distinct dataset
+    instance, not a re-encoding of the resident one."""
+    name = name.lower()
+    if name not in _CLS_PARAMS:
+        raise ValueError(f"chunked generation supports classification "
+                         f"datasets {sorted(_CLS_PARAMS)}, not {name!r}")
+    n_informative, class_sep, flip_y = _CLS_PARAMS[name]
+    d = _SHAPES[name][1]
+    rng0 = np.random.default_rng(seed)
+    n_redundant = max(0, min(d - n_informative, n_informative))
+    n_noise = d - n_informative - n_redundant
+    centroids = rng0.normal(size=(2, n_informative)) * class_sep
+    A = rng0.normal(size=(n_informative, n_redundant))
+    col_perm = rng0.permutation(d)
+    for ci, lo in enumerate(range(0, n, chunk_rows)):
+        k = min(chunk_rows, n - lo)
+        rng = np.random.default_rng(np.random.SeedSequence((seed, ci)))
+        y = rng.integers(0, 2, size=k)
+        Xi = centroids[y] + rng.normal(size=(k, n_informative))
+        Xr = Xi @ A / np.sqrt(n_informative)
+        Xn = rng.normal(size=(k, n_noise))
+        X = np.concatenate([Xi, Xr, Xn], axis=1)[:, col_perm]
+        flip = rng.random(k) < flip_y
+        y = np.where(flip, 1 - y, y)
+        yield lo, X.astype(np.float32), y.astype(np.int64)
+
+
+def write_sharded(name: str, root: str, *, seed: int = 0,
+                  scale: float = 1.0, chunk_rows: int = 131_072,
+                  passive_frac: float = 0.5,
+                  n_features_active: Optional[int] = None,
+                  train_frac: float = 0.7,
+                  rows_per_shard: int = 262_144) -> dict:
+    """Generate a dataset chunk-by-chunk straight into per-party shard
+    directories (`<root>/active`, `<root>/passive`) without ever
+    materializing the full (n, d) array.
+
+    Columns are split with the same `split_columns` logic (same seed
+    semantics) as the resident `vertical_split`; labels and the
+    train/test ID permutation stay resident as small (n,) arrays
+    (`y.npy`, `ids_train.npy`, `ids_test.npy`).  Re-invocation with
+    identical parameters is a no-op (the existing `meta.json` is
+    reused).  Returns the root meta dict."""
+    from repro.data.vertical import split_columns  # local: avoid cycle
+
+    n, d, task = shape_of(name, scale)
+    meta_path = os.path.join(root, "meta.json")
+    params = {"name": name.lower(), "n": n, "d": d, "task": task,
+              "seed": seed, "scale": scale, "chunk_rows": chunk_rows,
+              "passive_frac": passive_frac,
+              "n_features_active": n_features_active,
+              "train_frac": train_frac,
+              "rows_per_shard": rows_per_shard, "version": 1}
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            existing = json.load(f)
+        if {k: existing.get(k) for k in params} == params:
+            return existing
+    cols_a, cols_p = split_columns(d, passive_frac=passive_frac,
+                                   seed=seed,
+                                   n_features_active=n_features_active)
+    os.makedirs(root, exist_ok=True)
+    from repro.data.shards import ShardWriter  # local: avoid cycle
+    wa = ShardWriter(os.path.join(root, "active"), len(cols_a),
+                     rows_per_shard=rows_per_shard)
+    wp = ShardWriter(os.path.join(root, "passive"), len(cols_p),
+                     rows_per_shard=rows_per_shard)
+    y_full = np.empty(n, np.int64)
+    for lo, X, y in iter_classification_chunks(name, n, seed=seed,
+                                               chunk_rows=chunk_rows):
+        wa.append(X[:, cols_a])
+        wp.append(X[:, cols_p])
+        y_full[lo:lo + len(y)] = y
+    wa.close()
+    wp.close()
+    # same train/test convention as Dataset.split: one permutation, the
+    # first `train_frac` slice trains, the remainder evaluates
+    perm = np.random.default_rng(seed).permutation(n)
+    k = int(n * train_frac)
+    np.save(os.path.join(root, "y.npy"), y_full)
+    np.save(os.path.join(root, "ids_train.npy"), perm[:k].astype(np.int64))
+    np.save(os.path.join(root, "ids_test.npy"), perm[k:].astype(np.int64))
+    meta = dict(params, cols_active=[int(c) for c in cols_a],
+                cols_passive=[int(c) for c in cols_p],
+                n_train=k, n_test=n - k)
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    return meta
+
+
+def open_sharded(root: str):
+    """(meta, active_store, passive_store, y, ids_train, ids_test) for a
+    `write_sharded` root."""
+    from repro.data.shards import ShardStore  # local: avoid cycle
+    with open(os.path.join(root, "meta.json")) as f:
+        meta = json.load(f)
+    return (meta,
+            ShardStore.open(os.path.join(root, "active")),
+            ShardStore.open(os.path.join(root, "passive")),
+            np.load(os.path.join(root, "y.npy")),
+            np.load(os.path.join(root, "ids_train.npy")),
+            np.load(os.path.join(root, "ids_test.npy")))

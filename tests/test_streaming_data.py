@@ -1,0 +1,240 @@
+"""Streaming data path: chunked PSI parity, the shard store, and
+bit-for-bit streaming-vs-resident training equality (ISSUE 6).
+
+The contract under test is exactness, not approximation: the windowed
+double-buffered path must replay the SAME batches in the SAME order with
+the SAME DP noise as the all-at-once resident path, so every comparison
+here is `==` / `assert_array_equal`, never allclose.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import ExperimentConfig, Session
+from repro.checkpoint.store import restore_state, save_state
+from repro.data.shards import (ArrayFeatures, Permuted, ShardStore,
+                               is_feature_source, write_array_shards)
+from repro.data.vertical import _hash_ids, psi_intersect
+from repro.data.synthetic import (iter_classification_chunks, open_sharded,
+                                  shape_of, write_sharded)
+
+BASE = dict(method="pubsub", dataset="credit", scale=0.05, n_epochs=2,
+            batch_size=64, w_a=4, w_p=4, dp_mu=0.5)
+
+STREAM = dict(stream=True, stream_backing="wrap")
+
+
+# ---------------------------------------------------------------------------
+# satellite: vectorized `_hash_ids` pins the legacy per-row digests
+# ---------------------------------------------------------------------------
+# sha256(b"psi-session" + id.to_bytes(8, "little"))[:32], computed by the
+# pre-vectorization per-row `hashlib` loop — frozen so any change to the
+# chunked path that would re-align PSI differently fails loudly
+PINNED = {
+    0: "923439833606276c110ad2dbc0a041bf",
+    1: "5a8c6a1f229745c3a4384427f37be851",
+    2: "e3779b3c65a4d82f154917873f3ca9e7",
+    5: "e162a597103bb1218d35bfdc976acadf",
+    1099511627776: "c63b1b02c004806c9e844a09410f4f2a",
+    123456789: "ecb32a25a2c43004b124421800eea966",
+}
+
+
+def _legacy_digests(ids, salt=b"psi-session"):
+    return np.array([hashlib.sha256(
+        salt + int(i).to_bytes(8, "little", signed=True)
+    ).hexdigest()[:32] for i in np.asarray(ids)])
+
+
+def test_hash_ids_pins_legacy_digests():
+    ids = np.array(sorted(PINNED), dtype=np.int64)
+    got = _hash_ids(ids, b"psi-session")
+    assert list(got) == [PINNED[int(i)] for i in ids]
+    np.testing.assert_array_equal(got, _legacy_digests(ids))
+
+
+def test_hash_ids_chunking_invariant():
+    ids = np.arange(1000, dtype=np.int64) * 7 + 3
+    ref = _hash_ids(ids, b"psi-session")
+    for chunk in (1, 3, 257, 4096):
+        np.testing.assert_array_equal(
+            _hash_ids(ids, b"psi-session", chunk=chunk), ref)
+    np.testing.assert_array_equal(ref, _legacy_digests(ids))
+
+
+def test_psi_intersect_matches_legacy_intersect1d():
+    rng = np.random.default_rng(7)
+    ids_a = rng.choice(5000, size=900, replace=False).astype(np.int64)
+    ids_p = rng.choice(5000, size=1100, replace=False).astype(np.int64)
+    ia, ip = psi_intersect(ids_a, ids_p, chunk=257)
+    # the pre-streaming implementation: per-row digests + np.intersect1d
+    da, dp_ = _legacy_digests(ids_a), _legacy_digests(ids_p)
+    _, ref_a, ref_p = np.intersect1d(da, dp_, return_indices=True,
+                                     assume_unique=True)
+    np.testing.assert_array_equal(ia, ref_a)
+    np.testing.assert_array_equal(ip, ref_p)
+    np.testing.assert_array_equal(ids_a[ia], ids_p[ip])
+
+
+# ---------------------------------------------------------------------------
+# shard store
+# ---------------------------------------------------------------------------
+def test_shard_store_roundtrip_and_views(tmp_path):
+    X = np.random.default_rng(0).normal(size=(1000, 7)).astype(np.float32)
+    write_array_shards(str(tmp_path / "party"), X, rows_per_shard=128)
+    store = ShardStore.open(str(tmp_path / "party"))
+    assert store.shape == X.shape and is_feature_source(store)
+    rows = np.array([0, 999, 128, 127, 5, 5, 640])
+    np.testing.assert_array_equal(store.gather(rows), X[rows])
+    np.testing.assert_array_equal(store[rows], X[rows])
+    perm = np.random.default_rng(1).permutation(1000)
+    view = Permuted(store, perm)
+    assert is_feature_source(view) and view.shape == X.shape
+    np.testing.assert_array_equal(view[rows], X[perm[rows]])
+    wrapped = ArrayFeatures(X)
+    assert is_feature_source(wrapped)
+    np.testing.assert_array_equal(wrapped[rows], X[rows])
+    assert not is_feature_source(X)
+
+
+def test_sharded_generator_deterministic_and_idempotent(tmp_path):
+    root = str(tmp_path / "credit")
+    write_sharded("credit", root, seed=3, scale=0.01, chunk_rows=100,
+                  rows_per_shard=64)
+    meta, sa, sp, y, ids_tr, ids_te = open_sharded(root)
+    n, d, task = shape_of("credit", 0.01)
+    assert (meta["n"], meta["d"], meta["task"]) == (n, d, task)
+    assert sa.shape[0] == sp.shape[0] == n == len(y)
+    assert sa.shape[1] + sp.shape[1] == d
+    assert sorted(np.concatenate([ids_tr, ids_te])) == list(range(n))
+    # chunk stream is deterministic and matches what landed on disk
+    Xs, ys = [], []
+    for _, Xc, yc in iter_classification_chunks("credit", n, seed=3,
+                                                chunk_rows=100):
+        Xs.append(Xc)
+        ys.append(yc)
+    X = np.concatenate(Xs)
+    np.testing.assert_array_equal(np.concatenate(ys), y)
+    full = np.concatenate([sa[np.arange(n)], sp[np.arange(n)]], axis=1)
+    np.testing.assert_array_equal(np.sort(full, axis=1),
+                                  np.sort(X, axis=1))  # column split perm
+    # second call with identical params is a no-op (meta matches)
+    before = os.path.getmtime(os.path.join(root, "active", "meta.json"))
+    write_sharded("credit", root, seed=3, scale=0.01, chunk_rows=100,
+                  rows_per_shard=64)
+    assert os.path.getmtime(
+        os.path.join(root, "active", "meta.json")) == before
+
+
+# ---------------------------------------------------------------------------
+# streaming-vs-resident training parity (bit-for-bit, DP included)
+# ---------------------------------------------------------------------------
+_RESIDENT = {}
+
+
+def _resident(method):
+    if method not in _RESIDENT:
+        _RESIDENT[method] = Session(
+            ExperimentConfig(**{**BASE, "method": method})).run()
+    return _RESIDENT[method]
+
+
+@pytest.mark.parametrize("method", ["pubsub", "vfl_ps"])
+@pytest.mark.parametrize("wb", [2, 3])   # 3 does not divide the windows
+def test_streaming_bitwise_parity(method, wb):
+    r0 = _resident(method)
+    r1 = Session(ExperimentConfig(
+        **{**BASE, "method": method}, **STREAM,
+        stream_window_batches=wb)).run()
+    assert r1.train.losses == r0.train.losses
+    assert r1.train.history == r0.train.history
+    assert r1.train.final_metric == r0.train.final_metric
+    assert r0.data_path is None
+    stats = r1.data_path
+    assert stats is not None and stats["backing"] == "wrap"
+    assert all(w >= 2 for w in stats["windows_per_epoch"])
+    assert stats["peak_staged_bytes"] <= stats["bytes_staged"]
+
+
+def test_mid_epoch_window_checkpoint_resume_bitwise(tmp_path):
+    import jax
+
+    cfg = ExperimentConfig(**BASE, **STREAM, stream_window_batches=4)
+    sess = Session(cfg)
+    eng = sess.compile().engine
+    t = sess._make_trainer(*sess._resolve_point(None, None, None))
+    data = eng.stage_data(t.Xa, t.Xp, t.y,
+                          window_batches=t.stream_window_batches)
+    assert len(data.stats["windows_per_epoch"]) == cfg.n_epochs
+    hy = t.hyper()
+
+    ref = eng.init_state(t.theta_a, t.opt_a, t.theta_p, t.opt_p,
+                         t.d_emb, seed=0)
+    for e in range(cfg.n_epochs):
+        ref = eng.run_epoch(ref, e, data, hy)
+
+    st = eng.init_state(t.theta_a, t.opt_a, t.theta_p, t.opt_p,
+                        t.d_emb, seed=0)
+    st = eng.run_epoch(st, 0, data, hy, max_windows=1)
+    assert (int(st.epoch), int(st.window)) == (0, 1)
+    path = str(tmp_path / "mid_window.msgpack")
+    save_state(path, st, step=0)
+    st = eng.load_state(restore_state(path))
+    assert int(st.window) == 1            # resumes inside epoch 0
+    st = eng.run_epoch(st, 0, data, hy)   # finishes the epoch
+    assert (int(st.epoch), int(st.window)) == (1, 0)
+    for e in range(1, cfg.n_epochs):
+        st = eng.run_epoch(st, e, data, hy)
+    for a, b in zip(jax.tree.leaves(ref.carry), jax.tree.leaves(st.carry)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # pre-streaming 10-field payloads (no `window`) still load
+    legacy = tuple(list(ref)[:10])
+    assert int(eng.load_state(legacy).window) == 0
+
+
+def test_resident_fallthrough_and_budget_window():
+    # a generous budget on a tiny dataset: resident path, no streaming
+    sess = Session(ExperimentConfig(**BASE, data_budget_mb=1024.0))
+    assert not sess._streaming()
+    assert sess.window_batches() is None
+    assert not sess.prepare().streaming
+    # forced streaming with a budget: window sized from it, and the
+    # staged high-water mark (two windows in flight) stays under it
+    budget_mb = 0.75
+    r = Session(ExperimentConfig(**BASE, **STREAM,
+                                 data_budget_mb=budget_mb)).run()
+    stats = r.data_path
+    assert stats["budget_mb"] == budget_mb
+    assert stats["peak_staged_bytes"] <= budget_mb * 1e6
+    assert r.train.losses == _resident("pubsub").train.losses
+
+
+def test_event_engine_accepts_feature_sources():
+    cfg = ExperimentConfig(**{**BASE, "n_epochs": 1, "scale": 0.02,
+                              "dp_mu": float("inf")}, engine="event")
+    r0 = Session(cfg).run()
+    r1 = Session(ExperimentConfig(
+        **{**BASE, "n_epochs": 1, "scale": 0.02, "dp_mu": float("inf")},
+        engine="event", **STREAM)).run()
+    assert r1.train.losses == r0.train.losses
+    assert r1.train.final_metric == r0.train.final_metric
+
+
+def test_shards_backing_end_to_end(tmp_path):
+    cfg = ExperimentConfig(method="pubsub", dataset="credit", scale=0.01,
+                           n_epochs=1, batch_size=32, w_a=2, w_p=2,
+                           stream=True, stream_backing="shards",
+                           shard_dir=str(tmp_path), stream_chunk_rows=100)
+    sess = Session(cfg)
+    prep = sess.prepare()
+    assert prep.streaming and prep.backing == "shards"
+    assert is_feature_source(prep.train_active.X)
+    assert not is_feature_source(prep.test_active.X)   # eval is resident
+    r = sess.run()
+    assert np.isfinite(r.train.final_metric)
+    assert r.data_path["backing"] == "shards"
+    assert r.data_path["rows_staged"] > 0
