@@ -31,6 +31,18 @@ tracing; warm points reuse the cached program and pay only model init +
 the training scans.  Emitted as `replay/sweep_*` rows and the
 `sweep_reuse` record so the amortization win is tracked across PRs.
 
+A fourth **mesh replay** section measures the replica-sharded engine
+(`Session(cfg, n_devices=n)`) across forced host device counts {1, 2, 4}
+and B in {32, 256}: steady-state epoch wall clock, the schedule's
+executed-lane occupancy (work-row based, so invariant under the lane
+relabelling — it is reported to pin exactly that), and
+the compiled collective counts of the epoch scan program and the
+aggregation kernel (the design's "psum count" — aggregation is the only
+*semantic* cross-device exchange; anything else is partitioner
+plumbing).  Each point runs in a fresh subprocess because
+``--xla_force_host_platform_device_count`` must be set before jax
+imports.  Emitted as `replay/mesh_*` rows and the `replay_mesh` record.
+
 Emits the harness CSV on stdout plus a machine-readable
 `BENCH_replay.json` in the working directory.
 
@@ -40,6 +52,9 @@ REPRO_BENCH_EPOCHS (default 5).
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 import time
 
 from repro.core.cost_model import PartyProfile, SystemProfile
@@ -56,6 +71,12 @@ PACKS = ("dense", "packed", "segmented")
 # section: at larger pools the 4-point carry outgrows this box's cache
 # and the stacking win drowns in DRAM traffic — w=8/10 measured ~1.0x)
 SWEEP_STACKED_WORKERS = (4, 4)
+
+# mesh replay sweep: forced host device counts x batch sizes; 6 workers
+# so every count exercises padded lanes (6-on-2 and 6-on-4 both pad)
+MESH_DEVICES = (1, 2, 4)
+MESH_BATCHES = (32, 256)
+MESH_WORKERS = (6, 6)
 
 
 def _build(method: str = "pubsub", batch_size: int = 256):
@@ -278,6 +299,93 @@ def _sweep_stacked(record: dict) -> None:
          f"stacked_groups={st.stats['stacked_groups']}")
 
 
+def _mesh_point(payload: dict) -> dict:
+    """Worker body for one (device_count, B) mesh measurement.  Runs in
+    a fresh process whose XLA_FLAGS already force the device count (the
+    flag must precede the jax import, so `_mesh` re-invokes this module
+    per point instead of looping in-process)."""
+    from repro.api import ExperimentConfig, Session
+    from repro.core import jit_pipeline as jp
+    from repro.core import mesh_replay
+
+    n, B = payload["n_devices"], payload["B"]
+    cfg = ExperimentConfig(
+        method="pubsub", dataset="synthetic",
+        scale=max(SCALE * 0.4, 0.004), n_epochs=EPOCHS, batch_size=B,
+        w_a=MESH_WORKERS[0], w_p=MESH_WORKERS[1], seed=SEED)
+    sess = Session(cfg, n_devices=n)
+    t0 = time.perf_counter()
+    sess.run(eval_every_epoch=False)             # compile + cold epochs
+    cold_s = time.perf_counter() - t0
+    best = None
+    for _ in range(2):                           # warm: cached program
+        t0 = time.perf_counter()
+        sess.run(eval_every_epoch=False)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+
+    # collective counts from the compiled HLO of (a) epoch 0's scan
+    # program and (b) the aggregation kernel — the latter is the only
+    # semantic cross-device exchange in the design
+    eng = sess.compile().engine
+    trainer = sess._make_trainer(*sess._resolve_point(None, None, None))
+    data = eng.stage_data(trainer.Xa, trainer.Xp, trainer.y)
+    st = eng.init_state(trainer.theta_a, trainer.opt_a, trainer.theta_p,
+                        trainer.opt_p, trainer.d_emb, seed=SEED)
+    carry = jp.TrainerState(*st).carry
+    ta, _, tp, _ = carry[0], carry[1], carry[2], carry[3]
+    runner = jp._get_segmented_runner(eng.spec, eng._opt_builder,
+                                      eng._opt_key, eng._structures[0])
+    scan_hlo = runner.lower(carry, eng._seg_xs[0], data,
+                            eng.hyper).compile().as_text()
+    agg_hlo = eng._agg_both.lower(ta, tp).compile().as_text()
+    return {"n_devices": n, "B": B, "epoch_s": best / EPOCHS,
+            "cold_s": cold_s, "occupancy": eng.schedule.lane_occupancy(),
+            "scan_collectives": mesh_replay.count_collectives(scan_hlo),
+            "agg_collectives": mesh_replay.count_collectives(agg_hlo)}
+
+
+def _mesh(record: dict) -> None:
+    """Mesh-replay sweep: devices x batch sizes, one subprocess each."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    rows = []
+    for n in MESH_DEVICES:
+        for B in MESH_BATCHES:
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_"
+                                f"count={n}")
+            env.setdefault("JAX_PLATFORMS", "cpu")
+            env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep +
+                                 env.get("PYTHONPATH", ""))
+            proc = subprocess.run(
+                [sys.executable, "-m", "benchmarks.replay_throughput",
+                 "--mesh-point",
+                 json.dumps({"n_devices": n, "B": B})],
+                capture_output=True, text=True, env=env, cwd=root,
+                timeout=3600)
+            if proc.returncode != 0:
+                raise RuntimeError(
+                    f"mesh point d{n} b{B} failed:\n{proc.stdout}\n"
+                    f"{proc.stderr}")
+            line = [l for l in proc.stdout.splitlines()
+                    if l.startswith("MESH:")][-1]
+            rows.append(json.loads(line[len("MESH:"):]))
+    base = {r["B"]: r["epoch_s"] for r in rows if r["n_devices"] == 1}
+    for r in rows:
+        r["vs_1dev_x"] = base[r["B"]] / r["epoch_s"]
+        agg_ar = r["agg_collectives"]["all-reduce"]
+        emit(f"replay/mesh_d{r['n_devices']}_b{r['B']}",
+             r["epoch_s"] * 1e6,
+             f"vs_1dev_x={r['vs_1dev_x']:.2f};"
+             f"occupancy={r['occupancy']:.3f};"
+             f"agg_all_reduce={agg_ar};"
+             f"scan_all_reduce={r['scan_collectives']['all-reduce']}")
+    record["replay_mesh"] = {
+        "method": "pubsub", "pack": "segmented",
+        "w_a": MESH_WORKERS[0], "w_p": MESH_WORKERS[1],
+        "n_epochs": EPOCHS, "rows": rows}
+
+
 def run() -> None:
     cfg, sim, mk = _build()
     n_events = len(sim.events)
@@ -327,12 +435,16 @@ def run() -> None:
     _micro(record, best, res, mk, sim)
     _sweep_reuse(record)
     _sweep_stacked(record)
+    _mesh(record)
 
     with open("BENCH_replay.json", "w") as fh:
         json.dump(record, fh, indent=2)
 
 
 if __name__ == "__main__":
+    if len(sys.argv) > 2 and sys.argv[1] == "--mesh-point":
+        print("MESH:" + json.dumps(_mesh_point(json.loads(sys.argv[2]))))
+        sys.exit(0)
     from benchmarks.common import emit_header
     emit_header()
     run()

@@ -93,7 +93,11 @@ class MetricStream:
 class CheckpointEvery:
     """Save the replay state every `every` epochs via
     `checkpoint.store.save_state`; resume with
-    `Session.run(state=engine.load_state(restore_state(path)))`."""
+    `Session.run(state=engine.load_state(restore_state(path)))`.
+    The state is canonicalized through `engine.export_state` first, so a
+    checkpoint written by a mesh-sharded run (`n_devices=4`) restores on
+    any device count — the on-disk layout is always the unpermuted,
+    unpadded replica order."""
     path: str
     every: int = 1
 
@@ -101,7 +105,8 @@ class CheckpointEvery:
         if ctx.epoch % self.every == 0 or ctx.epoch == ctx.n_epochs:
             # deferred so `repro.api` imports without msgpack installed
             from repro.checkpoint.store import save_state
-            save_state(self.path, ctx.state, step=ctx.epoch)
+            save_state(self.path, ctx.state, step=ctx.epoch,
+                       engine=ctx.engine)
 
 
 @dataclass

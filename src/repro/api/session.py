@@ -46,6 +46,7 @@ mid-training state.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import os
 import tempfile
@@ -94,6 +95,10 @@ class ExperimentConfig:
     disable_planner: bool = False    # fixed equal workers (w/o DP algo)
     engine: str = "compiled"         # replay engine: "compiled" | "event"
     pack: str = "segmented"          # lane layout: "segmented"|"packed"|"dense"
+    n_devices: int = 1               # lay the replica/point axes over a
+                                     # 1-D ("replica",) device mesh
+                                     # (compiled engine, pack != "dense";
+                                     # 1 = today's single-device path)
     t_ddl: float = 10.0
     dt0: int = 5
     p: int = 5
@@ -242,10 +247,16 @@ class Session:
     session; `compile()` additionally consults the process-wide program
     cache (see module docstring for the reuse scopes)."""
 
-    def __init__(self, cfg: ExperimentConfig, *, reuse: str = "exact"):
+    def __init__(self, cfg: ExperimentConfig, *, reuse: str = "exact",
+                 n_devices: Optional[int] = None):
         if reuse not in ("exact", "structural"):
             raise ValueError(f"reuse {reuse!r} not in ('exact', "
                              f"'structural')")
+        if n_devices is not None:
+            cfg = dataclasses.replace(cfg, n_devices=int(n_devices))
+        if cfg.n_devices > 1 and cfg.engine != "compiled":
+            raise ValueError("n_devices > 1 requires engine='compiled' "
+                             f"(got engine={cfg.engine!r})")
         self.cfg = cfg
         self.reuse = reuse
         self._prepared: Optional[Prepared] = None
@@ -441,6 +452,7 @@ class Session:
             ("ablate", (cfg.disable_deadline, cfg.disable_semi_async)),
             ("model", (cfg.resnet, cfg.depth)),
             ("dp", self._dp_on()),
+            ("devices", cfg.n_devices),
         )
 
     def compile_key(self) -> tuple:
@@ -484,7 +496,8 @@ class Session:
                 disable_semi_async=cfg.disable_semi_async, pack=cfg.pack)
             engine: ReplayEngine = CompiledReplayEngine(
                 schedule, task=prep.task, resnet=cfg.resnet, clip=clip0,
-                sigma=sigma0, lr=cfg.lr, seed=cfg.seed)
+                sigma=sigma0, lr=cfg.lr, seed=cfg.seed,
+                n_devices=cfg.n_devices)
         else:
             engine = EventReplayEngine(
                 pl.run_cfg, sim.events, n_rep_a=pl.n_rep_a,

@@ -110,8 +110,16 @@ def _run_group_stacked(group: List[tuple], *, eval_every_epoch: bool,
     n_epochs = group[0][1].n_epochs
 
     points = [sess._resolve_point(None, None, None) for sess in sessions]
-    chunk = _default_chunk(len(group)) if stack_chunk is None \
-        else max(1, stack_chunk)
+    n_dev = getattr(engine, "n_devices", 1)
+    if stack_chunk is not None:
+        chunk = max(1, stack_chunk)
+    elif n_dev > 1:
+        # mesh engine: the whole group runs as ONE device-sharded
+        # program — the point axis lays over the mesh, replacing the
+        # core-bounded thread pool (api.session `n_devices=` knob)
+        chunk = len(group)
+    else:
+        chunk = _default_chunk(len(group))
     spans = [range(lo, min(lo + chunk, len(group)))
              for lo in range(0, len(group), chunk)]
 
@@ -141,11 +149,19 @@ def _run_group_stacked(group: List[tuple], *, eval_every_epoch: bool,
                 engine, eval_every_epoch=eval_every_epoch,
                 seed=points[i][0])
             return
-        data = engine.stage_data_stacked([(t.Xa, t.Xp, t.y) for t in ts])
+        # mesh-stacked groups must hold a device multiple of points:
+        # pad by repeating the last point — its lanes are redundant
+        # compute, never read back (unstacking below walks `span` only)
+        pad = (-len(span)) % max(n_dev, 1)
+        ts_run = ts + [ts[-1]] * pad
+        seeds = [points[i][0] for i in span] + \
+            [points[span[-1]][0]] * pad
+        data = engine.stage_data_stacked([(t.Xa, t.Xp, t.y)
+                                          for t in ts_run])
         state = engine.init_state_stacked(
-            [(t.theta_a, t.opt_a, t.theta_p, t.opt_p) for t in ts],
-            ts[0].d_emb, seeds=[points[i][0] for i in span])
-        hyper = {k: [t.hyper()[k] for t in ts]
+            [(t.theta_a, t.opt_a, t.theta_p, t.opt_p) for t in ts_run],
+            ts[0].d_emb, seeds=seeds)
+        hyper = {k: [t.hyper()[k] for t in ts_run]
                  for k in ("lr", "clip", "sigma")}
         for e in range(n_epochs):
             state = engine.run_epoch_stacked(state, e, data, hyper)

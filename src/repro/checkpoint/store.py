@@ -98,13 +98,23 @@ def _decode(node):
     return node
 
 
-def save_state(path: str, state: Any, *, step: Optional[int] = None
-               ) -> None:
+def save_state(path: str, state: Any, *, step: Optional[int] = None,
+               engine: Any = None) -> None:
     """Checkpoint a nested pytree structurally (no `like` template needed
     to restore).  Array leaves keep dtype/shape; tuples (incl.
     NamedTuples) are tagged so `restore_state` rebuilds plain tuples.
     The walk is structural (not jax.tree), so dicts with mixed key
-    types survive."""
+    types survive.
+
+    When `engine` is given, the state is first canonicalized through
+    `engine.export_state` — for a mesh-sharded compiled engine this
+    strips padding lanes and undoes the slab lane permutation, so the
+    on-disk replica order is independent of the device count it was
+    written on.  A checkpoint saved on 4 devices then restores on 1 (or
+    any other count) via `engine.load_state(restore_state(path))`."""
+    exporter = getattr(engine, "export_state", None)
+    if exporter is not None:
+        state = exporter(state)
     payload = {"state": _encode(state), "step": step, "fmt": "state-v1"}
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)

@@ -94,6 +94,12 @@ class ReplayEngine(Protocol):
 
     def load_state(self, payload) -> Any: ...
 
+    def export_state(self, state) -> Any:
+        """Device-count-independent view of `state` for checkpointing:
+        canonical replica order, engine-private lane padding stripped.
+        Identity for engines without a device-lowered layout."""
+        ...
+
 
 def default_hyper(lr: float, clip: float, sigma: float) -> Dict:
     return {"lr": lr, "clip": clip, "sigma": sigma}
@@ -331,6 +337,10 @@ class EventReplayEngine:
         return EventState(ta, oa, tp, op_, version_p, a_steps,
                           loss_vec, cnt_vec, emb_buf, grad_buf,
                           key=key, epoch=epoch + 1)
+
+    def export_state(self, state: EventState) -> EventState:
+        """Identity — the event engine has no device-private layout."""
+        return state
 
     def params_mean(self, state: EventState) -> tuple:
         th_a = aggregate(state.theta_a) if self.n_rep_a > 1 \

@@ -73,16 +73,17 @@ from __future__ import annotations
 import math
 import time
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as _dc_replace
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mesh_replay
 from repro.core.channels import (slot_ring_init, slot_ring_read,
                                  slot_ring_write)
-from repro.core.schedule import CompiledSchedule
+from repro.core.schedule import CompiledSchedule, device_lower
 from repro.data.shards import is_feature_source
 from repro.core.xla_cache import enable_persistent_cache
 from repro.models import tabular
@@ -156,12 +157,26 @@ def pipelined_train(theta_a, theta_p, xa_steps, xp_steps, y_steps, *,
 # ===========================================================================
 # compiled replay engine
 # ===========================================================================
-def replica_mean(stack):
+def replica_mean(stack, perm: Optional[Tuple[int, ...]] = None):
     """PS aggregation over the stacked replica axis.
 
     Unrolled in the same left-to-right order as `semi_async.aggregate`
-    so the compiled and event engines agree bit-for-bit."""
+    so the compiled and event engines agree bit-for-bit.  Under a
+    device-lowered lane layout (`schedule.device_lower`) the real
+    replicas sit at permuted lanes with padding in between: `perm` lists
+    their lanes in ORIGINAL replica order, so the unrolled add chain —
+    and hence the float rounding — is identical to the single-device
+    program, and padding lanes never enter the mean."""
     def leaf(x):
+        if perm is not None:
+            # gather the real lanes into a contiguous stack FIRST, then
+            # run the exact perm=None chain on it.  Summing via
+            # per-element indexing of the padded stack instead is NOT
+            # safe on a mesh run: the partitioner/codegen contracts that
+            # chain differently over a lane-sharded operand (~1 ULP off
+            # the single-device rounding), while a gather followed by
+            # the canonical contiguous chain compiles bit-identically.
+            x = x[jnp.asarray(perm, jnp.int32)]
         n = x.shape[0]
         w = 1.0 / n
         acc = x[0] * w
@@ -171,10 +186,14 @@ def replica_mean(stack):
     return jax.tree.map(leaf, stack)
 
 
-def _broadcast_mean(stack):
-    """Aggregate + broadcast: every replica receives the averaged params."""
+def _broadcast_mean(stack, perm: Optional[Tuple[int, ...]] = None):
+    """Aggregate + broadcast: every replica receives the averaged params.
+    Padding lanes receive it too — they are inert (no work row ever
+    names them), so overwriting them is harmless and keeps the broadcast
+    a plain full-axis write."""
     return jax.tree.map(
-        lambda x: jnp.broadcast_to(replica_mean(x), x.shape).astype(x.dtype),
+        lambda x: jnp.broadcast_to(replica_mean(x, perm),
+                                   x.shape).astype(x.dtype),
         stack)
 
 
@@ -202,6 +221,11 @@ class EngineSpec:
     pack: str = "dense"
     flat_opt: bool = False    # fused flat optimizer update (segmented)
     scatter_drop: bool = False  # .at[].set(mode="drop") replica scatter
+    # device-lowered lane layouts only: real replicas' lanes in original
+    # replica order (None = identity, the single-device layout — so a
+    # divisible mesh run shares the single-device runner cache entry)
+    agg_perm_a: Optional[Tuple[int, ...]] = None
+    agg_perm_p: Optional[Tuple[int, ...]] = None
 
 
 class TrainerState(NamedTuple):
@@ -258,8 +282,28 @@ def _phase_ops(spec: EngineSpec):
     return p_backward, a_step, publish
 
 
+def _agg_fns(spec: EngineSpec, *, on_mesh: bool = False):
+    """The two aggregation branches, lane-permutation aware.
+
+    ``on_mesh=True`` forces the gather-first formulation even when no
+    lane permutation is attached (perm None): per-element indexing of a
+    lane-sharded stack lets the partitioner contract the mean chain
+    differently from the single-device program (~1 ULP), while a gather
+    into a contiguous stack followed by the canonical left-to-right
+    chain compiles bit-identically on both.  Lowered schedules always
+    carry a non-identity lane map these days (see `slab_plan`), so the
+    forcing is a backstop rather than the common path."""
+    pa, pp = spec.agg_perm_a, spec.agg_perm_p
+    if on_mesh:
+        pa = pa if pa is not None else tuple(range(spec.n_rep_a))
+        pp = pp if pp is not None else tuple(range(spec.n_rep_p))
+    return (lambda s: _broadcast_mean(s, pa),
+            lambda s: _broadcast_mean(s, pp))
+
+
 def _make_dense_tick(spec: EngineSpec):
     p_backward, a_step, publish = _phase_ops(spec)
+    bm_a, bm_p = _agg_fns(spec)
 
     def tick(carry, xs, data, opt, hyper):
         rows_tab, Xa, Xp, Y = data
@@ -329,10 +373,8 @@ def _make_dense_tick(spec: EngineSpec):
 
         # --- in-scan PS aggregation (vfl_ps round barriers) ---
         if spec.has_inscan_agg:
-            ta = jax.lax.cond(xs["agg_a"], _broadcast_mean,
-                              lambda s: s, ta)
-            tp = jax.lax.cond(xs["agg_p"], _broadcast_mean,
-                              lambda s: s, tp)
+            ta = jax.lax.cond(xs["agg_a"], bm_a, lambda s: s, ta)
+            tp = jax.lax.cond(xs["agg_p"], bm_p, lambda s: s, tp)
 
         return (ta, oa, tp, op_, ring_e, ring_g, loss_vec, cnt_vec, key)
 
@@ -347,6 +389,7 @@ def _make_packed_tick(spec: EngineSpec):
     Phase order (pb, pf, as) and all ring/aggregation semantics are
     identical to the dense tick."""
     p_backward, a_step, publish = _phase_ops(spec)
+    bm_a, bm_p = _agg_fns(spec)
 
     def tick(carry, xs, data, opt, hyper):
         rows_tab, Xa, Xp, Y = data
@@ -423,10 +466,8 @@ def _make_packed_tick(spec: EngineSpec):
 
         # --- in-scan PS aggregation (vfl_ps round barriers) ---
         if spec.has_inscan_agg:
-            ta = jax.lax.cond(xs["agg_a"], _broadcast_mean,
-                              lambda s: s, ta)
-            tp = jax.lax.cond(xs["agg_p"], _broadcast_mean,
-                              lambda s: s, tp)
+            ta = jax.lax.cond(xs["agg_a"], bm_a, lambda s: s, ta)
+            tp = jax.lax.cond(xs["agg_p"], bm_p, lambda s: s, tp)
 
         return (ta, oa, tp, op_, ring_e, ring_g, loss_vec, cnt_vec, key)
 
@@ -447,6 +488,7 @@ def _make_sig_tick(spec: EngineSpec, sig: Tuple[str, ...],
     identical to the packed tick; only runs that actually contain
     aggregation ticks (`has_agg`) keep the two in-scan agg conds."""
     p_backward, a_step, publish = _phase_ops(spec)
+    bm_a, bm_p = _agg_fns(spec)
 
     def tick(carry, xs, data, opt, hyper):
         rows_tab, Xa, Xp, Y = data
@@ -501,10 +543,8 @@ def _make_sig_tick(spec: EngineSpec, sig: Tuple[str, ...],
                 as_mask.astype(jnp.float32))
 
         if has_agg:
-            ta = jax.lax.cond(xs["agg_a"], _broadcast_mean,
-                              lambda s: s, ta)
-            tp = jax.lax.cond(xs["agg_p"], _broadcast_mean,
-                              lambda s: s, tp)
+            ta = jax.lax.cond(xs["agg_a"], bm_a, lambda s: s, ta)
+            tp = jax.lax.cond(xs["agg_p"], bm_p, lambda s: s, tp)
 
         return (ta, oa, tp, op_, ring_e, ring_g, loss_vec, cnt_vec, key)
 
@@ -580,6 +620,83 @@ def _get_runner(spec: EngineSpec, opt_builder, opt_key, *,
 
 
 # ---------------------------------------------------------------------------
+# mesh agg hoisting: split epoch scans at in-scan aggregation ticks
+# ---------------------------------------------------------------------------
+# In-scan aggregation cannot stay inside a mesh-lowered scan: the scan
+# carry forces a lane-sharded output on the agg branch, and XLA's
+# codegen of the mean under a forced output sharding rounds ~1 ULP off
+# the single-device chain (fusion/FMA decisions are layout-dependent).
+# Mesh engines therefore split each epoch into scan chunks at the agg
+# ticks and run the aggregation BETWEEN chunks through the same
+# free-output jitted path as the epoch-boundary agg (bit-exact), laying
+# the result back over the lanes with an exact device_put.  A plan is a
+# list of ("scan", structure_or_None, xs) and ("agg", do_a, do_p) items
+# whose concatenated tick sequence is exactly the unsplit epoch.
+
+
+def _hoist_chunk_pieces(pieces) -> list:
+    """Chunk plan for a chain of segmented run pieces — (sig, has_agg,
+    arrays) triples.  Agg flags are stripped from the scanned arrays;
+    slices keep their signature so the chained per-slice scans execute
+    the identical tick sequence."""
+    items: list = []
+    cur: list = []
+
+    def flush():
+        if cur:
+            structure = tuple((sig, False) for sig, _ in cur)
+            xs = tuple({k: jnp.asarray(v) for k, v in arrs.items()}
+                       for _, arrs in cur)
+            items.append(("scan", structure, xs))
+            cur.clear()
+
+    for sig, has_agg, raw in pieces:
+        arrs = {k: np.asarray(v) for k, v in raw.items()
+                if k not in ("agg_a", "agg_p")}
+        if not has_agg:
+            cur.append((sig, arrs))
+            continue
+        aa = np.asarray(raw["agg_a"])
+        ap = np.asarray(raw["agg_p"])
+        lo = 0
+        for t in (int(i) for i in np.nonzero(aa | ap)[0]):
+            cur.append((sig, {k: v[lo:t + 1] for k, v in arrs.items()}))
+            flush()
+            items.append(("agg", bool(aa[t]), bool(ap[t])))
+            lo = t + 1
+        if lo < int(aa.shape[0]):
+            cur.append((sig, {k: v[lo:] for k, v in arrs.items()}))
+    flush()
+    return items
+
+
+def _hoist_chunk_runs(runs) -> list:
+    """Chunk plan for one segmented epoch's run chain."""
+    return _hoist_chunk_pieces((r.sig, r.has_agg, r.arrays) for r in runs)
+
+
+def _hoist_chunk_flat(xs_row: Dict[str, np.ndarray]) -> list:
+    """Chunk plan for one packed epoch row.  Padding ticks stay in the
+    final chunk — they split the DP PRNG key, so dropping them would
+    break bit-parity with the unsplit scan."""
+    aa = np.asarray(xs_row.pop("agg_a"))
+    ap = np.asarray(xs_row.pop("agg_p"))
+    T = int(aa.shape[0])
+    items: list = []
+    lo = 0
+    for t in (int(i) for i in np.nonzero(aa | ap)[0]):
+        items.append(("scan", None,
+                      {k: jnp.asarray(v[lo:t + 1])
+                       for k, v in xs_row.items()}))
+        items.append(("agg", bool(aa[t]), bool(ap[t])))
+        lo = t + 1
+    if lo < T:
+        items.append(("scan", None,
+                      {k: jnp.asarray(v[lo:]) for k, v in xs_row.items()}))
+    return items
+
+
+# ---------------------------------------------------------------------------
 # point-stacking helpers: a structural sweep group's TrainerStates fused
 # into one state with a leading point axis (and back)
 # ---------------------------------------------------------------------------
@@ -624,6 +741,7 @@ class _Window(NamedTuple):
     xs: Any                      # device tick arrays (tuple of dicts | dict)
     bids: np.ndarray             # (cap,) int64 global batch ids (padded)
     n_bids: int                  # real (unpadded) batch-id count
+    plan: Optional[list] = None  # hoisted chunk plan (in-scan agg only)
 
 
 class WindowedData:
@@ -720,15 +838,35 @@ class CompiledReplayEngine:
     constructor's `clip`/`sigma`/`lr` only set the engine's *default*
     `hyper` values — they are runtime scalars of the jitted runners, so
     one engine instance (and one XLA program) serves every lr/dp_mu of a
-    sweep; only the DP structure (on/off, noise on/off) is compiled in."""
+    sweep; only the DP structure (on/off, noise on/off) is compiled in.
+
+    ``n_devices > 1`` (or an explicit ``mesh=``) lays the replica axis —
+    and the point axis of stacked sweeps — over a 1-D ``("replica",)``
+    mesh: the schedule is re-lowered through `schedule.device_lower`
+    (slab-balanced lane permutation + masked padding lanes when the
+    replica count doesn't divide), the carry's param/opt stacks get a
+    `NamedSharding` over their lane axis, and the SAME cached jitted
+    runners execute the partitioned program — GSPMD inserts the only
+    cross-device collectives (the aggregation psum at agg ticks, plus
+    ring exchange), bit-for-bit equal to the single-device path (see
+    `core.mesh_replay` and tests/test_mesh_replay.py)."""
 
     def __init__(self, schedule: CompiledSchedule, *, opt=None,
                  task: str, resnet: bool = False,
                  clip: float = math.inf, sigma: float = 0.0,
                  lr: float = 1e-3, use_pallas: Optional[bool] = None,
                  seed: int = 0, flat_opt: Optional[bool] = None,
-                 scatter_drop: bool = False):
+                 scatter_drop: bool = False, n_devices: int = 1,
+                 mesh=None):
         enable_persistent_cache()
+        if mesh is not None or int(n_devices) > 1:
+            self.mesh = mesh if mesh is not None \
+                else mesh_replay.make_replay_mesh(n_devices)
+            self.n_devices = int(self.mesh.devices.size)
+            schedule = device_lower(schedule, self.n_devices)
+        else:
+            self.mesh = None
+            self.n_devices = 1
         self.schedule = schedule
         if opt is not None:
             self.opt = opt
@@ -752,12 +890,26 @@ class CompiledReplayEngine:
             # as the parked flat carry layout), so it defaults on only
             # off-CPU; REPRO benchmarks A/B it via the explicit knob.
             flat_opt = schedule.pack == "segmented" and backend != "cpu"
+        perm_a = perm_p = None
+        if schedule.slab_a is not None and not schedule.slab_a.is_identity:
+            perm_a = schedule.slab_a.lane_of
+        if schedule.slab_p is not None and not schedule.slab_p.is_identity:
+            perm_p = schedule.slab_p.lane_of
         self.spec = EngineSpec(
             n_rep_a=schedule.n_rep_a, n_rep_p=schedule.n_rep_p, task=task,
             resnet=resnet, dp=dp, noise=sigma > 0.0,
             has_inscan_agg=schedule.has_inscan_agg, use_pallas=use_pallas,
             donate=backend != "cpu", pack=schedule.pack,
-            flat_opt=bool(flat_opt), scatter_drop=scatter_drop)
+            flat_opt=bool(flat_opt), scatter_drop=scatter_drop,
+            agg_perm_a=perm_a, agg_perm_p=perm_p)
+        # schedules with in-scan aggregation hoist it out of the scans
+        # (see the chunk-plan helpers above) on EVERY device count: the
+        # single-device reference and a mesh run must share the same
+        # standalone agg kernels for bit-parity, so the tick bodies
+        # trace agg-free everywhere and the agg runs between scan chunks
+        self._hoist = bool(schedule.has_inscan_agg)
+        if self._hoist:
+            self.spec = _dc_replace(self.spec, has_inscan_agg=False)
         self._opt_builder, self._opt_key = opt_builder, opt_key
         if schedule.pack == "segmented":
             # one runner per epoch run-chain (shared across epochs with
@@ -778,8 +930,43 @@ class CompiledReplayEngine:
             self._runner = _get_runner(self.spec, opt_builder, opt_key)
             self._xs = {k: jnp.asarray(v)
                         for k, v in schedule.padded().items()}
-        self._agg_both = jax.jit(
-            lambda ta, tp: (_broadcast_mean(ta), _broadcast_mean(tp)))
+        bm_a, bm_p = _agg_fns(self.spec,
+                               on_mesh=self.mesh is not None)
+        agg = lambda ta, tp: (bm_a(ta), bm_p(tp))
+        if self.mesh is not None:
+            # pin canonical lane sharding on the boundary-agg INPUTS so
+            # the agg always compiles against the layout the parity
+            # proof covers (jit reshards drifted inputs for free).  The
+            # output sharding stays free on purpose: forcing a
+            # lane-sharded output makes the partitioner compute each
+            # device's slab of the broadcast mean from per-device
+            # partial sums + cross-device reduce, whose association is
+            # ~1 ULP off the single-device chain.  `_place_state` lays
+            # the free (replicated) result back over the lanes at the
+            # epoch boundary.
+            lane = mesh_replay.lane_sharding(self.mesh)
+            self._agg_both = jax.jit(agg, in_shardings=(lane, lane))
+            if self._hoist:
+                # one-party variants for the hoisted agg ticks (a vfl_ps
+                # round may barrier only one party); same pin discipline
+                self._agg_a = jax.jit(bm_a, in_shardings=lane)
+                self._agg_p = jax.jit(bm_p, in_shardings=lane)
+        else:
+            self._agg_both = jax.jit(agg)
+            if self._hoist:
+                self._agg_a = jax.jit(bm_a)
+                self._agg_p = jax.jit(bm_p)
+        self._hoist_plans = None
+        if self._hoist:
+            if schedule.pack == "segmented":
+                self._hoist_plans = [_hoist_chunk_runs(seg.runs)
+                                     for seg in schedule.segments]
+            else:
+                padded = schedule.padded()
+                self._hoist_plans = [
+                    _hoist_chunk_flat({k: np.asarray(v[i])
+                                       for k, v in padded.items()})
+                    for i in range(len(schedule.segments))]
         # the point-stacked runners (the same epoch bodies vmapped over a
         # leading point axis) are built lazily on the first stacked call,
         # so single-run users never pay their traces
@@ -825,9 +1012,13 @@ class CompiledReplayEngine:
         streaming = (window_batches is not None
                      or is_feature_source(Xa) or is_feature_source(Xp))
         if not streaming:
-            return (jnp.asarray(self.schedule.rows),
+            data = (jnp.asarray(self.schedule.rows),
                     jnp.asarray(Xa, jnp.float32),
                     jnp.asarray(Xp, jnp.float32), jnp.asarray(y))
+            if self.mesh is not None:
+                # every lane reads arbitrary rows -> features replicate
+                data = mesh_replay.put_replicated(self.mesh, data)
+            return data
         wb = int(window_batches) if window_batches else 32
         plans, table, cap = self._stream_plan(wb)
         rows = np.asarray(self.schedule.rows)
@@ -942,45 +1133,139 @@ class CompiledReplayEngine:
         padded = np.full(cap, bids[-1] if n else 0, np.int64)
         padded[:n] = bids
         pieces = w["pieces"]
+        plan = None
         if isinstance(pieces, dict):              # packed/dense
-            xs = {k: jnp.asarray(v)
-                  for k, v in _remap_bids(pieces, bids, n_total).items()}
-            structure = None
+            remapped = _remap_bids(pieces, bids, n_total)
+            if self._hoist:
+                plan = _hoist_chunk_flat(
+                    {k: np.asarray(v) for k, v in remapped.items()})
+                xs, structure = None, None
+            else:
+                xs = {k: jnp.asarray(v) for k, v in remapped.items()}
+                structure = None
         else:                                     # segmented run slices
-            structure = tuple((sig, has_agg) for sig, has_agg, _ in pieces)
-            xs = tuple({k: jnp.asarray(v) for k, v in
-                        _remap_bids(arrs, bids, n_total).items()}
-                       for _, _, arrs in pieces)
-        return _Window(structure=structure, xs=xs, bids=padded, n_bids=n)
+            remapped = [(sig, has_agg, _remap_bids(arrs, bids, n_total))
+                        for sig, has_agg, arrs in pieces]
+            if self._hoist:
+                plan = _hoist_chunk_pieces(remapped)
+                xs, structure = None, None
+            else:
+                structure = tuple((sig, has_agg)
+                                  for sig, has_agg, _ in remapped)
+                xs = tuple({k: jnp.asarray(v) for k, v in arrs.items()}
+                           for _, _, arrs in remapped)
+        return _Window(structure=structure, xs=xs, bids=padded, n_bids=n,
+                       plan=plan)
 
-    def init_state(self, theta_a_reps: List, opt_a_reps: List,
-                   theta_p_reps: List, opt_p_reps: List, d_emb: int,
-                   *, seed: Optional[int] = None) -> TrainerState:
-        """Fresh `TrainerState` at epoch 0.  `seed` (default: the
-        engine's construction seed) keys the device DP noise stream — a
-        cached engine serves many runs, each seeding its own state."""
+    @staticmethod
+    def _lane_lists(reps: List, plan) -> List:
+        """Arrange per-replica leaves into device-lowered lane order.
+        Padding lanes carry a copy of replica 0's values — inert, since
+        no `*_rep` work row ever names them (a lane-ordered list of the
+        full lane length is passed through unchanged)."""
+        if plan is None or plan.is_identity or len(reps) == plan.n_lanes:
+            return list(reps)
+        return [reps[r] if r >= 0 else reps[0] for r in plan.rep_of]
+
+    def _place_state(self, state: TrainerState) -> TrainerState:
+        """Lay the carry over the replica mesh (no-op off-mesh)."""
+        if self.mesh is None:
+            return state
+        carry = mesh_replay.shard_carry(self.mesh,
+                                        TrainerState(*state).carry)
+        return TrainerState(*carry, epoch=int(state.epoch),
+                            window=int(getattr(state, "window", 0)))
+
+    def _build_state(self, theta_a_reps: List, opt_a_reps: List,
+                     theta_p_reps: List, opt_p_reps: List, d_emb: int,
+                     seed: Optional[int]) -> TrainerState:
         s = self.schedule
         B = s.batch_rows
         key0 = jax.random.fold_in(
             jax.random.PRNGKey(self._seed if seed is None else seed), 0x5f)
         return TrainerState(
-            stack_states(theta_a_reps), stack_states(opt_a_reps),
-            stack_states(theta_p_reps), stack_states(opt_p_reps),
+            stack_states(self._lane_lists(theta_a_reps, s.slab_a)),
+            stack_states(self._lane_lists(opt_a_reps, s.slab_a)),
+            stack_states(self._lane_lists(theta_p_reps, s.slab_p)),
+            stack_states(self._lane_lists(opt_p_reps, s.slab_p)),
             slot_ring_init(s.emb_slots, (B, d_emb)),
             slot_ring_init(s.grad_slots, (B, d_emb)),
             jnp.zeros((s.n_epochs,), jnp.float32),
             jnp.zeros((s.n_epochs,), jnp.float32),
             key0, epoch=0)
 
+    def init_state(self, theta_a_reps: List, opt_a_reps: List,
+                   theta_p_reps: List, opt_p_reps: List, d_emb: int,
+                   *, seed: Optional[int] = None) -> TrainerState:
+        """Fresh `TrainerState` at epoch 0.  `seed` (default: the
+        engine's construction seed) keys the device DP noise stream — a
+        cached engine serves many runs, each seeding its own state.  The
+        per-replica lists are in canonical replica order; on a mesh
+        engine they are padded/permuted into lane order and the carry is
+        laid over the devices."""
+        return self._place_state(self._build_state(
+            theta_a_reps, opt_a_reps, theta_p_reps, opt_p_reps, d_emb,
+            seed))
+
     def load_state(self, payload) -> TrainerState:
         """Rebuild a `TrainerState` from a `checkpoint.store.restore_state`
         payload (the state saved with `save_state`).  Accepts both the
         10-field pre-streaming layout (no `window`; mid-epoch resume did
-        not exist) and the current 11-field one."""
+        not exist) and the current 11-field one.  The payload's stacks
+        may be canonical (`export_state`, device-count independent) or
+        this engine's own lane layout — both adopt correctly, so a run
+        saved on N devices resumes on M."""
         fields = list(payload)
         window = int(fields[10]) if len(fields) > 10 else 0
-        return TrainerState(*fields[:9], epoch=int(fields[9]),
-                            window=window)
+        st = TrainerState(*fields[:9], epoch=int(fields[9]),
+                          window=window)
+        return self._adopt_state(st)
+
+    def _adopt_state(self, st: TrainerState) -> TrainerState:
+        """Canonical (or already-lane-ordered) state -> this engine's
+        lane layout and device placement."""
+        s = self.schedule
+
+        def pad(stack, plan):
+            if plan is None or plan.is_identity:
+                return stack
+
+            def leaf(x):
+                x = jnp.asarray(x)
+                if int(x.shape[0]) == plan.n_lanes:
+                    return x                      # already lane-ordered
+                idx = jnp.maximum(jnp.asarray(plan.rep_of), 0)
+                return x[idx]                     # pad lanes <- replica 0
+            return jax.tree.map(leaf, stack)
+
+        st = TrainerState(
+            pad(st.theta_a, s.slab_a), pad(st.opt_a, s.slab_a),
+            pad(st.theta_p, s.slab_p), pad(st.opt_p, s.slab_p),
+            *tuple(st)[4:9], epoch=int(st.epoch),
+            window=int(getattr(st, "window", 0)))
+        return self._place_state(st)
+
+    def export_state(self, state: TrainerState) -> TrainerState:
+        """Device-count-independent view of `state`: real replicas in
+        canonical order, padding lanes stripped.  This is what
+        checkpoints should hold — `load_state` on an engine with ANY
+        device count adopts it — and it is the identity off-mesh and on
+        divisible (identity-plan) mesh layouts."""
+        s = self.schedule
+        if s.slab_a is None and s.slab_p is None:
+            return state
+
+        def sel(stack, plan):
+            if plan is None or plan.is_identity:
+                return stack
+            idx = jnp.asarray(plan.lane_of)
+            return jax.tree.map(lambda x: jnp.asarray(x)[idx], stack)
+
+        return TrainerState(
+            sel(state.theta_a, s.slab_a), sel(state.opt_a, s.slab_a),
+            sel(state.theta_p, s.slab_p), sel(state.opt_p, s.slab_p),
+            *tuple(state)[4:9], epoch=int(state.epoch),
+            window=int(getattr(state, "window", 0)))
 
     # -- execution -------------------------------------------------------
     def run_epoch(self, state: TrainerState, seg: int, data,
@@ -1008,7 +1293,10 @@ class CompiledReplayEngine:
                              f"{int(state.window)}); resuming requires "
                              "the streaming data path")
         carry = TrainerState(*state).carry
-        if self.schedule.pack == "segmented":
+        if self._hoist_plans is not None:
+            carry = self._run_hoisted(carry, self._hoist_plans[seg],
+                                      data, hyper)
+        elif self.schedule.pack == "segmented":
             if self.schedule.segments[seg].runs:
                 carry = self._runners[seg](carry, self._seg_xs[seg], data,
                                            hyper)
@@ -1019,7 +1307,45 @@ class CompiledReplayEngine:
             ta, oa, tp, op_, *rest = carry
             ta, tp = self._agg_both(ta, tp)
             carry = (ta, oa, tp, op_, *rest)
-        return TrainerState(*carry, epoch=seg + 1)
+        # re-pin canonical shardings at the epoch boundary (no-op copy
+        # when nothing drifted) so every epoch's scan compiles against
+        # the same layout
+        return self._place_state(TrainerState(*carry, epoch=seg + 1))
+
+    def _run_hoisted(self, carry, plan, data, hyper, *,
+                     stacked: bool = False):
+        """Execute one epoch's hoisted chunk plan: jitted scan chunks
+        with the in-scan aggregations applied between them through the
+        exact free-output agg path, each result laid back over the lanes
+        (or the point axis, for stacked groups) by a device_put."""
+        lane = (mesh_replay.lane_sharding(self.mesh)
+                if self.mesh is not None else None)
+        for item in plan:
+            if item[0] == "agg":
+                _, do_a, do_p = item
+                ta, oa, tp, op_, *rest = carry
+                if do_a:
+                    fn = self._agg_a_stacked if stacked else self._agg_a
+                    ta = fn(ta)
+                    if lane is not None:
+                        ta = jax.device_put(ta, lane)
+                if do_p:
+                    fn = self._agg_p_stacked if stacked else self._agg_p
+                    tp = fn(tp)
+                    if lane is not None:
+                        tp = jax.device_put(tp, lane)
+                carry = (ta, oa, tp, op_, *rest)
+            else:
+                _, structure, xs = item
+                if structure is None:
+                    runner = (self._stacked_runner if stacked
+                              else self._runner)
+                else:
+                    runner = _get_segmented_runner(
+                        self.spec, self._opt_builder, self._opt_key,
+                        structure, stacked=stacked)
+                carry = runner(carry, xs, data, hyper)
+        return carry
 
     def _run_epoch_windowed(self, state: TrainerState, seg: int,
                             data: WindowedData, hyper: Dict,
@@ -1042,7 +1368,9 @@ class CompiledReplayEngine:
                     fut = pool.submit(data.stage, wins[k + 1])
                 w = wins[k]
                 wdata = (data.table, *blk)
-                if self.schedule.pack == "segmented":
+                if w.plan is not None:
+                    carry = self._run_hoisted(carry, w.plan, wdata, hyper)
+                elif self.schedule.pack == "segmented":
                     if w.structure:
                         runner = _get_segmented_runner(
                             self.spec, self._opt_builder, self._opt_key,
@@ -1054,13 +1382,14 @@ class CompiledReplayEngine:
             pool.shutdown(wait=True)
         data.stats["epoch_s"] += time.perf_counter() - t0
         if end < len(wins):
-            return TrainerState(*carry, epoch=int(state.epoch),
-                                window=end)
+            return self._place_state(
+                TrainerState(*carry, epoch=int(state.epoch), window=end))
         if self.schedule.segments[seg].epoch_agg:
             ta, oa, tp, op_, *rest = carry
             ta, tp = self._agg_both(ta, tp)
             carry = (ta, oa, tp, op_, *rest)
-        return TrainerState(*carry, epoch=seg + 1, window=0)
+        return self._place_state(
+            TrainerState(*carry, epoch=seg + 1, window=0))
 
     def run_segment(self, state, seg: int, data: tuple) -> TrainerState:
         """Back-compat alias of `run_epoch` (pre-Session name)."""
@@ -1080,8 +1409,27 @@ class CompiledReplayEngine:
         else:
             self._stacked_runner = _get_runner(
                 self.spec, self._opt_builder, self._opt_key, stacked=True)
-        self._agg_both_stacked = jax.jit(jax.vmap(
-            lambda ta, tp: (_broadcast_mean(ta), _broadcast_mean(tp))))
+        bm_a, bm_p = _agg_fns(self.spec,
+                               on_mesh=self.mesh is not None)
+        agg = jax.vmap(lambda ta, tp: (bm_a(ta), bm_p(tp)))
+        if self.mesh is not None:
+            # same pin discipline as `_agg_both`, on the point axis: pin
+            # the inputs, leave the output free (a forced output
+            # sharding flips layout-dependent fusion/FMA rounding);
+            # `shard_stacked_carry` re-pins at the epoch boundary
+            lane = mesh_replay.lane_sharding(self.mesh)
+            self._agg_both_stacked = jax.jit(
+                agg, in_shardings=(lane, lane))
+            if self._hoist:
+                self._agg_a_stacked = jax.jit(jax.vmap(bm_a),
+                                              in_shardings=lane)
+                self._agg_p_stacked = jax.jit(jax.vmap(bm_p),
+                                              in_shardings=lane)
+        else:
+            self._agg_both_stacked = jax.jit(agg)
+            if self._hoist:
+                self._agg_a_stacked = jax.jit(jax.vmap(bm_a))
+                self._agg_p_stacked = jax.jit(jax.vmap(bm_p))
         self._stacked_ready = True
 
     def stage_data_stacked(self, points: List[tuple]) -> tuple:
@@ -1094,12 +1442,23 @@ class CompiledReplayEngine:
                for xa, xp, _ in points):
             raise TypeError("point stacking requires resident feature "
                             "arrays; streaming sources run sequentially")
-        return (jnp.asarray(self.schedule.rows),
+        self._check_point_count(len(points))
+        data = (jnp.asarray(self.schedule.rows),
                 jnp.stack([jnp.asarray(xa, jnp.float32)
                            for xa, _, _ in points]),
                 jnp.stack([jnp.asarray(xp, jnp.float32)
                            for _, xp, _ in points]),
                 jnp.stack([jnp.asarray(y) for _, _, y in points]))
+        if self.mesh is not None:
+            data = mesh_replay.shard_stacked_data(self.mesh, data)
+        return data
+
+    def _check_point_count(self, n_points: int) -> None:
+        if self.mesh is not None and n_points % self.n_devices:
+            raise ValueError(
+                f"a mesh-stacked group must hold a multiple of "
+                f"n_devices={self.n_devices} points, got {n_points}; pad "
+                f"the group (api.sweep repeats the last point)")
 
     def init_state_stacked(self, points: List[tuple], d_emb: int, *,
                            seeds: List[int]) -> TrainerState:
@@ -1108,10 +1467,20 @@ class CompiledReplayEngine:
         point (keyed exactly like the per-point `init_state`, so a
         stacked DP run draws the same noise its sequential run would).
         `points` is a list of per-point
-        ``(theta_a_reps, opt_a_reps, theta_p_reps, opt_p_reps)``."""
-        states = [self.init_state(ta, oa, tp, op_, d_emb, seed=s)
+        ``(theta_a_reps, opt_a_reps, theta_p_reps, opt_p_reps)``.
+
+        On a mesh engine the POINT axis (not the replica axis) is laid
+        over the devices — stacked points are embarrassingly parallel,
+        so a sharded group runs with zero steady-state collectives."""
+        self._check_point_count(len(points))
+        states = [self._build_state(ta, oa, tp, op_, d_emb, s)
                   for (ta, oa, tp, op_), s in zip(points, seeds)]
-        return stack_points(states)
+        st = stack_points(states)
+        if self.mesh is not None:
+            carry = mesh_replay.shard_stacked_carry(
+                self.mesh, TrainerState(*st).carry)
+            st = TrainerState(*carry, epoch=int(st.epoch))
+        return st
 
     def run_epoch_stacked(self, state: TrainerState, seg: int,
                           data: tuple, hyper: Dict) -> TrainerState:
@@ -1124,7 +1493,10 @@ class CompiledReplayEngine:
                  for k in ("lr", "clip", "sigma")}
         self._ensure_stacked_runners()
         carry = TrainerState(*state).carry
-        if self.schedule.pack == "segmented":
+        if self._hoist_plans is not None:
+            carry = self._run_hoisted(carry, self._hoist_plans[seg],
+                                      data, hyper, stacked=True)
+        elif self.schedule.pack == "segmented":
             if self.schedule.segments[seg].runs:
                 carry = self._stacked_runners[seg](
                     carry, self._seg_xs[seg], data, hyper)
@@ -1135,6 +1507,8 @@ class CompiledReplayEngine:
             ta, oa, tp, op_, *rest = carry
             ta, tp = self._agg_both_stacked(ta, tp)
             carry = (ta, oa, tp, op_, *rest)
+        if self.mesh is not None:
+            carry = mesh_replay.shard_stacked_carry(self.mesh, carry)
         return TrainerState(*carry, epoch=seg + 1)
 
     def point_state(self, state: TrainerState, i: int) -> TrainerState:
@@ -1148,16 +1522,29 @@ class CompiledReplayEngine:
         return unstack_points(state, n_points)
 
     def params_mean(self, state) -> tuple:
-        """(theta_a, theta_p) averaged across replicas — for evaluation."""
+        """(theta_a, theta_p) averaged across replicas — for evaluation.
+        On device-lowered layouts the mean runs over the real lanes in
+        canonical replica order (padding lanes excluded)."""
         ta, _, tp, *_ = tuple(state)
-        return replica_mean(ta), replica_mean(tp)
+        return (replica_mean(ta, self.spec.agg_perm_a),
+                replica_mean(tp, self.spec.agg_perm_p))
 
     def finish(self, state):
-        """Unstack params/opt back to per-replica lists and pull the
+        """Unstack params/opt back to per-replica lists (canonical
+        replica order — padding lanes dropped) and pull the
         device-accumulated per-epoch mean losses (ONE host sync)."""
         ta, oa, tp, op_, _, _, loss_vec, cnt_vec, *_ = tuple(state)
         s = self.schedule
+
+        def unstack(stack, n_lanes, plan):
+            lst = unstack_states(stack, n_lanes)
+            if plan is not None and not plan.is_identity:
+                lst = [lst[l] for l in plan.lane_of]
+            return lst
+
         losses = np.asarray(loss_vec) / np.maximum(np.asarray(cnt_vec), 1.0)
-        return (unstack_states(ta, s.n_rep_a), unstack_states(oa, s.n_rep_a),
-                unstack_states(tp, s.n_rep_p), unstack_states(op_, s.n_rep_p),
+        return (unstack(ta, s.n_rep_a, s.slab_a),
+                unstack(oa, s.n_rep_a, s.slab_a),
+                unstack(tp, s.n_rep_p, s.slab_p),
+                unstack(op_, s.n_rep_p, s.slab_p),
                 [float(x) for x in losses])

@@ -1,0 +1,111 @@
+"""Replica/point-axis mesh placement for the compiled replay engine.
+
+The compiled engine's epoch runners are *already* pure data parallelism
+over the leading stacked axis — replica lanes in a single run, sweep
+points in a stacked run — with three exceptions that GSPMD resolves with
+collectives: the slot rings (shared mailboxes between passive and active
+lanes), the loss/count accumulators, and the aggregation mean at agg
+ticks.  So sharding is done **by placement, not by rewriting**: the lane
+axis of the carry gets a `NamedSharding` over a 1-D ``("replica",)``
+mesh, everything cross-lane is replicated, and the cached jitted runners
+are reused verbatim — XLA partitions the scan body and inserts the
+collectives (the aggregation psum at `vfl_ps` agg ticks, plus the ring
+exchange traffic), keeping per-device arithmetic bit-identical to the
+single-device program (proven by `tests/test_mesh_replay.py`).
+
+Lane layout (padding, slab balance, `*_rep` permutation) is the schedule
+compiler's job: see `core.schedule.device_lower` / `SlabPlan`.  This
+module only builds meshes and places pytrees; it knows the engine's
+carry by *position* (the `TrainerState.carry` 9-tuple) so it stays
+import-leaf under `core.jit_pipeline`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+REPLICA_AXIS = "replica"
+
+# carry positions carrying the stacked lane axis (theta_a, opt_a,
+# theta_p, opt_p); the rest — rings, loss/count accumulators, PRNG key —
+# is cross-lane state and stays replicated
+_LANE_FIELDS = 4
+
+
+def make_replay_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """A 1-D ``("replica",)`` mesh over the first `n_devices` devices.
+
+    On a single-device host, multi-device CPU runs need
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` exported
+    before jax is imported."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if n < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n}")
+    if n > len(devs):
+        raise ValueError(
+            f"n_devices={n} but only {len(devs)} jax device(s) visible; "
+            f"for CPU testing export XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before importing "
+            f"jax")
+    return Mesh(np.asarray(devs[:n]), (REPLICA_AXIS,))
+
+
+def lane_sharding(mesh: Mesh) -> NamedSharding:
+    """Leading axis split over the replica mesh axis."""
+    return NamedSharding(mesh, P(REPLICA_AXIS))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully replicated on every mesh device."""
+    return NamedSharding(mesh, P())
+
+
+def put_replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.device_put(tree, replicated_sharding(mesh))
+
+
+def shard_carry(mesh: Mesh, carry: tuple) -> tuple:
+    """Place a `TrainerState.carry` 9-tuple: param/optimizer stacks get
+    the lane sharding on their leading (replica-lane) axis, rings and
+    accumulators and the key are replicated.  The lane counts are padded
+    to a device multiple by `schedule.device_lower`, so the split is
+    always even."""
+    lane = lane_sharding(mesh)
+    rep = replicated_sharding(mesh)
+    out = tuple(jax.device_put(x, lane) for x in carry[:_LANE_FIELDS])
+    return out + tuple(jax.device_put(x, rep) for x in carry[_LANE_FIELDS:])
+
+
+def shard_stacked_carry(mesh: Mesh, carry: tuple) -> tuple:
+    """Place a point-stacked carry: every leaf has a leading point axis
+    (the `stack_points` layout), so the whole tuple gets the lane
+    sharding on axis 0.  Point counts must be a device multiple — the
+    sweep runner pads groups before staging."""
+    lane = lane_sharding(mesh)
+    return tuple(jax.device_put(x, lane) for x in carry)
+
+
+def shard_stacked_data(mesh: Mesh, data: tuple) -> tuple:
+    """Place stacked staged data `(rows, Xa, Xp, Y)`: the batch-row
+    table is shared by every point (replicated); the per-point feature
+    and label stacks split on the point axis."""
+    rows, *stacks = data
+    lane = lane_sharding(mesh)
+    rep = replicated_sharding(mesh)
+    return (jax.device_put(rows, rep),) + \
+        tuple(jax.device_put(x, lane) for x in stacks)
+
+
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    """Cross-device collective op counts in compiled HLO text — the
+    benchmark's 'psum count'.  `all-reduce` is the aggregation psum (and
+    the loss/count accumulator merges); `collective-permute`/`all-gather`
+    is ring exchange traffic between passive and active slabs."""
+    return {op: hlo_text.count(op)
+            for op in ("all-reduce", "all-gather", "collective-permute",
+                       "all-to-all", "reduce-scatter")}

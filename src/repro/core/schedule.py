@@ -68,7 +68,7 @@ from __future__ import annotations
 
 import itertools
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
@@ -219,6 +219,8 @@ class CompiledSchedule:
     versions_p: List[int] = field(default_factory=list)  # final versions
     pack: str = "dense"            # lane layout: "packed" | "dense"
     lane_widths: Tuple[int, int, int] = (0, 0, 0)   # (L_pf, L_pb, L_as)
+    slab_a: Optional["SlabPlan"] = None   # set by device_lower()
+    slab_p: Optional["SlabPlan"] = None   # set by device_lower()
 
     @property
     def batch_rows(self) -> int:
@@ -864,3 +866,134 @@ def compile_schedule(cfg: RunConfig, events: List[Tuple], *,
         _SCHEDULE_MEMO.pop(next(iter(_SCHEDULE_MEMO)))
     _SCHEDULE_MEMO[memo_key] = sched
     return sched
+
+
+# ---------------------------------------------------------------------------
+# device-aware lowering: slab-balanced lane permutation + masked padding
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SlabPlan:
+    """How one party's replica axis lays over a 1-D device mesh.
+
+    Lanes are grouped into contiguous per-device **slabs** of
+    `lanes_per_device` so a NamedSharding over the leading axis gives each
+    device whole lanes.  Real replicas fill the slabs round-balanced
+    (device d holds `n_real // n_devices + (1 if d < n_real % n_devices)`
+    real lanes, so loads differ by at most one); the remaining lanes are
+    **padding**: they carry replica-0's initial params, are never named by
+    any `*_rep` work row, and therefore never execute an op — masked out
+    exactly like an empty packed lane.  `lane_of[r]` is the lane of real
+    replica r; `rep_of[l]` inverts it (-1 = padding)."""
+    n_real: int
+    n_devices: int
+    lanes_per_device: int
+    lane_of: Tuple[int, ...]
+    rep_of: Tuple[int, ...]
+
+    @property
+    def n_lanes(self) -> int:
+        return self.n_devices * self.lanes_per_device
+
+    @property
+    def is_identity(self) -> bool:
+        return self.n_lanes == self.n_real and \
+            self.lane_of == tuple(range(self.n_real))
+
+    @property
+    def device_load(self) -> Tuple[int, ...]:
+        """Real lanes per device (balanced within 1 by construction)."""
+        P = self.lanes_per_device
+        return tuple(sum(1 for r in self.rep_of[d * P:(d + 1) * P]
+                         if r >= 0) for d in range(self.n_devices))
+
+
+def slab_plan(n_real: int, n_devices: int) -> SlabPlan:
+    """Balanced lane assignment of `n_real` replicas over `n_devices`.
+
+    A multi-device plan always keeps at least one padding lane: when the
+    replica count divides the device count evenly, the slab width is
+    bumped by one.  This is a numerical requirement, not a convenience —
+    with every lane populated, the per-tick phase gathers cover the whole
+    lane axis and the partitioner shards the phase compute across
+    devices, contracting FMAs differently from the single-device program
+    (~ULP-level divergence that Adam then amplifies).  With the gather a
+    proper subset of the lanes, the partitioner materializes the gathered
+    stack replicated and the phase compute is the exact single-device
+    kernel, which is what the engine's bit-parity contract relies on."""
+    if n_real < 1 or n_devices < 1:
+        raise ValueError(f"need n_real >= 1, n_devices >= 1; got "
+                         f"({n_real}, {n_devices})")
+    per = -(-n_real // n_devices)            # ceil
+    if n_devices > 1 and n_real % n_devices == 0:
+        per += 1                             # force >= 1 padding lane
+    lane_of: List[int] = []
+    rep_of = [-1] * (n_devices * per)
+    r = 0
+    for d in range(n_devices):
+        load = n_real // n_devices + (1 if d < n_real % n_devices else 0)
+        for j in range(load):
+            lane = d * per + j
+            lane_of.append(lane)
+            rep_of[lane] = r
+            r += 1
+    return SlabPlan(n_real=n_real, n_devices=n_devices,
+                    lanes_per_device=per, lane_of=tuple(lane_of),
+                    rep_of=tuple(rep_of))
+
+
+def _remap_rep(arr: np.ndarray, plan: SlabPlan) -> np.ndarray:
+    """Rewrite a `*_rep` work-row array from replica to lane indices.
+    Empty lanes (-1) stay empty; within-tick lane positions are NOT
+    re-sorted, so decode order and scatter conflict-freedom (each replica
+    at most once per phase per tick, preserved by injectivity of
+    `lane_of`) carry over unchanged."""
+    m = np.asarray(plan.lane_of, np.int32)
+    return np.where(arr >= 0, m[np.maximum(arr, 0)], np.int32(-1))
+
+
+def device_lower(sched: CompiledSchedule,
+                 n_devices: int) -> CompiledSchedule:
+    """Lower a compiled schedule for an `n_devices`-way replica mesh.
+
+    Returns a derived copy (the memoized input is shared and treated as
+    frozen) whose `*_rep` arrays name **lanes** under the two slab plans
+    and whose `n_rep_a`/`n_rep_p` are the padded lane counts.  Slot, bid
+    and agg arrays are untouched — ring-slot lifetimes are lane-layout
+    invariant.  A lowered schedule always carries padding lanes (see
+    `slab_plan` — a fully-populated lane axis breaks bit parity), so the
+    lane map is never the identity and the lowered runner is a distinct
+    cache entry from the single-device one.  Dense layouts are rejected:
+    their DP noise draw is shaped by the replica count, so padding would
+    change the noise stream and break bit parity."""
+    if n_devices <= 1:
+        return sched
+    if sched.pack not in ("packed", "segmented"):
+        raise ValueError(
+            f"mesh replay requires pack in ('packed', 'segmented'); "
+            f"pack={sched.pack!r} draws per-replica DP noise and cannot "
+            f"be padded without changing the noise stream")
+    plan_a = slab_plan(sched.n_rep_a, n_devices)
+    plan_p = slab_plan(sched.n_rep_p, n_devices)
+
+    def remap_packed(seg: PackedSegment) -> PackedSegment:
+        return replace(seg,
+                       pf_rep=_remap_rep(seg.pf_rep, plan_p),
+                       pb_rep=_remap_rep(seg.pb_rep, plan_p),
+                       as_rep=_remap_rep(seg.as_rep, plan_a))
+
+    def remap_run(run: Run) -> Run:
+        arrays = dict(run.arrays)
+        for ph, plan in (("pf", plan_p), ("pb", plan_p), ("as", plan_a)):
+            if ph in run.sig:
+                arrays[f"{ph}_rep"] = _remap_rep(arrays[f"{ph}_rep"], plan)
+        return Run(sig=run.sig, has_agg=run.has_agg, arrays=arrays)
+
+    if sched.pack == "segmented":
+        segments: List[Union[Segment, PackedSegment, SegmentedSegment]] = [
+            SegmentedSegment(runs=[remap_run(r) for r in s.runs],
+                             epoch_agg=s.epoch_agg)
+            for s in sched.segments]
+    else:
+        segments = [remap_packed(s) for s in sched.segments]
+    return replace(sched, n_rep_a=plan_a.n_lanes, n_rep_p=plan_p.n_lanes,
+                   segments=segments, slab_a=plan_a, slab_p=plan_p)

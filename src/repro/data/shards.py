@@ -29,12 +29,17 @@ from __future__ import annotations
 
 import json
 import os
+from concurrent.futures import ThreadPoolExecutor
 from typing import Optional, Tuple
 
 import numpy as np
 
 META_NAME = "meta.json"
 DEFAULT_ROWS_PER_SHARD = 262_144
+
+# below this many requested rows a gather runs sequentially even when a
+# pool is available — thread dispatch costs more than the reads
+_PARALLEL_MIN_ROWS = 4096
 
 
 def is_feature_source(x) -> bool:
@@ -96,9 +101,20 @@ class ShardWriter:
 
 
 class ShardStore:
-    """Memory-mapped reader over one party's shard directory."""
+    """Memory-mapped reader over one party's shard directory.
 
-    def __init__(self, party_dir: str):
+    `gather_workers` controls the per-shard read pool: shards touched by
+    a gather write disjoint output row sets, so they can be read
+    concurrently (mmap page faults overlap instead of serializing).
+    ``None`` (the default) auto-sizes to ``min(4, cpu_count)`` threads
+    and only engages for gathers of at least `_PARALLEL_MIN_ROWS` rows
+    spanning 2+ shards; ``0``/``1`` forces sequential; an explicit
+    ``>= 2`` forces that pool size regardless of gather size.  The
+    threaded path is byte-identical to sequential (pinned by
+    `tests/test_streaming_data.py`)."""
+
+    def __init__(self, party_dir: str, *,
+                 gather_workers: Optional[int] = None):
         with open(os.path.join(party_dir, META_NAME)) as f:
             meta = json.load(f)
         self.dir = party_dir
@@ -108,10 +124,13 @@ class ShardStore:
         self.rows_per_shard = int(meta["rows_per_shard"])
         self.n_shards = int(meta["n_shards"])
         self._maps: list = [None] * self.n_shards
+        self.gather_workers = gather_workers
+        self._pool: Optional[ThreadPoolExecutor] = None
 
     @classmethod
-    def open(cls, party_dir: str) -> "ShardStore":
-        return cls(party_dir)
+    def open(cls, party_dir: str, *,
+             gather_workers: Optional[int] = None) -> "ShardStore":
+        return cls(party_dir, gather_workers=gather_workers)
 
     @property
     def shape(self) -> Tuple[int, int]:
@@ -129,23 +148,53 @@ class ShardStore:
             self._maps[s] = m
         return m
 
+    def _pool_for(self, n_rows: int, n_touched: int
+                  ) -> Optional[ThreadPoolExecutor]:
+        w = self.gather_workers
+        if w is not None and w <= 1:
+            return None
+        if w is None and (n_rows < _PARALLEL_MIN_ROWS or n_touched < 2):
+            return None
+        if self._pool is None:
+            size = min(4, os.cpu_count() or 1) if w is None else int(w)
+            if size <= 1:
+                return None
+            self._pool = ThreadPoolExecutor(
+                max_workers=size, thread_name_prefix="shard-gather")
+        return self._pool
+
     def gather(self, rows: np.ndarray) -> np.ndarray:
         """Gather arbitrary rows into a fresh in-RAM array.  Rows are
         grouped per shard (one fancy-index per touched shard) so a
         window gather does a handful of sequential-ish mmap reads
-        instead of `len(rows)` random ones."""
+        instead of `len(rows)` random ones.  Per-shard reads land in
+        disjoint `out` row sets, so large gathers fan the shards over
+        the thread pool (see `gather_workers`) with byte-identical
+        results."""
         rows = np.asarray(rows, np.int64).ravel()
         out = np.empty((len(rows), self.d), self.dtype)
         order = np.argsort(rows, kind="stable")
         sr = rows[order]
         sid = sr // self.rows_per_shard
         bounds = np.searchsorted(sid, np.arange(self.n_shards + 1))
-        for s in range(self.n_shards):
+        touched = [s for s in range(self.n_shards)
+                   if bounds[s] != bounds[s + 1]]
+
+        def read(s: int) -> None:
             lo, hi = bounds[s], bounds[s + 1]
-            if lo == hi:
-                continue
             out[order[lo:hi]] = \
                 self._shard(s)[sr[lo:hi] - s * self.rows_per_shard]
+
+        pool = self._pool_for(len(rows), len(touched))
+        if pool is None:
+            for s in touched:
+                read(s)
+        else:
+            # open maps in the caller's thread (lazy np.load is not
+            # guarded), then fan out the disjoint reads
+            for s in touched:
+                self._shard(s)
+            list(pool.map(read, touched))
         return out
 
     def __getitem__(self, rows) -> np.ndarray:
@@ -153,6 +202,11 @@ class ShardStore:
 
     def __len__(self) -> int:
         return self.n
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
 
 
 class ArrayFeatures:

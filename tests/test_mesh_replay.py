@@ -1,0 +1,346 @@
+"""Mesh-sharded replay, proven bit-for-bit on forced multi-device hosts.
+
+The heavy scenarios spawn a fresh Python process with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the flag must be
+exported before jax imports, so the running pytest process cannot flip
+it).  Inside the worker the single-device reference and the mesh run
+execute back to back and every exported state leaf is compared at the
+byte level; the worker prints a single ``RESULT:`` JSON line that the
+test asserts on.  This file is its own worker entry point::
+
+    python tests/test_mesh_replay.py <mode> '<json payload>'
+
+Scenario matrix (ISSUE 7): {pubsub, vfl_ps} x {segmented, packed} x
+{DP on, off} x {uneven 6-on-4, padded 3-on-4, divisible 4-on-4}, plus
+checkpoint save-on-4/resume-on-1 (and the reverse) and a point-stacked
+sweep group laid over the point axis.  The slower combinations carry
+``@pytest.mark.slow`` (the multi-device CI leg runs them with
+``--runslow``); one default scenario per method keeps tier-1 honest.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+BASE = dict(method="pubsub", dataset="credit", scale=0.05, n_epochs=2,
+            batch_size=64, w_a=6, w_p=6)
+
+
+# ---------------------------------------------------------------------------
+# worker plumbing
+# ---------------------------------------------------------------------------
+def _spawn(mode: str, payload: dict, *, device_count: int = 4,
+           timeout: int = 3000) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{device_count}")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), mode,
+         json.dumps(payload)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, (
+        f"worker {mode} failed (rc={proc.returncode})\n"
+        f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    lines = [l for l in proc.stdout.splitlines()
+             if l.startswith("RESULT:")]
+    assert lines, f"worker {mode} printed no RESULT line:\n{proc.stdout}"
+    return json.loads(lines[-1][len("RESULT:"):])
+
+
+def _leaf_hashes(export) -> list:
+    """sha256 of every leaf's bytes, in deterministic tree order —
+    immediate host copies (lazily-read device comparisons can alias)."""
+    import hashlib
+
+    import jax
+    out = []
+    for leaf in jax.tree.leaves(tuple(export)):
+        a = np.asarray(leaf)
+        out.append(hashlib.sha256(
+            str(a.shape).encode() + str(a.dtype).encode() + a.tobytes()
+        ).hexdigest())
+    return out
+
+
+def _worker_run(overrides: dict, n_devices: int, *, callbacks=(),
+                state=None):
+    from repro.api import ExperimentConfig, Session
+
+    class _Capture:
+        state = engine = None
+
+        def __call__(self, ctx):
+            self.state, self.engine = ctx.state, ctx.engine
+
+    cap = _Capture()
+    cfg = ExperimentConfig(**{**BASE, **overrides})
+    sess = Session(cfg, n_devices=n_devices)
+    res = sess.run(callbacks=[cap, *callbacks], state=state)
+    export = cap.engine.export_state(cap.state)
+    return sess, res, export
+
+
+def _worker_parity(payload: dict) -> dict:
+    r1 = _worker_run(payload["overrides"], 1)
+    r4 = _worker_run(payload["overrides"], payload.get("n_devices", 4))
+    (_, res1, e1), (_, res4, e4) = r1, r4
+    return {
+        "losses_eq": list(res1.train.losses) == list(res4.train.losses),
+        "history_eq": list(res1.train.history) ==
+        list(res4.train.history),
+        "final_eq": res1.train.final_metric == res4.train.final_metric,
+        "bad_leaves": [i for i, (a, b) in enumerate(
+            zip(_leaf_hashes(e1), _leaf_hashes(e4))) if a != b],
+    }
+
+
+def _worker_run_save(payload: dict) -> dict:
+    """Full reference run + an interrupted run that checkpoints at epoch
+    `stop_after` (the checkpoint file is what the resume worker, on a
+    DIFFERENT device count, picks up)."""
+    from repro.api.callbacks import CheckpointEvery
+
+    class _StopAfter:
+        def __init__(self, k):
+            self.k = k
+
+        def __call__(self, ctx):
+            if ctx.epoch == self.k:
+                ctx.stop = True
+
+    n = payload["n_devices"]
+    _, full, export = _worker_run(payload["overrides"], n)
+    k = payload["stop_after"]
+    _worker_run(payload["overrides"], n,
+                callbacks=[CheckpointEvery(payload["ckpt"], every=k),
+                           _StopAfter(k)])
+    return {"losses": list(full.train.losses),
+            "history": list(full.train.history),
+            "final": full.train.final_metric,
+            "hashes": _leaf_hashes(export)}
+
+
+def _worker_resume(payload: dict) -> dict:
+    from repro.api import ExperimentConfig, Session
+    from repro.checkpoint.store import restore_state
+
+    cfg = ExperimentConfig(**{**BASE, **payload["overrides"]})
+    sess = Session(cfg, n_devices=payload["n_devices"])
+    engine = sess.compile().engine
+    state = engine.load_state(restore_state(payload["ckpt"]))
+
+    class _Capture:
+        state = engine = None
+
+        def __call__(self, ctx):
+            self.state, self.engine = ctx.state, ctx.engine
+
+    cap = _Capture()
+    res = sess.run(state=state, callbacks=[cap])
+    export = cap.engine.export_state(cap.state)
+    return {"epoch_restored": int(state.epoch),
+            "losses": list(res.train.losses),
+            "final": res.train.final_metric,
+            "hashes": _leaf_hashes(export)}
+
+
+def _worker_sweep(payload: dict) -> dict:
+    from repro.api import ExperimentConfig
+    from repro.api.sweep import run_sweep
+
+    n = payload["n_devices"]
+    cfgs = [ExperimentConfig(**{**BASE, **payload["overrides"],
+                                "lr": lr, "n_devices": n})
+            for lr in payload["lrs"]]
+    sw = run_sweep(cfgs, stacked=True)
+    return {"stacked_groups": sw.stats["stacked_groups"],
+            "points": [{"losses": list(r.train.losses),
+                        "final": r.train.final_metric}
+                       for r in sw.results]}
+
+
+_MODES = {"parity": _worker_parity, "run_save": _worker_run_save,
+          "resume": _worker_resume, "sweep": _worker_sweep}
+
+if __name__ == "__main__":
+    sys.path.insert(0, SRC)
+    _payload = json.loads(sys.argv[2]) if len(sys.argv) > 2 else {}
+    print("RESULT:" + json.dumps(_MODES[sys.argv[1]](_payload)))
+    sys.exit(0)
+
+
+# ---------------------------------------------------------------------------
+# bit-for-bit parity, single device vs 4 forced host devices
+# ---------------------------------------------------------------------------
+def _assert_parity(overrides: dict):
+    got = _spawn("parity", {"overrides": overrides})
+    assert got == {"losses_eq": True, "history_eq": True,
+                   "final_eq": True, "bad_leaves": []}, got
+
+
+def test_parity_pubsub_segmented_dp_uneven():
+    """6 replicas on 4 devices (padded lanes), DP noise on."""
+    _assert_parity({"dp_mu": 1.0})
+
+
+def test_parity_vfl_ps_segmented_uneven():
+    """vfl_ps round barriers (hoisted agg ticks) on padded lanes."""
+    _assert_parity({"method": "vfl_ps"})
+
+
+@pytest.mark.slow
+def test_parity_pubsub_packed_dp():
+    _assert_parity({"dp_mu": 1.0, "pack": "packed"})
+
+
+@pytest.mark.slow
+def test_parity_pubsub_segmented_padded_3_on_4():
+    """3 replicas on 4 devices: one whole device is padding lanes."""
+    _assert_parity({"w_a": 3, "w_p": 3})
+
+
+@pytest.mark.slow
+def test_parity_vfl_ps_segmented_dp():
+    _assert_parity({"method": "vfl_ps", "dp_mu": 1.0})
+
+
+@pytest.mark.slow
+def test_parity_vfl_ps_segmented_divisible():
+    """4 replicas on 4 devices: the divisible case still pads one lane
+    per device — a fully-populated lane axis lets the partitioner shard
+    the all-lane phase compute, which breaks FMA-contraction parity
+    (see slab_plan)."""
+    _assert_parity({"method": "vfl_ps", "w_a": 4, "w_p": 4})
+
+
+@pytest.mark.slow
+def test_parity_vfl_ps_packed():
+    _assert_parity({"method": "vfl_ps", "pack": "packed",
+                    "w_a": 3, "w_p": 3, "n_epochs": 1})
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip across device counts
+# ---------------------------------------------------------------------------
+def _ckpt_roundtrip(tmp_path, overrides: dict, save_on: int,
+                    resume_on: int):
+    ckpt = str(tmp_path / "state.msgpack")
+    ref = _spawn("run_save", {"overrides": overrides, "n_devices": save_on,
+                              "ckpt": ckpt, "stop_after": 1},
+                 device_count=max(save_on, 1))
+    got = _spawn("resume", {"overrides": overrides,
+                            "n_devices": resume_on, "ckpt": ckpt},
+                 device_count=max(resume_on, 1))
+    assert got["epoch_restored"] == 1
+    assert got["losses"] == ref["losses"]
+    assert got["final"] == ref["final"]
+    assert got["hashes"] == ref["hashes"]
+
+
+def test_checkpoint_save_on_4_resume_on_1(tmp_path):
+    """A mesh-written checkpoint (canonical replica order on disk)
+    resumes on a single device, bit-identical to the uninterrupted
+    mesh run — whose bytes equal the single-device run by parity."""
+    _ckpt_roundtrip(tmp_path, {"dp_mu": 1.0}, save_on=4, resume_on=1)
+
+
+@pytest.mark.slow
+def test_checkpoint_save_on_1_resume_on_4(tmp_path):
+    _ckpt_roundtrip(tmp_path, {"dp_mu": 1.0}, save_on=1, resume_on=4)
+
+
+# ---------------------------------------------------------------------------
+# point-stacked sweep groups over the device mesh
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_stacked_sweep_mesh_matches_single_device():
+    """run_sweep(stacked=True) with n_devices=4 lays the point axis over
+    the mesh; per-point results must equal the n_devices=1 stack."""
+    payload = {"overrides": {"w_a": 2, "w_p": 2, "n_epochs": 2},
+               "lrs": [0.05, 0.03, 0.02, 0.01]}
+    r1 = _spawn("sweep", {**payload, "n_devices": 1}, device_count=1)
+    r4 = _spawn("sweep", {**payload, "n_devices": 4}, device_count=4)
+    assert r1["stacked_groups"] == r4["stacked_groups"] == 1
+    assert r1["points"] == r4["points"]
+
+
+# ---------------------------------------------------------------------------
+# cheap in-process checks (no forced devices needed)
+# ---------------------------------------------------------------------------
+def test_slab_plan_uneven_6_on_4():
+    from repro.core.schedule import slab_plan
+
+    p = slab_plan(6, 4)
+    assert p.n_lanes == 8 and p.lanes_per_device == 2
+    assert p.lane_of == (0, 1, 2, 3, 4, 6)
+    assert p.rep_of == (0, 1, 2, 3, 4, -1, 5, -1)
+    assert p.device_load == (2, 2, 1, 1)
+    assert not p.is_identity
+    # lane_of / rep_of invert each other over the real replicas
+    assert all(p.rep_of[p.lane_of[r]] == r for r in range(6))
+
+
+def test_slab_plan_divisible_keeps_padding():
+    """Divisible counts still get one padding lane per device (numerical
+    requirement — see the slab_plan docstring), so multi-device plans
+    are never the identity; a single device is exempt."""
+    from repro.core.schedule import slab_plan
+
+    p = slab_plan(4, 4)
+    assert not p.is_identity
+    assert p.lanes_per_device == 2 and p.n_lanes == 8
+    assert p.device_load == (1, 1, 1, 1)
+    assert p.lane_of == (0, 2, 4, 6)
+    assert slab_plan(4, 1).is_identity
+
+
+def test_device_lower_rejects_dense():
+    from repro.api import ExperimentConfig, Session
+    from repro.core.schedule import device_lower
+
+    sched = Session(ExperimentConfig(**BASE, pack="dense")) \
+        .compile().engine.schedule
+    with pytest.raises(ValueError, match="pack"):
+        device_lower(sched, 4)
+
+
+def test_make_replay_mesh_requires_visible_devices():
+    from repro.core.mesh_replay import make_replay_mesh
+
+    import jax
+    n = len(jax.devices()) + 1
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        make_replay_mesh(n)
+
+
+def test_n_devices_requires_compiled_engine():
+    from repro.api import ExperimentConfig, Session
+
+    with pytest.raises(ValueError, match="compiled"):
+        Session(ExperimentConfig(**BASE, engine="event"), n_devices=4)
+
+
+def test_structural_key_includes_device_count():
+    from repro.api import ExperimentConfig, Session
+
+    cfg = ExperimentConfig(**BASE)
+    k1 = Session(cfg, n_devices=1).structural_key()
+    k4 = Session(cfg, n_devices=4).structural_key()
+    assert k1 != k4
+    assert ("devices", 4) in k4 and ("devices", 1) in k1
+
+
+def test_single_device_fallthrough_has_no_mesh():
+    from repro.api import ExperimentConfig, Session
+
+    eng = Session(ExperimentConfig(**BASE), n_devices=1) \
+        .compile().engine
+    assert eng.mesh is None

@@ -98,6 +98,118 @@ def test_cross_entropy_matches_manual(B, S, V, seed):
     assert math.isclose(ce, manual, rel_tol=1e-5, abs_tol=1e-5)
 
 
+# --- mesh lowering invariants ------------------------------------------
+#
+# device_lower must be a pure re-labelling of the replica axis: the
+# engine-order op stream (tick, phase, replica, batch, ring slots) has
+# to survive the lane permutation exactly, slot and bid arrays (and so
+# ring-slot lifetimes) must be byte-identical, and the slab plan has to
+# balance real lanes within one per device for any (replicas, devices).
+
+from repro.core.des import RunConfig, simulate                # noqa: E402
+from repro.core.schedule import (compile_schedule, device_lower,  # noqa: E402
+                                 slab_plan)
+
+
+@settings(**SET)
+@given(n_real=st.integers(1, 24), n_devices=st.integers(1, 8))
+def test_slab_plan_invariants(n_real, n_devices):
+    p = slab_plan(n_real, n_devices)
+    assert p.n_lanes == n_devices * p.lanes_per_device >= n_real
+    # lane_of is injective and rep_of inverts it; everything else pads
+    assert len(set(p.lane_of)) == n_real
+    for r, lane in enumerate(p.lane_of):
+        assert p.rep_of[lane] == r
+    assert sum(1 for r in p.rep_of if r < 0) == p.n_lanes - n_real
+    load = p.device_load
+    assert sum(load) == n_real
+    assert max(load) - min(load) <= 1
+
+
+def _sched(method, n_rep, B, jitter, pack):
+    prof = SystemProfile(active=PartyProfile(cores=16),
+                         passive=PartyProfile(cores=16))
+    cfg = RunConfig(method=method, n_samples=4 * B, batch_size=B,
+                    n_epochs=2, w_a=n_rep, w_p=n_rep, profile=prof,
+                    jitter=jitter)
+    return compile_schedule(cfg, simulate(cfg).events, n_rep_a=n_rep,
+                            n_rep_p=n_rep, n_samples=4 * B, pack=pack)
+
+
+def _op_stream(sched, rep_of_a=None, rep_of_p=None):
+    """Engine decode order, lanes mapped back to replicas."""
+    def conv(ph, lane):
+        m = rep_of_a if ph == "as" else rep_of_p
+        r = lane if m is None else m[lane]
+        assert r >= 0, f"work row on a padding lane: {ph} lane {lane}"
+        return r
+
+    def emit(tick0, t, ph, arrays, out):
+        rep, bid = arrays[f"{ph}_rep"], arrays[f"{ph}_bid"]
+        for j in range(rep.shape[1]):
+            if int(rep[t, j]) < 0:
+                continue
+            slots = ((int(arrays["as_eslot"][t, j]),
+                      int(arrays["as_gslot"][t, j])) if ph == "as"
+                     else (int(arrays[f"{ph}_slot"][t, j]),))
+            out.append((tick0 + t, ph, conv(ph, int(rep[t, j])),
+                        int(bid[t, j]), slots))
+
+    out, tick0 = [], 0
+    for seg in sched.segments:
+        runs = seg.runs if hasattr(seg, "runs") else [seg]
+        for run in runs:
+            arrays = run.arrays if hasattr(run, "arrays") else {
+                k: getattr(run, k) for k in
+                ("pf_rep", "pf_bid", "pf_slot", "pb_rep", "pb_bid",
+                 "pb_slot", "as_rep", "as_bid", "as_eslot", "as_gslot")}
+            sig = run.sig if hasattr(run, "sig") else ("pf", "pb", "as")
+            T = (run.n_ticks if hasattr(run, "n_ticks")
+                 else int(arrays["pf_rep"].shape[0]))
+            for t in range(T):
+                for ph in ("pb", "pf", "as"):      # engine phase order
+                    if ph in sig:
+                        emit(tick0, t, ph, arrays, out)
+            tick0 += T
+    return out
+
+
+@settings(**SET)
+@given(method=st.sampled_from(["pubsub", "vfl_ps"]),
+       n_rep=st.integers(2, 6), n_devices=st.sampled_from([2, 3, 4]),
+       B=st.sampled_from([32, 64]), jitter=st.floats(0.0, 0.3),
+       pack=st.sampled_from(["packed", "segmented"]))
+def test_device_lower_is_pure_relabelling(method, n_rep, n_devices, B,
+                                          jitter, pack):
+    sched = _sched(method, n_rep, B, jitter, pack)
+    low = device_lower(sched, n_devices)
+    pa, pp = low.slab_a, low.slab_p
+    assert max(pa.device_load) - min(pa.device_load) <= 1
+    assert max(pp.device_load) - min(pp.device_load) <= 1
+    assert low.n_rep_a % n_devices == 0
+    assert low.n_rep_p % n_devices == 0
+    # decode order survives the lane map exactly, slots and bids intact
+    assert _op_stream(low, pa.rep_of, pp.rep_of) == _op_stream(sched)
+    # ring-slot lifetimes are layout-invariant: every non-rep array is
+    # byte-identical between the original and the lowered schedule
+    for s, l in zip(sched.segments, low.segments):
+        s_runs = s.runs if hasattr(s, "runs") else [s]
+        l_runs = l.runs if hasattr(l, "runs") else [l]
+        assert len(s_runs) == len(l_runs)
+        for sr, lr in zip(s_runs, l_runs):
+            if hasattr(sr, "arrays"):
+                assert sr.sig == lr.sig
+                for k, v in sr.arrays.items():
+                    if not k.endswith("_rep"):
+                        assert np.array_equal(v, lr.arrays[k]), k
+            else:
+                for k in ("pf_bid", "pf_slot", "pb_bid", "pb_slot",
+                          "as_bid", "as_eslot", "as_gslot", "as_epoch",
+                          "agg_a", "agg_p"):
+                    assert np.array_equal(getattr(sr, k),
+                                          getattr(lr, k)), k
+
+
 @settings(**SET)
 @given(seed=st.integers(0, 2**16), sigma=st.floats(0.0, 2.0))
 def test_cut_layer_dp_noise_distribution(seed, sigma):

@@ -101,6 +101,38 @@ def test_shard_store_roundtrip_and_views(tmp_path):
     assert not is_feature_source(X)
 
 
+def test_threaded_gather_bytes_identical_to_sequential(tmp_path):
+    """The per-shard gather thread pool must be a pure latency
+    optimization: same bytes as the sequential path, in any regime
+    (auto below/above the engage threshold, forced pool, forced
+    sequential, duplicate + reversed + single-shard row patterns)."""
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(5000, 6)).astype(np.float32)
+    d = str(tmp_path / "party")
+    write_array_shards(d, X, rows_per_shard=256)
+    seq = ShardStore.open(d, gather_workers=1)
+    auto = ShardStore.open(d)
+    forced = ShardStore.open(d, gather_workers=3)
+    patterns = [
+        rng.integers(0, 5000, size=8192),          # above auto threshold
+        rng.integers(0, 5000, size=64),            # below it
+        np.arange(5000)[::-1],                     # reversed full scan
+        np.repeat(np.array([0, 4999, 256, 255]), 5),   # dupes, edges
+        np.arange(100, 200),                       # single shard
+        np.array([], np.int64),                    # empty
+    ]
+    for rows in patterns:
+        want = X[rows]
+        for store in (seq, auto, forced):
+            got = store.gather(rows)
+            assert got.tobytes() == want.tobytes()
+    assert forced._pool is not None      # forced pool actually engaged
+    assert seq._pool is None
+    forced.close()
+    auto.close()
+    assert forced._pool is None
+
+
 def test_sharded_generator_deterministic_and_idempotent(tmp_path):
     root = str(tmp_path / "credit")
     write_sharded("credit", root, seed=3, scale=0.01, chunk_rows=100,
