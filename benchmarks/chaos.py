@@ -1,0 +1,133 @@
+"""Chaos sweep: crash/straggler severity vs architecture (ISSUE 8).
+
+The paper's claim under test: the Publisher/Subscriber pool absorbs
+partial failure (surviving subscribers take over the shared job queue;
+a rejoining replica re-enters at the next Eq. 5 sync barrier), while
+the paired baselines stall their barrier partners for the whole outage.
+We sweep one fault scenario per severity over {pubsub, vfl_ps} and
+record accuracy + wall-clock degradation relative to each method's own
+healthy run, then re-run the worst straggler under Algorithm 2's
+planned (w_a, w_p, B) to answer: does the planner's choice survive a
+straggling party?
+
+Fault times are placed at fractions of the method's HEALTHY simulated
+duration, so severities are comparable across methods with different
+baseline speeds.  Everything lands in `BENCH_fault.json`; CSV rows keep
+the harness contract.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.api import (CrashFault, ExperimentConfig, FaultPlan, Session,
+                       StragglerFault)
+
+from benchmarks.common import EPOCHS, SCALE, SEED, emit, run_point
+
+BASE = dict(dataset="credit", scale=SCALE, n_epochs=EPOCHS,
+            batch_size=64, w_a=8, w_p=8, seed=SEED)
+
+# (n passive crashes, outage length /T, straggler factor)
+SEVERITIES = {
+    "mild":     (1, 0.15, 1.5),
+    "moderate": (2, 0.30, 2.5),
+    "severe":   (3, 0.50, 4.0),
+}
+
+
+def _plan_for(T: float, severity: str) -> FaultPlan:
+    n_crash, outage, factor = SEVERITIES[severity]
+    crashes = tuple(
+        CrashFault(side="p", replica=1 + i, at=(0.2 + 0.1 * i) * T,
+                   rejoin_after=outage * T)
+        for i in range(n_crash))
+    stragglers = (StragglerFault(side="a", replica=0, factor=factor,
+                                 start=0.1 * T, ramp=0.2 * T),)
+    return FaultPlan(crashes=crashes, stragglers=stragglers)
+
+
+def _healthy_T(cfg: ExperimentConfig) -> float:
+    return Session(cfg).compile().sim.total_time
+
+
+def _record(name: str, healthy, faulty) -> dict:
+    slowdown = faulty["sim_s"] / max(healthy["sim_s"], 1e-12)
+    rec = {
+        "final": faulty["final"], "final_healthy": healthy["final"],
+        "metric": faulty["metric"],
+        "acc_drop": healthy["final"] - faulty["final"],
+        "sim_s": faulty["sim_s"], "sim_s_healthy": healthy["sim_s"],
+        "slowdown": slowdown,
+        "staleness": faulty["staleness"],
+        "faults": faulty.metrics.get("fault_stats"),
+    }
+    emit(name, faulty["sim_s_per_epoch"] * 1e6,
+         f"{faulty['metric']}={faulty['final']:.4f};"
+         f"slowdown={slowdown:.2f}x;"
+         f"acc_drop={rec['acc_drop']:+.4f}")
+    return rec
+
+
+def run() -> None:
+    out = {"config": {**BASE, "severities": {
+        k: dict(zip(("n_crashes", "outage_frac", "straggler_factor"), v))
+        for k, v in SEVERITIES.items()}}}
+
+    for method in ("pubsub", "vfl_ps"):
+        cfg = ExperimentConfig(method=method, **BASE)
+        T = _healthy_T(cfg)
+        healthy = run_point(cfg)
+        rows = {"healthy": {"final": healthy["final"],
+                            "sim_s": healthy["sim_s"], "T": T}}
+        for severity in SEVERITIES:
+            fp = _plan_for(T, severity)
+            sess = Session(ExperimentConfig(method=method, **BASE,
+                                            faults=fp),
+                           reuse="structural")
+            faulty = sess.run()
+            faulty.metrics["fault_stats"] = \
+                sess.compile().sim.stats["faults"]
+            rows[severity] = _record(f"chaos/{method}/{severity}",
+                                     healthy, faulty)
+        out[method] = rows
+
+    # --- does Algorithm 2's (w_a, w_p, B) survive a straggling party? --
+    # "straggling party" = half the passive party's replicas (the
+    # planner's bottleneck side) plus one active worker drift to the
+    # severe factor — a lone straggler among the planner's
+    # over-provisioned actives never touches the critical path
+    pcfg = ExperimentConfig(method="pubsub", **{**BASE, "w_a": 4,
+                                                "w_p": 4},
+                            use_planner=True)
+    psess = Session(pcfg)
+    T = psess.compile().sim.total_time
+    w_p_planned = psess.plan().w_p
+    planned_healthy = run_point(pcfg)
+    factor = SEVERITIES["severe"][2]
+    worst = FaultPlan(stragglers=tuple(
+        StragglerFault(side="p", replica=j, factor=factor,
+                       start=0.1 * T, ramp=0.2 * T)
+        for j in range(max(1, w_p_planned // 2))) + (
+        StragglerFault(side="a", replica=0, factor=factor,
+                       start=0.1 * T, ramp=0.2 * T),))
+    planned_faulty = run_point(ExperimentConfig(
+        method="pubsub", **{**BASE, "w_a": 4, "w_p": 4},
+        use_planner=True, faults=worst))
+    out["planner_under_straggler"] = {
+        "plan": planned_healthy["plan"],
+        "n_stragglers_p": max(1, w_p_planned // 2),
+        **_record("chaos/planner/severe_straggler", planned_healthy,
+                  planned_faulty),
+    }
+
+    with open("BENCH_fault.json", "w") as fh:
+        json.dump(out, fh, indent=2)
+    emit("chaos/bench_json", 0.0,
+         f"wrote={os.path.abspath('BENCH_fault.json')}")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+    emit_header()
+    run()

@@ -15,7 +15,7 @@ from benchmarks.common import emit_header
 
 SUITES = ("kernels", "replay_throughput", "accuracy", "efficiency",
           "heterogeneity", "privacy", "workers", "batch_size", "ablation",
-          "multiparty", "criteo", "cut_placement", "roofline")
+          "multiparty", "criteo", "cut_placement", "roofline", "chaos")
 
 
 def main() -> None:

@@ -9,16 +9,21 @@ See `docs/architecture.md` §Session lifecycle.  The legacy
 `repro.core.runtime.run_experiment` is a thin wrapper over
 `Session(cfg).run().metrics`.
 """
-from repro.api.callbacks import (CheckpointEvery, EarlyStop, EvalEvery,
-                                 History, MetricStream)
+from repro.api.callbacks import (CheckpointEvery, DriverCrash, EarlyStop,
+                                 EvalEvery, History, MetricStream,
+                                 Watchdog, run_with_failover)
 from repro.api.session import (CompiledProgram, ExperimentConfig, Planned,
                                Prepared, RunResult, Session, build_profile,
                                compile_stats, reset_compile_cache)
 from repro.api.sweep import SweepResult, run_sweep
+from repro.core.faults import (ChannelDropFault, CrashFault, FaultPlan,
+                               StragglerFault)
 
 __all__ = [
-    "CheckpointEvery", "CompiledProgram", "EarlyStop", "EvalEvery",
-    "ExperimentConfig", "History", "MetricStream", "Planned", "Prepared",
-    "RunResult", "Session", "SweepResult", "build_profile",
-    "compile_stats", "reset_compile_cache", "run_sweep",
+    "ChannelDropFault", "CheckpointEvery", "CompiledProgram", "CrashFault",
+    "DriverCrash", "EarlyStop", "EvalEvery", "ExperimentConfig",
+    "FaultPlan", "History", "MetricStream", "Planned", "Prepared",
+    "RunResult", "Session", "StragglerFault", "SweepResult", "Watchdog",
+    "build_profile", "compile_stats", "reset_compile_cache",
+    "run_sweep", "run_with_failover",
 ]

@@ -18,9 +18,15 @@ Typical use with the Session API::
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Set, Tuple
 
 from repro.core.trainer import EpochContext
+
+
+class DriverCrash(RuntimeError):
+    """Injected driver-process failure, raised by `Watchdog` after the
+    configured epoch completes.  `run_with_failover` treats it as a
+    process death: restore the latest checkpoint and resume."""
 
 
 @dataclass
@@ -107,6 +113,57 @@ class CheckpointEvery:
             from repro.checkpoint.store import save_state
             save_state(self.path, ctx.state, step=ctx.epoch,
                        engine=ctx.engine)
+
+
+@dataclass
+class Watchdog:
+    """Checkpoint every `every` epochs AND simulate driver-process death
+    at the epochs in `crash_at` (raising `DriverCrash` after that
+    epoch's checkpoint lands).  Each configured crash fires exactly once
+    per instance, so the retry loop in `run_with_failover` makes
+    progress instead of dying at the same epoch forever.
+
+    The checkpoint is written before the crash is raised, and
+    `replay_with` appends each epoch to the run history before callbacks
+    run — so nothing evaluated is lost and a resumed run is bit-identical
+    to an uninterrupted one (see tests/test_failover.py)."""
+    path: str
+    every: int = 1
+    crash_at: Tuple[int, ...] = ()
+    _fired: Set[int] = field(default_factory=set, repr=False)
+
+    def __call__(self, ctx: EpochContext) -> None:
+        if ctx.epoch % self.every == 0 or ctx.epoch == ctx.n_epochs:
+            # deferred so `repro.api` imports without msgpack installed
+            from repro.checkpoint.store import save_state
+            save_state(self.path, ctx.state, step=ctx.epoch,
+                       engine=ctx.engine)
+        if ctx.epoch in self.crash_at and ctx.epoch not in self._fired:
+            self._fired.add(ctx.epoch)
+            raise DriverCrash(f"injected driver crash after epoch "
+                              f"{ctx.epoch}")
+
+
+def run_with_failover(session, watchdog: Watchdog, *, callbacks=(),
+                      max_restarts: int = 8, **run_kw):
+    """Drive `session.run` under a `Watchdog`, restoring from its latest
+    checkpoint whenever the driver "dies" (`DriverCrash`) and resuming
+    until the run completes.  Corrupt checkpoints surface as
+    `CheckpointCorrupt` rather than resuming from garbage.  Returns the
+    final `RunResult`; raises after `max_restarts` recoveries."""
+    from repro.checkpoint.store import restore_state
+    state = run_kw.pop("state", None)
+    restarts = 0
+    while True:
+        try:
+            return session.run(state=state,
+                               callbacks=[watchdog, *callbacks], **run_kw)
+        except DriverCrash:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            engine = session.compile().engine
+            state = engine.load_state(restore_state(watchdog.path))
 
 
 @dataclass

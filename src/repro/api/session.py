@@ -68,6 +68,7 @@ from repro.data.shards import ArrayFeatures, Permuted
 from repro.data.synthetic import load, open_sharded, shape_of, write_sharded
 from repro.data.vertical import (VerticalView, psi_align, psi_intersect,
                                  vertical_split)
+from repro.core.faults import FaultPlan
 from repro.dp.gdp import GDPConfig, noise_sigma
 
 
@@ -95,6 +96,11 @@ class ExperimentConfig:
     disable_planner: bool = False    # fixed equal workers (w/o DP algo)
     engine: str = "compiled"         # replay engine: "compiled" | "event"
     pack: str = "segmented"          # lane layout: "segmented"|"packed"|"dense"
+    faults: Optional["FaultPlan"] = None   # deterministic failure
+                                     # scenario (core.faults.FaultPlan or
+                                     # its to_dict() form) injected into
+                                     # the DES — see docs/architecture.md
+                                     # §Fault injection & failover
     n_devices: int = 1               # lay the replica/point axes over a
                                      # 1-D ("replica",) device mesh
                                      # (compiled engine, pack != "dense";
@@ -248,12 +254,19 @@ class Session:
     cache (see module docstring for the reuse scopes)."""
 
     def __init__(self, cfg: ExperimentConfig, *, reuse: str = "exact",
-                 n_devices: Optional[int] = None):
+                 n_devices: Optional[int] = None, faults=None):
         if reuse not in ("exact", "structural"):
             raise ValueError(f"reuse {reuse!r} not in ('exact', "
                              f"'structural')")
         if n_devices is not None:
             cfg = dataclasses.replace(cfg, n_devices=int(n_devices))
+        if faults is not None:
+            cfg = dataclasses.replace(cfg, faults=faults)
+        if isinstance(cfg.faults, dict):      # JSON form (workers, bench)
+            cfg = dataclasses.replace(cfg,
+                                      faults=FaultPlan.from_dict(cfg.faults))
+        if cfg.faults is not None:
+            cfg.faults.validate(cfg.method)
         if cfg.n_devices > 1 and cfg.engine != "compiled":
             raise ValueError("n_devices > 1 requires engine='compiled' "
                              f"(got engine={cfg.engine!r})")
@@ -410,7 +423,8 @@ class Session:
             n_epochs=cfg.n_epochs, w_a=w_a, w_p=w_p, profile=prep.profile,
             p=cfg.p, q=cfg.q,
             t_ddl=(0.0 if cfg.disable_deadline else cfg.t_ddl),
-            dt0=cfg.dt0, jitter=cfg.jitter, seed=cfg.seed)
+            dt0=cfg.dt0, jitter=cfg.jitter, seed=cfg.seed,
+            faults=cfg.faults)
         n_rep_a, n_rep_p = replica_counts(cfg.method, w_a, w_p)
         self._planned = Planned(w_a=w_a, w_p=w_p, batch_size=B,
                                 n_rep_a=n_rep_a, n_rep_p=n_rep_p,
@@ -453,6 +467,11 @@ class Session:
             ("model", (cfg.resnet, cfg.depth)),
             ("dp", self._dp_on()),
             ("devices", cfg.n_devices),
+            # a fault plan reshapes the event log (and hence the lowered
+            # tick program), so faulty configs never share a compiled
+            # program with healthy ones — or with other fault plans
+            ("faults", cfg.faults.key() if cfg.faults is not None
+             else None),
         )
 
     def compile_key(self) -> tuple:

@@ -16,11 +16,19 @@ Two surfaces:
 from __future__ import annotations
 
 import os
+import zlib
 from typing import Any, Optional
 
 import msgpack
 import numpy as np
 import jax
+
+
+class CheckpointCorrupt(RuntimeError):
+    """The checkpoint file failed integrity verification (truncated,
+    bit-flipped, or not a `save_state` file).  Restore refuses to hand
+    back a partially-decoded state; failover should fall back to an
+    older checkpoint or a fresh start."""
 
 
 def _pack(obj):
@@ -115,7 +123,11 @@ def save_state(path: str, state: Any, *, step: Optional[int] = None,
     exporter = getattr(engine, "export_state", None)
     if exporter is not None:
         state = exporter(state)
-    payload = {"state": _encode(state), "step": step, "fmt": "state-v1"}
+    # state-v2: the encoded state+step ride inside one msgpack blob whose
+    # crc32 is stored alongside — a torn write or flipped bit anywhere in
+    # the blob fails verification instead of decoding into garbage.
+    inner = msgpack.packb({"state": _encode(state), "step": step})
+    payload = {"fmt": "state-v2", "crc": zlib.crc32(inner), "blob": inner}
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(tmp, "wb") as f:
@@ -123,17 +135,44 @@ def save_state(path: str, state: Any, *, step: Optional[int] = None,
     os.replace(tmp, path)
 
 
+def _read_state_payload(path: str) -> dict:
+    """Read + verify a `save_state` file; the inner {"state","step"}
+    dict.  Raises `CheckpointCorrupt` on any integrity failure."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    try:
+        payload = msgpack.unpackb(raw, strict_map_key=False)
+    except Exception as e:
+        raise CheckpointCorrupt(f"{path}: unreadable ({e!r})") from e
+    if not isinstance(payload, dict):
+        raise CheckpointCorrupt(f"{path}: not a save_state checkpoint")
+    fmt = payload.get("fmt")
+    if fmt == "state-v2":
+        blob, crc = payload.get("blob"), payload.get("crc")
+        if not isinstance(blob, bytes) or zlib.crc32(blob) != crc:
+            raise CheckpointCorrupt(f"{path}: checksum mismatch")
+        try:
+            return msgpack.unpackb(blob, strict_map_key=False)
+        except Exception as e:
+            raise CheckpointCorrupt(f"{path}: blob undecodable "
+                                    f"({e!r})") from e
+    if fmt == "state-v1":         # pre-checksum files stay restorable
+        return payload
+    raise CheckpointCorrupt(f"{path}: not a save_state checkpoint "
+                            f"(fmt={fmt!r})")
+
+
 def restore_state(path: str) -> Any:
     """Inverse of `save_state`: the nested structure with numpy leaves.
-    Feed it to `engine.load_state(...)` to re-wrap engine state types."""
-    with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), strict_map_key=False)
-    assert payload.get("fmt") == "state-v1", "not a save_state checkpoint"
-    return _decode(payload["state"])
+    Feed it to `engine.load_state(...)` to re-wrap engine state types.
+    Raises `CheckpointCorrupt` if the file fails crc verification."""
+    return _decode(_read_state_payload(path)["state"])
 
 
 def load_step(path: str) -> Optional[int]:
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), object_hook=_unpack,
-                                  strict_map_key=False)
-    return payload.get("step")
+        head = msgpack.unpackb(f.read(), object_hook=_unpack,
+                               strict_map_key=False)
+    if isinstance(head, dict) and head.get("fmt") == "state-v2":
+        return _read_state_payload(path).get("step")
+    return head.get("step")

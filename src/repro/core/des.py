@@ -24,6 +24,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.cost_model import CostModel, SystemProfile
+from repro.core.faults import FaultPlan
 from repro.core.semi_async import delta_t
 from repro.core.sim import Engine, Store
 
@@ -46,6 +47,7 @@ class RunConfig:
     jitter: float = 0.10          # lognormal per-task compute jitter
     seed: int = 0
     agg_overhead: float = 0.02    # PS aggregate+broadcast (intra-party)
+    faults: Optional[FaultPlan] = None   # deterministic failure scenario
 
     @property
     def n_batches(self) -> int:
@@ -114,6 +116,73 @@ def simulate(cfg: RunConfig) -> SimResult:
         if no_ddl:
             return ("get", store)
         return ("get_timeout", store, cfg.t_ddl)
+
+    # ---- fault injection (core.faults): everything below is driven by
+    # the declarative FaultPlan so faults land in the event log at
+    # deterministic times under the run seed.
+    fp = cfg.faults if (cfg.faults is not None
+                        and not cfg.faults.empty) else None
+    if fp is not None:
+        fp.validate(cfg.method)
+        if fp.drops and no_ddl:
+            raise ValueError(
+                "channel-drop faults require a finite t_ddl (dropped "
+                "messages are absorbed by the waiting-deadline machinery; "
+                "without it subscribers block forever)")
+    fstats = {"crashes": 0, "rejoins": 0, "stalls": 0, "chan_dropped": 0,
+              "rejoin_staleness": []}
+    _fired: set = set()
+
+    def rate(side: str, j: int) -> float:
+        """Time-varying straggler slowdown (exactly 1.0 when healthy)."""
+        return 1.0 if fp is None else fp.multiplier(side, j, eng.now)
+
+    def _next_crash(side: str, j: int):
+        for c in (fp.crashes_for(side, j) if fp is not None else ()):
+            if c not in _fired and eng.now >= c.at:
+                return c
+        return None
+
+    def _outage(side: str, j: int):
+        """Pubsub fail-stop window, entered at the worker's next
+        scheduling point after the configured time.  The worker emits no
+        events during the outage (its lanes go dark in the lowering);
+        returns True for a permanent crash — the caller exits and the
+        shared job queue lets survivors absorb its work."""
+        while True:
+            c = _next_crash(side, j)
+            if c is None:
+                return False
+            _fired.add(c)
+            fstats["crashes"] += 1
+            if math.isinf(c.rejoin_after):
+                eng.log("crash", w=j, side=side, final=True)
+                return True
+            eng.log("crash", w=j, side=side, final=False)
+            till = c.at + c.rejoin_after
+            if till > eng.now:
+                yield ("sleep", till - eng.now)
+            stale = float(eng.now - c.at)
+            fstats["rejoins"] += 1
+            fstats["rejoin_staleness"].append(stale)
+            eng.log("rejoin", w=j, side=side, stale=stale)
+
+    def _stall(side: str, k: int):
+        """Paired-method crash = stall: the strict pairing has no pool
+        to absorb a fail-stop, so the worker just goes unavailable and
+        every barrier partner waits (work conserved, wall time pays)."""
+        while True:
+            c = _next_crash(side, k)
+            if c is None:
+                return
+            _fired.add(c)
+            fstats["stalls"] += 1
+            eng.log("stall", w=k, side=side)
+            till = c.at + c.rejoin_after
+            if till > eng.now:
+                yield ("sleep", till - eng.now)
+            eng.log("resume", w=k, side=side)
+
     busy = {"a": 0.0, "p": 0.0}
     wait = {"a": 0.0, "p": 0.0}
     comm = {"mb": 0.0, "msgs": 0}
@@ -138,14 +207,45 @@ def simulate(cfg: RunConfig) -> SimResult:
         grad_stores = [Store(eng) for _ in range(w_p)]
         job_queue: deque = deque()
         ctr = {"published": 0, "consumed": 0}
+        live = {"p": w_p}                 # passive workers not failed-stop
         sync_marks = _pubsub_sync_epochs(cfg)
+
+        if fp is not None and fp.drops:
+            # lose messages in transit: every drop_every-th arrival in a
+            # burst window never reaches the channel (sim.Store counts it
+            # in n_dropped; the deadline machinery absorbs the loss like
+            # an eviction)
+            chan_ctr = {"emb": 0, "grad": 0}
+
+            def _drop_filter(chan):
+                bursts = tuple(d for d in fp.drops if d.channel == chan)
+
+                def f(item):
+                    for d in bursts:
+                        if d.start <= eng.now < d.start + d.duration:
+                            chan_ctr[chan] += 1
+                            if chan_ctr[chan] % d.drop_every == 0:
+                                fstats["chan_dropped"] += 1
+                                eng.log("chan_drop", chan=chan)
+                                return True
+                            return False
+                    return False
+                return f
+
+            emb_pool.drop_filter = _drop_filter("emb")
+            _grad_filter = _drop_filter("grad")
+            for _gs in grad_stores:
+                _gs.drop_filter = _grad_filter
 
         def passive_worker(j):
             inflight = 0
             while True:
+                if fp is not None and (yield from _outage("p", j)):
+                    live["p"] -= 1
+                    return              # fail-stop: pool absorbs the jobs
                 ok, g = grad_stores[j].try_get()
                 if ok:
-                    dt = t_bp * speed_p[j]
+                    dt = t_bp * speed_p[j] * rate("p", j)
                     yield ("sleep", dt)
                     busy["p"] += dt
                     eng.log("p_bwd", w=j, bid=g)
@@ -153,7 +253,7 @@ def simulate(cfg: RunConfig) -> SimResult:
                     continue
                 if job_queue and inflight < cfg.p:
                     bid, ep = job_queue.popleft()
-                    dt = t_fp * speed_p[j]
+                    dt = t_fp * speed_p[j] * rate("p", j)
                     yield ("sleep", dt)
                     busy["p"] += dt
                     eng.log("p_fwd", w=j, bid=bid, ep=ep)
@@ -171,7 +271,7 @@ def simulate(cfg: RunConfig) -> SimResult:
                     eng.log("drop", w=j, side="p")
                     inflight = max(inflight - 1, 0)
                     continue
-                dt = t_bp * speed_p[j]
+                dt = t_bp * speed_p[j] * rate("p", j)
                 yield ("sleep", dt)
                 busy["p"] += dt
                 eng.log("p_bwd", w=j, bid=g)
@@ -179,12 +279,19 @@ def simulate(cfg: RunConfig) -> SimResult:
 
         def active_worker(i):
             while True:
+                if fp is not None and (yield from _outage("a", i)):
+                    return              # fail-stop: pool absorbs the load
                 t0 = eng.now
                 msg = yield recv(emb_pool)
                 if msg is None:
+                    # in-transit channel drops are subtracted like
+                    # evictions; a dead passive party (live == 0) can
+                    # never publish again, so stop once the pool drains
                     outstanding = (ctr["published"] - ctr["consumed"]
-                                   - emb_pool.n_evicted)
-                    if not job_queue and outstanding <= 0:
+                                   - emb_pool.n_evicted
+                                   - emb_pool.n_dropped)
+                    if (not job_queue or live["p"] == 0) \
+                            and outstanding <= 0:
                         return          # terminal wait: not starvation
                     wait["a"] += eng.now - t0
                     drops["deadline"] += 1
@@ -193,7 +300,7 @@ def simulate(cfg: RunConfig) -> SimResult:
                 wait["a"] += eng.now - t0
                 bid, j, ep = msg
                 ctr["consumed"] += 1
-                dt = t_a * speed_a[i]
+                dt = t_a * speed_a[i] * rate("a", i)
                 yield ("sleep", dt)
                 busy["a"] += dt
                 eng.log("a_step", w=i, bid=bid, ep=ep)
@@ -271,10 +378,12 @@ def simulate(cfg: RunConfig) -> SimResult:
                 return need_round, need_epoch, ep
 
             while todo or inflight:
+                if fp is not None:
+                    yield from _stall("p", k)
                 ok, g = grad_stores[k].try_get()
                 if not ok and todo and inflight < pipeline:
                     bid, ep = todo.popleft()
-                    dt = t_fp * speed_p[k]
+                    dt = t_fp * speed_p[k] * rate("p", k)
                     yield ("sleep", dt)
                     busy["p"] += dt
                     eng.log("p_fwd", w=k, bid=bid, ep=ep)
@@ -285,7 +394,7 @@ def simulate(cfg: RunConfig) -> SimResult:
                     t0 = eng.now
                     g = yield ("get", grad_stores[k])
                     wait["p"] += eng.now - t0
-                dt = t_bp * speed_p[k]
+                dt = t_bp * speed_p[k] * rate("p", k)
                 yield ("sleep", dt)
                 busy["p"] += dt
                 eng.log("p_bwd", w=k, bid=g)
@@ -305,11 +414,13 @@ def simulate(cfg: RunConfig) -> SimResult:
         def pair_active(k, batches):
             done_in_epoch: Dict[int, int] = {}
             for _ in range(len(batches)):
+                if fp is not None:
+                    yield from _stall("a", k)
                 t0 = eng.now
                 msg = yield ("get", emb_stores[k])
                 wait["a"] += eng.now - t0
                 bid, ep = msg
-                dt = t_a * speed_a[k]
+                dt = t_a * speed_a[k] * rate("a", k)
                 yield ("sleep", dt)
                 busy["a"] += dt
                 eng.log("a_step", w=k, bid=bid, ep=ep)
@@ -356,7 +467,7 @@ def simulate(cfg: RunConfig) -> SimResult:
         stats={"drops": drops, "msgs": comm["msgs"],
                "busy_a": busy["a"], "busy_p": busy["p"],
                "wait_a": wait["a"], "wait_p": wait["p"],
-               "w_a": w_a, "w_p": w_p},
+               "w_a": w_a, "w_p": w_p, "faults": fstats},
     )
 
 

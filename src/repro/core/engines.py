@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.des import RunConfig
+from repro.core.faults import live_sets
 from repro.core.schedule import _rows_table
 from repro.core.semi_async import aggregate, sync_epochs
 from repro.models import tabular
@@ -177,6 +178,14 @@ class EventReplayEngine:
         cur_epoch = 0
         cuts: List[int] = []
         aggs: List[bool] = []
+        # fault lowering: replicas inside a crash outage when an epoch
+        # boundary lands sit out that boundary's aggregation — the same
+        # live-set snapshots, at the same positions in the same sorted
+        # stream, as the schedule compiler derives (core.schedule._lower)
+        dead_a: set = set()
+        dead_p: set = set()
+        lives: List[Optional[tuple]] = []
+        rejoins: List[Tuple[str, int, float]] = []
         last_t, last_kind = (events[-1][0], events[-1][1]) if events \
             else (None, None)
         for i, (t, kind, pl) in enumerate(events):
@@ -192,6 +201,20 @@ class EventReplayEngine:
                     rep_p, ver = grad.pop(pl["bid"])
                     staleness.append(version_p[rep_p] - ver)
                     version_p[rep_p] += 1
+            elif kind == "crash":
+                if pl["side"] == "a":
+                    dead_a.add(pl["w"] % n_rep_a)
+                else:
+                    dead_p.add(pl["w"] % n_rep_p)
+            elif kind == "rejoin":
+                if pl["side"] == "a":
+                    rep = pl["w"] % n_rep_a
+                    dead_a.discard(rep)
+                else:
+                    rep = pl["w"] % n_rep_p
+                    dead_p.discard(rep)
+                rejoins.append((pl["side"], rep,
+                                float(pl.get("stale", 0.0))))
             new_epoch = min(a_steps // n_batches, cfg.n_epochs - 1)
             if new_epoch > cur_epoch or (t == last_t and kind == last_kind):
                 for ep_done in range(cur_epoch + 1, new_epoch + 1):
@@ -199,11 +222,17 @@ class EventReplayEngine:
                     aggs.append(cfg.method == "avfl_ps" or
                                 (cfg.method == "pubsub" and
                                  ep_done in sync_marks))
+                    lives.append(live_sets(dead_a, dead_p,
+                                           n_rep_a, n_rep_p))
                 cur_epoch = new_epoch
         while len(cuts) < cfg.n_epochs:
             cuts.append(len(events))
             aggs.append(False)
+            lives.append(live_sets(dead_a, dead_p, n_rep_a, n_rep_p))
         self._cuts, self._aggs = cuts, aggs
+        self._live = lives
+        self._final_live = live_sets(dead_a, dead_p, n_rep_a, n_rep_p)
+        self.rejoins = rejoins
         self.staleness = staleness
         self.n_updates = a_steps
         self.versions_p = list(version_p)
@@ -332,8 +361,13 @@ class EventReplayEngine:
                     tp = _aggregate(tp)
 
         if self._aggs[epoch]:          # avfl_ps / pubsub Eq. 5 sync mark
-            ta = _aggregate(ta)
-            tp = _aggregate(tp)
+            live = self._live[epoch]
+            if live is None:           # healthy boundary: byte-identical
+                ta = _aggregate(ta)    # to the pre-fault path
+                tp = _aggregate(tp)
+            else:                      # survivors pull among themselves;
+                ta = _aggregate_live(ta, live[0])   # crashed replicas
+                tp = _aggregate_live(tp, live[1])   # keep frozen params
         return EventState(ta, oa, tp, op_, version_p, a_steps,
                           loss_vec, cnt_vec, emb_buf, grad_buf,
                           key=key, epoch=epoch + 1)
@@ -343,10 +377,17 @@ class EventReplayEngine:
         return state
 
     def params_mean(self, state: EventState) -> tuple:
-        th_a = aggregate(state.theta_a) if self.n_rep_a > 1 \
-            else state.theta_a[0]
-        th_p = aggregate(state.theta_p) if self.n_rep_p > 1 \
-            else state.theta_p[0]
+        def mean(reps, live):
+            # evaluation averages survivors only — a crashed replica's
+            # frozen params are not part of the served model.  An empty
+            # live set (every replica failed-stop) degenerates to the
+            # full mean: there is nothing better to serve.
+            if live is not None and 0 < len(live) < len(reps):
+                reps = [reps[i] for i in live]
+            return aggregate(reps) if len(reps) > 1 else reps[0]
+        fl = self._final_live
+        th_a = mean(state.theta_a, None if fl is None else fl[0])
+        th_p = mean(state.theta_p, None if fl is None else fl[1])
         return th_a, th_p
 
     def finish(self, state: EventState):
@@ -359,3 +400,20 @@ class EventReplayEngine:
 def _aggregate(replicas: List) -> List:
     agg = aggregate(replicas)
     return [jax.tree.map(lambda x: x, agg) for _ in range(len(replicas))]
+
+
+def _aggregate_live(replicas: List, live: tuple) -> List:
+    """PS pull restricted to the live subset: survivors aggregate among
+    themselves (and a replica rejoining at this boundary pulls the
+    survivor mean — its recorded staleness); dead replicas keep their
+    frozen params until a boundary they are live at.  A full subset is
+    routed through the healthy path so it stays byte-identical."""
+    if len(live) == len(replicas):
+        return _aggregate(replicas)
+    if not live:
+        return replicas               # whole party down: nothing to pull
+    agg = aggregate([replicas[i] for i in live])
+    out = list(replicas)
+    for i in live:
+        out[i] = jax.tree.map(lambda x: x, agg)
+    return out

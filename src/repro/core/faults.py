@@ -1,0 +1,189 @@
+"""Declarative fault plans for deterministic faulty-world simulation.
+
+A `FaultPlan` describes *what goes wrong* in a run — replica crashes
+with optional rejoin, straggler cadence drift (a time-varying speed
+multiplier), and channel-message drop bursts — as plain frozen data.
+`core.des.simulate` consumes it so every fault lands in the event log
+deterministically under the run seed; everything downstream (the
+schedule compiler, both replay engines, checkpointing) only ever sees
+the event log, which is what makes faulty worlds replay bit-for-bit
+across engines, lane packs and device counts (see
+docs/architecture.md §Fault injection & failover).
+
+Semantics by method:
+
+* ``pubsub`` — a `CrashFault` is a true fail-stop at the worker's next
+  scheduling point: the worker emits no events for its outage window
+  (dead lanes fall out of the lowering as masked lanes), its pending
+  jobs are taken over by the surviving pool (the shared job queue), and
+  on rejoin it re-enters through the PS pull path at the next Eq. 5
+  sync barrier with its staleness recorded on the ``rejoin`` event.
+  `ChannelDropFault` bursts lose messages in transit; the deadline
+  machinery absorbs them like evictions.
+* paired methods (``vfl``, ``vfl_ps``, ``avfl``, ``avfl_ps``) — a crash
+  is a *stall*: the strict pairing has no pool to absorb a fail-stop,
+  so the worker goes unavailable for the window and every barrier
+  partner waits (``stall``/``resume`` events; wall-time blows up, no
+  work is lost).  This is exactly the contrast `benchmarks/chaos.py`
+  measures.  Channel drops would deadlock the blocking handshakes and
+  are rejected.
+
+`StragglerFault` applies to every method: the replica's per-task time
+is scaled by a multiplier ramping linearly from 1 to `factor` over
+`ramp` time units starting at `start`.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, fields
+from typing import Dict, Tuple
+
+SIDES = ("a", "p")
+CHANNELS = ("emb", "grad")
+
+
+@dataclass(frozen=True)
+class CrashFault:
+    """Fail-stop of one replica at sim time `at`, rejoining
+    `rejoin_after` time units later (``math.inf`` = never: the replica
+    is gone for the rest of the run)."""
+    side: str                     # "a" (active) | "p" (passive)
+    replica: int
+    at: float
+    rejoin_after: float = math.inf
+
+
+@dataclass(frozen=True)
+class StragglerFault:
+    """Cadence drift: replica task time is multiplied by a factor that
+    ramps linearly 1 -> `factor` over `ramp` time units from `start`
+    and stays at `factor` afterwards (`ramp=0` = step change)."""
+    side: str
+    replica: int
+    factor: float = 2.0
+    start: float = 0.0
+    ramp: float = 0.0
+
+
+@dataclass(frozen=True)
+class ChannelDropFault:
+    """Lose messages in transit on one channel during a burst window:
+    every `drop_every`-th message arriving in
+    ``[start, start + duration)`` is dropped (`drop_every=1` drops
+    all)."""
+    channel: str                  # "emb" | "grad"
+    start: float
+    duration: float
+    drop_every: int = 2
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """The full failure scenario of one run.  Hashable and immutable, so
+    it participates in Session structural keys and schedule memo keys
+    directly; `key()` is the canonical tuple form."""
+    crashes: Tuple[CrashFault, ...] = ()
+    stragglers: Tuple[StragglerFault, ...] = ()
+    drops: Tuple[ChannelDropFault, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "crashes", tuple(self.crashes))
+        object.__setattr__(self, "stragglers", tuple(self.stragglers))
+        object.__setattr__(self, "drops", tuple(self.drops))
+        for f in self.crashes + self.stragglers:
+            if f.side not in SIDES:
+                raise ValueError(f"side {f.side!r} not in {SIDES}")
+            if f.replica < 0:
+                raise ValueError("replica must be >= 0")
+        for c in self.crashes:
+            if c.rejoin_after <= 0:
+                raise ValueError("rejoin_after must be > 0 (inf = never)")
+        for s in self.stragglers:
+            if s.factor <= 0:
+                raise ValueError("straggler factor must be > 0")
+            if s.ramp < 0:
+                raise ValueError("straggler ramp must be >= 0")
+        for d in self.drops:
+            if d.channel not in CHANNELS:
+                raise ValueError(f"channel {d.channel!r} not in {CHANNELS}")
+            if d.drop_every < 1:
+                raise ValueError("drop_every must be >= 1")
+
+    @property
+    def empty(self) -> bool:
+        return not (self.crashes or self.stragglers or self.drops)
+
+    def key(self) -> tuple:
+        """Canonical hashable form (Session structural keys, schedule
+        memo keys)."""
+        return (tuple(tuple(getattr(c, f.name) for f in fields(c))
+                      for c in self.crashes),
+                tuple(tuple(getattr(s, f.name) for f in fields(s))
+                      for s in self.stragglers),
+                tuple(tuple(getattr(d, f.name) for f in fields(d))
+                      for d in self.drops))
+
+    def validate(self, method: str) -> None:
+        """Method-dependent semantics checks (see module docstring)."""
+        if method != "pubsub":
+            if self.drops:
+                raise ValueError(
+                    "channel-drop faults require method='pubsub' (the "
+                    "paired methods' blocking handshakes would deadlock)")
+            for c in self.crashes:
+                if math.isinf(c.rejoin_after):
+                    raise ValueError(
+                        "a never-rejoining crash requires method="
+                        "'pubsub' (paired methods stall their barrier "
+                        "partners forever)")
+
+    # -- DES-side accessors ---------------------------------------------
+    def crashes_for(self, side: str, replica: int
+                    ) -> Tuple[CrashFault, ...]:
+        return tuple(sorted((c for c in self.crashes
+                             if c.side == side and c.replica == replica),
+                            key=lambda c: c.at))
+
+    def multiplier(self, side: str, replica: int, t: float) -> float:
+        """Compound straggler slowdown for (side, replica) at time `t`."""
+        m = 1.0
+        for s in self.stragglers:
+            if s.side != side or s.replica != replica:
+                continue
+            if t <= s.start:
+                continue
+            if s.ramp <= 0 or t >= s.start + s.ramp:
+                m *= s.factor
+            else:
+                m *= 1.0 + (s.factor - 1.0) * (t - s.start) / s.ramp
+        return m
+
+    # -- JSON round trip (subprocess workers, benchmarks) ---------------
+    def to_dict(self) -> Dict:
+        return {
+            "crashes": [c.__dict__.copy() for c in self.crashes],
+            "stragglers": [s.__dict__.copy() for s in self.stragglers],
+            "drops": [d.__dict__.copy() for d in self.drops],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "FaultPlan":
+        return cls(
+            crashes=tuple(CrashFault(**c) for c in d.get("crashes", ())),
+            stragglers=tuple(StragglerFault(**s)
+                             for s in d.get("stragglers", ())),
+            drops=tuple(ChannelDropFault(**x)
+                        for x in d.get("drops", ())))
+
+
+def live_sets(dead_a: set, dead_p: set, n_rep_a: int, n_rep_p: int):
+    """Canonical live-replica snapshot for an aggregation boundary:
+    ``None`` when every replica is live (the engines keep their
+    byte-identical healthy aggregation path), else a
+    ``(live_a, live_p)`` pair of canonical replica-index tuples.  Shared
+    by the schedule compiler and the event engine so both derive the
+    SAME subset from the same event stream."""
+    if not dead_a and not dead_p:
+        return None
+    return (tuple(i for i in range(n_rep_a) if i not in dead_a),
+            tuple(i for i in range(n_rep_p) if i not in dead_p))

@@ -157,6 +157,12 @@ def pipelined_train(theta_a, theta_p, xa_steps, xp_steps, y_steps, *,
 # ===========================================================================
 # compiled replay engine
 # ===========================================================================
+class StagingError(RuntimeError):
+    """A background staging failure (host gather / device_put in the
+    windowed double-buffer thread), re-raised on the replay thread as
+    the epoch's exception with the original chained via ``__cause__``."""
+
+
 def replica_mean(stack, perm: Optional[Tuple[int, ...]] = None):
     """PS aggregation over the stacked replica axis.
 
@@ -195,6 +201,30 @@ def _broadcast_mean(stack, perm: Optional[Tuple[int, ...]] = None):
         lambda x: jnp.broadcast_to(replica_mean(x, perm),
                                    x.shape).astype(x.dtype),
         stack)
+
+
+def _live_broadcast_mean(stack, perm: Tuple[int, ...], mask):
+    """Subset PS aggregation for faulty boundaries: mean over the `perm`
+    lanes (live replicas, canonical order, the exact `replica_mean`
+    gather-first chain — bitwise equal to `semi_async.aggregate` over
+    the same subset, and mesh-safe for the same reason), written back to
+    exactly the `mask` lanes.  Every other lane — a crashed replica
+    frozen through its outage, mesh padding — passes through untouched,
+    which is what lets a rejoining replica pull the survivor mean at a
+    later boundary while preserving the healthy lanes' bit pattern."""
+    idx = jnp.asarray(perm, jnp.int32)
+    m = jnp.asarray(mask)
+
+    def leaf(x):
+        g = x[idx]
+        w = 1.0 / g.shape[0]
+        acc = g[0] * w
+        for i in range(1, g.shape[0]):
+            acc = acc + g[i] * w
+        keep = m.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(keep,
+                         jnp.broadcast_to(acc, x.shape).astype(x.dtype), x)
+    return jax.tree.map(leaf, stack)
 
 
 @dataclass(frozen=True)
@@ -956,6 +986,9 @@ class CompiledReplayEngine:
             if self._hoist:
                 self._agg_a = jax.jit(bm_a)
                 self._agg_p = jax.jit(bm_p)
+        # live-subset boundary aggs (faulty worlds): built lazily per
+        # distinct (live set, stacked) pair — healthy runs never pay
+        self._live_agg_cache: Dict[tuple, Any] = {}
         self._hoist_plans = None
         if self._hoist:
             if schedule.pack == "segmented":
@@ -1268,6 +1301,71 @@ class CompiledReplayEngine:
             window=int(getattr(state, "window", 0)))
 
     # -- execution -------------------------------------------------------
+    def _epoch_agg(self, seg: int, *, stacked: bool = False):
+        """The boundary-aggregation callable for segment `seg` (None =
+        this segment has no Eq. 5 sync mark): the healthy `_agg_both`
+        for all-live boundaries — byte-identical to the pre-fault path —
+        or a cached live-subset variant when crashed replicas must sit
+        the pull out (schedule.epoch_live, from the fault lowering)."""
+        if not self.schedule.segments[seg].epoch_agg:
+            return None
+        el = self.schedule.epoch_live
+        live = el[seg] if el and seg < len(el) else None
+        if live is None:
+            return self._agg_both_stacked if stacked else self._agg_both
+        return self._live_agg_fn(live, stacked=stacked)
+
+    def _live_agg_fn(self, live: tuple, *, stacked: bool = False):
+        """Build (and cache) the jitted subset boundary agg for one
+        `(live_a, live_p)` snapshot.  Live sets arrive in CANONICAL
+        replica indices; they are translated to lanes through the slab
+        plans here.  A side whose subset is the full replica set routes
+        through the healthy agg fn; an empty side (whole party down) is
+        skipped — nothing to pull."""
+        key = (live, bool(stacked))
+        fn = self._live_agg_cache.get(key)
+        if fn is not None:
+            return fn
+        s = self.schedule
+        bm_a, bm_p = _agg_fns(self.spec, on_mesh=self.mesh is not None)
+
+        def side(reps, slab, n_lanes, bm):
+            n_real = slab.n_real if slab is not None else n_lanes
+            if len(reps) == n_real:
+                return bm
+            if not reps:
+                return None
+            if slab is not None and not slab.is_identity:
+                perm = tuple(slab.lane_of[r] for r in reps)
+            else:
+                perm = tuple(reps)
+            mask = np.zeros((n_lanes,), bool)
+            mask[list(perm)] = True
+            return lambda st: _live_broadcast_mean(st, perm, mask)
+
+        fa = side(live[0], s.slab_a, s.n_rep_a, bm_a)
+        fp = side(live[1], s.slab_p, s.n_rep_p, bm_p)
+
+        def agg(ta, tp):
+            if fa is not None:
+                ta = fa(ta)
+            if fp is not None:
+                tp = fp(tp)
+            return ta, tp
+        if stacked:
+            agg = jax.vmap(agg)
+        if self.mesh is not None:
+            # same pin discipline as `_agg_both`: canonical lane sharding
+            # on the inputs, output left free; the caller's
+            # `_place_state` / `shard_stacked_carry` re-pins at the
+            # epoch boundary
+            lane = mesh_replay.lane_sharding(self.mesh)
+            jfn = jax.jit(agg, in_shardings=(lane, lane))
+        else:
+            jfn = jax.jit(agg)
+        self._live_agg_cache[key] = jfn
+        return jfn
+
     def run_epoch(self, state: TrainerState, seg: int, data,
                   hyper: Optional[Dict] = None, *,
                   max_windows: Optional[int] = None) -> TrainerState:
@@ -1303,9 +1401,10 @@ class CompiledReplayEngine:
         else:
             xs = {k: v[seg] for k, v in self._xs.items()}
             carry = self._runner(carry, xs, data, hyper)
-        if self.schedule.segments[seg].epoch_agg:
+        agg = self._epoch_agg(seg)
+        if agg is not None:
             ta, oa, tp, op_, *rest = carry
-            ta, tp = self._agg_both(ta, tp)
+            ta, tp = agg(ta, tp)
             carry = (ta, oa, tp, op_, *rest)
         # re-pin canonical shardings at the epoch boundary (no-op copy
         # when nothing drifted) so every epoch's scan compiles against
@@ -1358,10 +1457,23 @@ class CompiledReplayEngine:
         carry = TrainerState(*state).carry
         t0 = time.perf_counter()
         pool = ThreadPoolExecutor(max_workers=1)
+
+        def take(fut, k):
+            # surface a background staging failure (host gather,
+            # device_put) as THIS epoch's exception, chained to the
+            # original — never a hang or an opaque re-raise
+            try:
+                return fut.result()
+            except StagingError:
+                raise
+            except BaseException as e:
+                raise StagingError(
+                    f"background staging of window {k} (epoch {seg}) "
+                    f"failed: {e!r}") from e
         try:
             fut = pool.submit(data.stage, wins[w0]) if w0 < end else None
             for k in range(w0, end):
-                blk = fut.result()
+                blk = take(fut, k)
                 if k + 1 < end:
                     # prefetch: host-gather + device-put window k+1 while
                     # window k's (async-dispatched) scan executes
@@ -1379,14 +1491,18 @@ class CompiledReplayEngine:
                 else:
                     carry = self._runner(carry, w.xs, wdata, hyper)
         finally:
-            pool.shutdown(wait=True)
+            # never block the failing epoch on a hung or still-running
+            # prefetch thread; cancel what has not started and let the
+            # daemonized worker drain on its own
+            pool.shutdown(wait=False, cancel_futures=True)
         data.stats["epoch_s"] += time.perf_counter() - t0
         if end < len(wins):
             return self._place_state(
                 TrainerState(*carry, epoch=int(state.epoch), window=end))
-        if self.schedule.segments[seg].epoch_agg:
+        agg = self._epoch_agg(seg)
+        if agg is not None:
             ta, oa, tp, op_, *rest = carry
-            ta, tp = self._agg_both(ta, tp)
+            ta, tp = agg(ta, tp)
             carry = (ta, oa, tp, op_, *rest)
         return self._place_state(
             TrainerState(*carry, epoch=seg + 1, window=0))
@@ -1503,9 +1619,10 @@ class CompiledReplayEngine:
         else:
             xs = {k: v[seg] for k, v in self._xs.items()}
             carry = self._stacked_runner(carry, xs, data, hyper)
-        if self.schedule.segments[seg].epoch_agg:
+        agg = self._epoch_agg(seg, stacked=True)
+        if agg is not None:
             ta, oa, tp, op_, *rest = carry
-            ta, tp = self._agg_both_stacked(ta, tp)
+            ta, tp = agg(ta, tp)
             carry = (ta, oa, tp, op_, *rest)
         if self.mesh is not None:
             carry = mesh_replay.shard_stacked_carry(self.mesh, carry)
@@ -1524,10 +1641,27 @@ class CompiledReplayEngine:
     def params_mean(self, state) -> tuple:
         """(theta_a, theta_p) averaged across replicas — for evaluation.
         On device-lowered layouts the mean runs over the real lanes in
-        canonical replica order (padding lanes excluded)."""
+        canonical replica order (padding lanes excluded).  In a faulty
+        world the mean covers the END-OF-LOG survivors only
+        (schedule.final_live, matching the event engine): a crashed
+        replica's frozen params are not part of the served model.  An
+        empty live side (whole party failed-stop) degenerates to the
+        full mean."""
         ta, _, tp, *_ = tuple(state)
-        return (replica_mean(ta, self.spec.agg_perm_a),
-                replica_mean(tp, self.spec.agg_perm_p))
+        s = self.schedule
+        pa, pp = self.spec.agg_perm_a, self.spec.agg_perm_p
+        fl = s.final_live
+        if fl is not None:
+            def live_perm(reps, slab, n_lanes, default):
+                n_real = slab.n_real if slab is not None else n_lanes
+                if not reps or len(reps) == n_real:
+                    return default
+                if slab is not None and not slab.is_identity:
+                    return tuple(slab.lane_of[r] for r in reps)
+                return tuple(reps)
+            pa = live_perm(fl[0], s.slab_a, s.n_rep_a, pa)
+            pp = live_perm(fl[1], s.slab_p, s.n_rep_p, pp)
+        return (replica_mean(ta, pa), replica_mean(tp, pp))
 
     def finish(self, state):
         """Unstack params/opt back to per-replica lists (canonical

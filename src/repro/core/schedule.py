@@ -74,6 +74,7 @@ from typing import Dict, List, Optional, Tuple, Union
 import numpy as np
 
 from repro.core.des import RunConfig
+from repro.core.faults import live_sets
 from repro.core.semi_async import sync_epochs
 from repro.data.vertical import batch_ids
 
@@ -221,6 +222,15 @@ class CompiledSchedule:
     lane_widths: Tuple[int, int, int] = (0, 0, 0)   # (L_pf, L_pb, L_as)
     slab_a: Optional["SlabPlan"] = None   # set by device_lower()
     slab_p: Optional["SlabPlan"] = None   # set by device_lower()
+    # fault lowering (core.faults): per-segment live-replica snapshot at
+    # the epoch boundary (None = all live, the healthy fast path), the
+    # live set at end-of-log (params_mean aggregates survivors only),
+    # and the (side, replica, staleness) record of every rejoin.  All in
+    # CANONICAL replica indices even after device_lower() — the engines
+    # translate to lanes through the slab plans.
+    epoch_live: Tuple[Optional[tuple], ...] = ()
+    final_live: Optional[tuple] = None
+    rejoins: Tuple[Tuple[str, int, float], ...] = ()
 
     @property
     def batch_rows(self) -> int:
@@ -556,6 +566,9 @@ class _Lowered:
     n_updates: int
     has_inscan: bool
     versions_p: List[int]
+    epoch_live: List[Optional[tuple]]
+    final_live: Optional[tuple]
+    rejoins: List[Tuple[str, int, float]]
 
 
 def _lower(cfg: RunConfig, events: List[Tuple], *, n_rep_a: int,
@@ -603,6 +616,16 @@ def _lower(cfg: RunConfig, events: List[Tuple], *, n_rep_a: int,
     cur_epoch = 0
     cuts: List[Tuple[int, bool]] = []  # (exclusive tick bound, epoch_agg)
     has_inscan = False
+    # fault bookkeeping: replicas inside a crash outage when an epoch
+    # boundary lands are excluded from that boundary's aggregation (they
+    # rejoin through the PS pull at the NEXT boundary they survive to).
+    # The event engine's pre-pass walks the identical sorted stream and
+    # snapshots at the identical cut positions, so both engines derive
+    # the same live sets from the same log.
+    dead_a: set = set()
+    dead_p: set = set()
+    epoch_live: List[Optional[tuple]] = []
+    rejoins: List[Tuple[str, int, float]] = []
     used: Dict[str, Dict[int, int]] = {"pf": {}, "pb": {}, "as": {}}
     pb_fusable = [-1] * n_rep_p   # tick of rep's latest p_bwd, if its
     #                               next op may still fuse onto that tick
@@ -690,6 +713,21 @@ def _lower(cfg: RunConfig, events: List[Tuple], *, n_rep_a: int,
                     has_inscan = True
                     barrier(t + 1)
 
+        elif kind == "crash":
+            if pl["side"] == "a":
+                dead_a.add(pl["w"] % n_rep_a)
+            else:
+                dead_p.add(pl["w"] % n_rep_p)
+
+        elif kind == "rejoin":
+            if pl["side"] == "a":
+                rep = pl["w"] % n_rep_a
+                dead_a.discard(rep)
+            else:
+                rep = pl["w"] % n_rep_p
+                dead_p.discard(rep)
+            rejoins.append((pl["side"], rep, float(pl.get("stale", 0.0))))
+
         # epoch boundary bookkeeping — identical to the event loop's
         new_epoch = min(a_steps_total // n_batches, cfg.n_epochs - 1)
         if new_epoch > cur_epoch or (t_sim == last_t and kind == last_kind):
@@ -698,6 +736,8 @@ def _lower(cfg: RunConfig, events: List[Tuple], *, n_rep_a: int,
                              (m == "pubsub" and ep_done in sync_marks))
                 cut = global_max + 1
                 cuts.append((cut, epoch_agg))
+                epoch_live.append(live_sets(dead_a, dead_p,
+                                            n_rep_a, n_rep_p))
                 barrier(cut)
             cur_epoch = new_epoch
 
@@ -705,11 +745,15 @@ def _lower(cfg: RunConfig, events: List[Tuple], *, n_rep_a: int,
     # in the first trailing segment; the rest are empty, never aggregated
     while len(cuts) < cfg.n_epochs:
         cuts.append((global_max + 1, False))
+        epoch_live.append(live_sets(dead_a, dead_p, n_rep_a, n_rep_p))
 
     return _Lowered(tb=tb, cuts=cuts, emb_slots=max(emb.n, 1),
                     grad_slots=max(grad.n, 1), staleness=staleness,
                     n_updates=a_steps_total, has_inscan=has_inscan,
-                    versions_p=list(version_p))
+                    versions_p=list(version_p),
+                    epoch_live=epoch_live,
+                    final_live=live_sets(dead_a, dead_p, n_rep_a, n_rep_p),
+                    rejoins=rejoins)
 
 
 def _cap_candidates(low: _Lowered, n_rep_a: int,
@@ -861,7 +905,9 @@ def compile_schedule(cfg: RunConfig, events: List[Tuple], *,
         emb_slots=low.emb_slots, grad_slots=low.grad_slots,
         staleness=low.staleness, n_updates=low.n_updates,
         has_inscan_agg=low.has_inscan, versions_p=low.versions_p,
-        pack=pack, lane_widths=widths)
+        pack=pack, lane_widths=widths,
+        epoch_live=tuple(low.epoch_live), final_live=low.final_live,
+        rejoins=tuple(low.rejoins))
     if len(_SCHEDULE_MEMO) >= _SCHEDULE_MEMO_CAP:
         _SCHEDULE_MEMO.pop(next(iter(_SCHEDULE_MEMO)))
     _SCHEDULE_MEMO[memo_key] = sched

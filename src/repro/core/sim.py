@@ -5,7 +5,11 @@ Processes are generators that yield commands:
     ("get", store)                    -> resumed with the item (blocking)
     ("get_timeout", store, timeout)   -> resumed with item or None (deadline)
 Stores are FIFO buffers with optional capacity; a full put EVICTS the
-oldest entry (the paper's channel-buffer semantics).
+oldest entry (the paper's channel-buffer semantics).  A store may carry
+a `drop_filter` — a deterministic predicate consulted on every put —
+modeling loss in transit (fault injection's channel-drop bursts):
+filtered items are counted in `n_dropped` and never reach the buffer or
+any waiter.
 """
 from __future__ import annotations
 
@@ -22,8 +26,13 @@ class Store:
         self.buf: Deque[Any] = deque()
         self.waiters: Deque[list] = deque()   # [gen, timeout_token]
         self.n_evicted = 0
+        self.n_dropped = 0
+        self.drop_filter = None               # callable(item) -> bool
 
     def put(self, item: Any) -> None:
+        if self.drop_filter is not None and self.drop_filter(item):
+            self.n_dropped += 1               # lost in transit
+            return
         while self.waiters:
             waiter = self.waiters.popleft()
             gen, token = waiter

@@ -129,3 +129,75 @@ def test_save_state_roundtrip_nested_structures(tmp_path):
     np.testing.assert_array_equal(got[0][0]["b"], np.ones((3,)))
     assert got[1][3][1] == 7 and int(got[2]) == 4
     assert got[1]["k"][0] in (True, 1) and got[1]["k"][1] is None
+
+
+# ---------------------------------------------------------------------------
+# satellite: checkpoint integrity (state-v2 crc)
+# ---------------------------------------------------------------------------
+def _save_sample(tmp_path):
+    from repro.checkpoint.store import load_step
+    path = str(tmp_path / "ck.msgpack")
+    state = {"w": np.arange(32, dtype=np.float32), "epoch": 3}
+    save_state(path, state, step=3)
+    assert load_step(path) == 3
+    got = restore_state(path)
+    np.testing.assert_array_equal(got["w"], state["w"])
+    return path, open(path, "rb").read()
+
+
+def test_restore_state_rejects_truncated_file(tmp_path):
+    from repro.checkpoint.store import CheckpointCorrupt
+    path, raw = _save_sample(tmp_path)
+    for cut in (0, 1, len(raw) // 2, len(raw) - 1):
+        with open(path, "wb") as f:
+            f.write(raw[:cut])
+        with pytest.raises(CheckpointCorrupt):
+            restore_state(path)
+
+
+def test_restore_state_rejects_bit_flips(tmp_path):
+    from repro.checkpoint.store import CheckpointCorrupt
+    path, raw = _save_sample(tmp_path)
+    # flip a bit in several spots, including deep inside the array
+    # payload where pre-crc decoding would have silently succeeded
+    for pos in (len(raw) // 3, len(raw) // 2, len(raw) - 8):
+        bad = bytearray(raw)
+        bad[pos] ^= 0x10
+        with open(path, "wb") as f:
+            f.write(bytes(bad))
+        with pytest.raises(CheckpointCorrupt):
+            restore_state(path)
+    # pristine bytes still restore (the writer wasn't just failing)
+    with open(path, "wb") as f:
+        f.write(raw)
+    np.testing.assert_array_equal(restore_state(path)["w"],
+                                  np.arange(32, dtype=np.float32))
+
+
+def test_restore_state_reads_legacy_v1(tmp_path):
+    """Pre-checksum checkpoints (fmt=state-v1) stay restorable."""
+    import msgpack
+
+    from repro.checkpoint.store import _encode, load_step
+    path = str(tmp_path / "v1.msgpack")
+    state = {"w": np.ones((4,), np.float32)}
+    payload = {"state": _encode(state), "step": 2, "fmt": "state-v1"}
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload))
+    np.testing.assert_array_equal(restore_state(path)["w"], state["w"])
+    assert load_step(path) == 2
+
+
+def test_restore_state_rejects_foreign_files(tmp_path):
+    import msgpack
+
+    from repro.checkpoint.store import CheckpointCorrupt
+    path = str(tmp_path / "foreign.msgpack")
+    with open(path, "wb") as f:
+        f.write(msgpack.packb({"fmt": "who-knows", "x": 1}))
+    with pytest.raises(CheckpointCorrupt):
+        restore_state(path)
+    with open(path, "wb") as f:
+        f.write(b"not msgpack at all \x00\xff")
+    with pytest.raises(CheckpointCorrupt):
+        restore_state(path)

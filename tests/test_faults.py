@@ -1,0 +1,368 @@
+"""Deterministic fault injection: faulty worlds replay bit-for-bit.
+
+A `FaultPlan` (replica crash+rejoin, straggler cadence drift, channel
+drop bursts) is consumed by the DES so every fault lands in the event
+log deterministically; the schedule compiler lowers dead replicas into
+masked lanes and live-subset aggregation boundaries.  The contract under
+test: a faulty world is just another event log, so it replays the same
+across engine={compiled,event}, pack={segmented,packed}, DP on/off and
+device counts — same tolerances the healthy parity suite pins.
+
+This file is its own mesh worker entry point (test_mesh_replay idiom)::
+
+    python tests/test_faults.py parity '<json payload>'
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import (ChannelDropFault, CrashFault, ExperimentConfig,
+                       FaultPlan, Session, StragglerFault)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+BASE = dict(method="pubsub", dataset="credit", scale=0.05, n_epochs=3,
+            batch_size=64, w_a=4, w_p=4)
+
+# the healthy BASE sim spans ~0.55 time units; every fault window below
+# is tuned to land mid-run (crashes fire, rejoins cross epoch
+# boundaries) — test_fault_stats_recorded pins that they all fired
+CRASH = FaultPlan(crashes=(
+    CrashFault(side="p", replica=1, at=0.15, rejoin_after=0.2),
+    CrashFault(side="a", replica=2, at=0.25, rejoin_after=0.15)))
+STRAGGLE = FaultPlan(stragglers=(
+    StragglerFault(side="a", replica=0, factor=2.5, start=0.1, ramp=0.3),
+    StragglerFault(side="p", replica=3, factor=1.7, start=0.25)))
+PERM = FaultPlan(crashes=(CrashFault(side="p", replica=2, at=0.25),))
+DROPS = FaultPlan(drops=(
+    ChannelDropFault(channel="emb", start=0.1, duration=0.3,
+                     drop_every=3),
+    ChannelDropFault(channel="grad", start=0.25, duration=0.2,
+                     drop_every=4)))
+
+SCENARIOS = {"crash_rejoin": CRASH, "straggler": STRAGGLE,
+             "perm_crash": PERM, "chan_drop": DROPS}
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan semantics (pure data, no sim)
+# ---------------------------------------------------------------------------
+def test_faultplan_validation():
+    with pytest.raises(ValueError, match="side"):
+        FaultPlan(crashes=(CrashFault(side="x", replica=0, at=1.0),))
+    with pytest.raises(ValueError, match="replica"):
+        FaultPlan(stragglers=(StragglerFault(side="a", replica=-1),))
+    with pytest.raises(ValueError, match="rejoin_after"):
+        FaultPlan(crashes=(CrashFault(side="a", replica=0, at=1.0,
+                                      rejoin_after=0.0),))
+    with pytest.raises(ValueError, match="channel"):
+        FaultPlan(drops=(ChannelDropFault(channel="ctrl", start=0.0,
+                                          duration=1.0),))
+    with pytest.raises(ValueError, match="drop_every"):
+        FaultPlan(drops=(ChannelDropFault(channel="emb", start=0.0,
+                                          duration=1.0, drop_every=0),))
+    # method-dependent semantics
+    DROPS.validate("pubsub")
+    with pytest.raises(ValueError, match="pubsub"):
+        DROPS.validate("vfl_ps")
+    PERM.validate("pubsub")
+    with pytest.raises(ValueError, match="rejoin"):
+        PERM.validate("vfl_ps")          # never-rejoining stall
+    CRASH.validate("vfl_ps")             # finite outages stall fine
+
+
+def test_faultplan_roundtrip_and_key():
+    for fp in SCENARIOS.values():
+        back = FaultPlan.from_dict(json.loads(json.dumps(fp.to_dict())))
+        assert back == fp and back.key() == fp.key()
+    assert FaultPlan().empty and not CRASH.empty
+    assert CRASH.key() != STRAGGLE.key()
+    assert {CRASH: 1}[FaultPlan.from_dict(CRASH.to_dict())] == 1
+
+
+def test_straggler_multiplier_ramp():
+    fp = FaultPlan(stragglers=(
+        StragglerFault(side="a", replica=0, factor=3.0, start=1.0,
+                       ramp=2.0),))
+    assert fp.multiplier("a", 0, 0.5) == 1.0       # before start
+    assert fp.multiplier("a", 0, 1.0) == 1.0       # at start
+    assert fp.multiplier("a", 0, 2.0) == 2.0       # mid-ramp
+    assert fp.multiplier("a", 0, 3.0) == 3.0       # ramp done
+    assert fp.multiplier("a", 0, 99.0) == 3.0      # stays
+    assert fp.multiplier("p", 0, 2.0) == 1.0       # other replica
+    # step change and compounding
+    step = FaultPlan(stragglers=(
+        StragglerFault(side="p", replica=1, factor=2.0, start=1.0),
+        StragglerFault(side="p", replica=1, factor=1.5, start=2.0)))
+    assert step.multiplier("p", 1, 1.5) == 2.0
+    assert step.multiplier("p", 1, 2.5) == 3.0
+
+
+# ---------------------------------------------------------------------------
+# DES: faults land in the event log deterministically
+# ---------------------------------------------------------------------------
+def _session(**kw):
+    d = dict(BASE)
+    d.update(kw)
+    return Session(ExperimentConfig(**d))
+
+
+_CACHE = {}
+
+
+def _run(key, **kw):
+    """Memoized Session runs — several tests compare against the same
+    healthy/faulty reference."""
+    if key not in _CACHE:
+        sess = _session(**kw)
+        _CACHE[key] = (sess, sess.run())
+    return _CACHE[key]
+
+
+def test_empty_plan_is_the_healthy_world():
+    """faults=None and an empty FaultPlan produce the identical event
+    log and bit-identical training — the healthy path has no fault tax."""
+    s0, r0 = _run("healthy")
+    s1, r1 = _run("empty_plan", faults=FaultPlan())
+    assert s0.compile().sim.events == s1.compile().sim.events
+    assert r1.train.losses == r0.train.losses
+    assert r1.train.history == r0.train.history
+    assert r1.train.final_metric == r0.train.final_metric
+
+
+def test_faulty_log_is_deterministic():
+    """Same seed + same plan -> byte-identical events and training, DP
+    included (faults must not perturb the noise stream alignment)."""
+    a_s, a = _run("det_a", faults=CRASH, dp_mu=0.5)
+    b_s, b = _run("det_b", faults=CRASH, dp_mu=0.5)
+    assert a_s.compile().sim.events == b_s.compile().sim.events
+    assert a.train.losses == b.train.losses
+    assert a.train.history == b.train.history
+    kinds = {e[1] for e in a_s.compile().sim.events}
+    assert {"crash", "rejoin"} <= kinds
+
+
+def test_fault_stats_recorded():
+    sess, _ = _run("det_a", faults=CRASH, dp_mu=0.5)
+    fs = sess.compile().sim.stats["faults"]
+    assert fs["crashes"] == 2 and fs["rejoins"] == 2
+    assert all(s > 0 for s in fs["rejoin_staleness"])
+    dsess, _ = _run("drops", faults=DROPS)
+    assert dsess.compile().sim.stats["faults"]["chan_dropped"] > 0
+
+
+def test_structural_key_isolates_fault_plans():
+    """A fault plan reshapes the lowered program, so faulty configs must
+    never share a compiled program with healthy ones."""
+    s0, _ = _run("healthy")
+    s1, _ = _run("det_a", faults=CRASH, dp_mu=0.5)
+    assert s0.structural_key() != s1.structural_key()
+
+
+def test_drops_require_deadline():
+    with pytest.raises(ValueError, match="t_ddl"):
+        _session(faults=DROPS, disable_deadline=True).run()
+
+
+def test_drops_rejected_off_pubsub_at_session_init():
+    with pytest.raises(ValueError, match="pubsub"):
+        _session(method="vfl_ps", faults=DROPS)
+
+
+# ---------------------------------------------------------------------------
+# lowering: dead replicas become masked lanes + live-subset boundaries
+# ---------------------------------------------------------------------------
+def test_lowering_masks_and_rejoins():
+    sess, _ = _run("det_a", faults=CRASH, dp_mu=0.5)
+    sched = sess.compile().engine.schedule
+    assert len(sched.epoch_live) == BASE["n_epochs"]
+    subsets = [lv for lv in sched.epoch_live if lv is not None]
+    assert subsets, "crash window never overlapped an epoch boundary"
+    for live_a, live_p in subsets:
+        assert 0 < len(live_a) <= BASE["w_a"]
+        assert 0 < len(live_p) <= BASE["w_p"]
+    # both replicas rejoined, with recorded (positive) staleness
+    assert sorted(s for s, _, _ in [(r[0], r[1], r[2])
+                                    for r in sched.rejoins]) == ["a", "p"]
+    assert all(r[2] > 0 for r in sched.rejoins)
+    assert sched.final_live is None      # everyone is back at the end
+    # the event engine derives the SAME live sets from the same log
+    ev = _session(engine="event", faults=CRASH, dp_mu=0.5)
+    eng = ev.compile().engine
+    assert tuple(eng._live) == sched.epoch_live
+    assert eng._final_live == sched.final_live
+
+
+def test_permanent_crash_shrinks_final_live():
+    sess, _ = _run("perm", faults=PERM)
+    sched = sess.compile().engine.schedule
+    assert sched.final_live is not None
+    live_a, live_p = sched.final_live
+    assert len(live_a) == BASE["w_a"]
+    assert live_p == tuple(i for i in range(BASE["w_p"]) if i != 2)
+    # survivors absorbed the dead replica's jobs: full step count
+    assert sched.n_updates == _run("healthy")[0].compile() \
+        .engine.schedule.n_updates
+
+
+# ---------------------------------------------------------------------------
+# engine / pack parity on faulty worlds
+# ---------------------------------------------------------------------------
+def _assert_engine_parity(rc, re):
+    np.testing.assert_allclose(rc.train.losses, re.train.losses,
+                               rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(rc.train.history, re.train.history,
+                               rtol=1e-3, atol=1e-4)
+    assert rc["staleness"] == re["staleness"]
+    assert rc.train.final_metric == pytest.approx(re.train.final_metric,
+                                                  rel=1e-3, abs=1e-4)
+
+
+@pytest.mark.parametrize("scenario", ["crash_rejoin", "straggler",
+                                      "perm_crash", "chan_drop"])
+def test_fault_parity_across_engines_and_packs(scenario):
+    """Every fault scenario replays the same across compiled/event and
+    segmented/packed.  Noiseless path: DP noise streams are
+    engine/layout-local BY CONTRACT (segmented advances the PRNG key
+    only on publish ticks — see test_engine_parity), so DP-on
+    equivalence is pinned as bitwise same-config determinism below, not
+    cross-engine closeness."""
+    fp = SCENARIOS[scenario]
+    _, seg = _run(("seg", scenario), faults=fp)
+    _, ev = _run(("ev", scenario), engine="event", faults=fp)
+    _assert_engine_parity(seg, ev)
+    _, pk = _run(("pk", scenario), pack="packed", faults=fp)
+    np.testing.assert_allclose(seg.train.losses, pk.train.losses,
+                               rtol=1e-5)
+    np.testing.assert_allclose(seg.train.history, pk.train.history,
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("scenario,engine,pack", [
+    ("crash_rejoin", "compiled", "segmented"),
+    ("crash_rejoin", "compiled", "packed"),
+    ("crash_rejoin", "event", None),
+    ("straggler", "compiled", "segmented"),
+])
+def test_fault_dp_replay_is_bitwise_deterministic(scenario, engine,
+                                                  pack):
+    """DP on: the same faulty config replays bit-identically on every
+    engine and lane layout (the faults must not perturb each stream's
+    own key advance)."""
+    kw = dict(faults=SCENARIOS[scenario], dp_mu=0.5)
+    if engine == "event":
+        kw["engine"] = "event"
+    if pack == "packed":
+        kw["pack"] = "packed"
+    if (scenario, engine, pack) == ("crash_rejoin", "compiled",
+                                    "segmented"):
+        ka, kb = "det_a", "det_b"        # shared with the det tests
+    else:
+        ka, kb = (("dp_a", scenario, engine, pack),
+                  ("dp_b", scenario, engine, pack))
+    _, a = _run(ka, **kw)
+    _, b = _run(kb, **kw)
+    assert a.train.losses == b.train.losses
+    assert a.train.history == b.train.history
+    assert a.train.final_metric == b.train.final_metric
+
+
+def test_fault_dp_noise_does_not_help():
+    """Semantic DP check on a faulty world: heavy noise must not beat
+    the noiseless run."""
+    _, clean = _run(("seg", "crash_rejoin"), faults=CRASH)
+    _, noisy = _run("det_a", faults=CRASH, dp_mu=0.5)
+    assert noisy.train.final_metric <= clean.train.final_metric + 0.02
+
+
+def test_stall_semantics_on_paired_method():
+    """On vfl_ps a crash is a stall: barrier partners wait, wall-clock
+    blows up, but no work is lost — parity still holds and the step
+    count matches the healthy run."""
+    fp = FaultPlan(crashes=(
+        CrashFault(side="p", replica=1, at=0.3, rejoin_after=0.6),))
+    kw = dict(method="vfl_ps", faults=fp)
+    hs, _ = _run(("vfl_healthy",), method="vfl_ps")
+    cs, rc = _run(("vfl_stall",), **kw)
+    es, re = _run(("vfl_stall_ev",), engine="event", **kw)
+    _assert_engine_parity(rc, re)
+    assert rc["sim_s"] > hs.compile().sim.total_time
+    kinds = {e[1] for e in cs.compile().sim.events}
+    assert {"stall", "resume"} <= kinds and "crash" not in kinds
+    assert cs.compile().engine.schedule.epoch_live == \
+        (None,) * BASE["n_epochs"]       # stalls never mask lanes
+
+
+# ---------------------------------------------------------------------------
+# device-count parity: faulty worlds on a forced 4-device mesh
+# ---------------------------------------------------------------------------
+def _spawn(mode, payload, *, device_count=4, timeout=3000):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{device_count}")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), mode,
+         json.dumps(payload)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, (
+        f"worker {mode} failed (rc={proc.returncode})\n"
+        f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    lines = [l for l in proc.stdout.splitlines()
+             if l.startswith("RESULT:")]
+    assert lines, f"worker {mode} printed no RESULT line:\n{proc.stdout}"
+    return json.loads(lines[-1][len("RESULT:"):])
+
+
+def _assert_mesh(out):
+    assert out["losses_eq"], "1-vs-4 device losses differ"
+    assert out["history_eq"], "1-vs-4 device history differs"
+    assert out["final_eq"], "1-vs-4 device final metric differs"
+    assert not out["bad_leaves"], f"state leaves differ: " \
+        f"{out['bad_leaves']}"
+
+
+def test_mesh_parity_crash_rejoin():
+    """Crash+rejoin world, 6 replicas over 4 devices (uneven lanes so
+    the dead lane masking crosses device boundaries) — bit-for-bit."""
+    out = _spawn("parity", {"overrides": dict(
+        n_epochs=2, w_a=6, w_p=6, faults=CRASH.to_dict())})
+    _assert_mesh(out)
+
+
+@pytest.mark.slow
+def test_mesh_parity_straggler_dp():
+    out = _spawn("parity", {"overrides": dict(
+        n_epochs=2, w_a=6, w_p=6, dp_mu=0.5,
+        faults=STRAGGLE.to_dict())})
+    _assert_mesh(out)
+
+
+@pytest.mark.slow
+def test_mesh_parity_permanent_crash_packed():
+    out = _spawn("parity", {"overrides": dict(
+        n_epochs=2, w_a=6, w_p=6, pack="packed",
+        faults=PERM.to_dict())})
+    _assert_mesh(out)
+
+
+# ---------------------------------------------------------------------------
+# worker entry (idiom: this file runs itself under forced device counts)
+# ---------------------------------------------------------------------------
+def _main(argv):
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from test_mesh_replay import _worker_parity
+    mode, payload = argv[0], json.loads(argv[1])
+    assert mode == "parity", mode
+    print("RESULT:" + json.dumps(_worker_parity(payload)))
+
+
+if __name__ == "__main__":
+    _main(sys.argv[1:])

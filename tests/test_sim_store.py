@@ -1,0 +1,173 @@
+"""DES `Store`/`Engine` edge cases: the channel-buffer semantics every
+replay is lowered from.  Eviction accounting under capacity-1 churn,
+`get_timeout` racing a same-tick `put`, cancelled timeout tokens never
+double-resuming, and the `drop_filter` hook fault injection installs."""
+from repro.core.sim import Engine, Store
+
+
+def _run(*procs):
+    eng = Engine()
+    stores = {}
+
+    def store(name, capacity=None):
+        if name not in stores:
+            stores[name] = Store(eng, capacity)
+        return stores[name]
+
+    for p in procs:
+        eng.process(p(eng, store))
+    eng.run()
+    return eng, stores
+
+
+# ---------------------------------------------------------------------------
+# eviction counter under capacity-1 churn
+# ---------------------------------------------------------------------------
+def test_capacity_one_churn_counts_every_eviction():
+    eng = Engine()
+    st = Store(eng, capacity=1)
+    for i in range(10):
+        st.put(i)
+    # 10 puts into a 1-slot buffer with no reader: 9 evictions, newest
+    # survives
+    assert st.n_evicted == 9
+    assert list(st.buf) == [9]
+    ok, item = st.try_get()
+    assert ok and item == 9 and len(st) == 0
+
+
+def test_put_to_waiter_never_evicts():
+    """Delivery to a blocked getter bypasses the buffer entirely — a
+    full buffer must not charge an eviction for it."""
+    got = []
+
+    def reader(eng, store):
+        got.append((yield ("get", store("ch", 1))))
+
+    def writer(eng, store):
+        yield ("sleep", 1.0)
+        store("ch", 1).put("x")
+
+    _, stores = _run(reader, writer)
+    assert got == ["x"]
+    assert stores["ch"].n_evicted == 0 and len(stores["ch"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# get_timeout racing a same-tick put
+# ---------------------------------------------------------------------------
+def test_get_timeout_vs_same_tick_put_delivery_wins():
+    """A put scheduled at exactly the deadline tick but sequenced BEFORE
+    the timeout fire delivers the item; the timeout token is cancelled
+    and the late fire is a no-op."""
+    got = []
+
+    def reader(eng, store):
+        got.append((yield ("get_timeout", store("ch"), 1.0)))
+
+    def writer(eng, store):
+        yield ("sleep", 1.0)              # same t as the deadline...
+        store("ch").put("just-in-time")   # ...but pushed first (FIFO seq)
+
+    # writer is processed first, so its t=1.0 resume outranks the
+    # timeout_fire pushed by the reader's later get_timeout — the put
+    # lands inside the deadline tick
+    eng, stores = _run(writer, reader)
+    assert got == ["just-in-time"]
+    assert not stores["ch"].waiters
+
+
+def test_get_timeout_fires_then_late_put_buffers():
+    """When the deadline fires first, the waiter resumes with None; a
+    later put must buffer (the stale token is skipped, not delivered)."""
+    got = []
+
+    def reader(eng, store):
+        got.append((yield ("get_timeout", store("ch"), 1.0)))
+        yield ("sleep", 5.0)              # stay alive past the late put
+
+    def writer(eng, store):
+        yield ("sleep", 2.0)
+        store("ch").put("too-late")
+
+    _, stores = _run(reader, writer)
+    assert got == [None]
+    assert list(stores["ch"].buf) == ["too-late"]
+
+
+# ---------------------------------------------------------------------------
+# cancelled tokens never double-resume
+# ---------------------------------------------------------------------------
+def test_cancelled_waiter_token_never_double_resumes():
+    """Deliver at t<deadline, then let the (cancelled) timeout tick
+    pass: the reader must be resumed exactly once, and the next get on
+    the store must see only items put AFTER the delivery."""
+    resumes = []
+
+    def reader(eng, store):
+        item = yield ("get_timeout", store("ch"), 2.0)
+        resumes.append((eng.now, item))
+        # if the cancelled token double-resumed, this second yield would
+        # receive the spurious None at t=2
+        item2 = yield ("get", store("ch"))
+        resumes.append((eng.now, item2))
+
+    def writer(eng, store):
+        yield ("sleep", 1.0)
+        store("ch").put("first")
+        yield ("sleep", 3.0)              # past the dead deadline tick
+        store("ch").put("second")
+
+    _run(reader, writer)
+    assert resumes == [(1.0, "first"), (4.0, "second")]
+
+
+def test_fired_token_is_skipped_in_waiter_queue():
+    """Two waiters, the first times out: a put must skip the fired
+    token and deliver to the live second waiter."""
+    got = []
+
+    def fast_reader(eng, store):
+        got.append(("fast", (yield ("get_timeout", store("ch"), 1.0))))
+
+    def slow_reader(eng, store):
+        got.append(("slow", (yield ("get_timeout", store("ch"), 10.0))))
+
+    def writer(eng, store):
+        yield ("sleep", 2.0)
+        store("ch").put("x")
+
+    _, stores = _run(fast_reader, slow_reader, writer)
+    assert ("fast", None) in got and ("slow", "x") in got
+    assert not stores["ch"].waiters
+
+
+# ---------------------------------------------------------------------------
+# drop_filter (fault injection's loss-in-transit hook)
+# ---------------------------------------------------------------------------
+def test_drop_filter_counts_and_never_reaches_waiters():
+    eng = Engine()
+    st = Store(eng, capacity=2)
+    st.drop_filter = lambda item: item % 2 == 0
+    for i in range(6):
+        st.put(i)
+    assert st.n_dropped == 3              # 0, 2, 4 lost in transit
+    assert list(st.buf) == [3, 5]         # capacity eviction of 1
+    assert st.n_evicted == 1
+
+    # a blocked waiter must NOT be resumed by a dropped item
+    got = []
+
+    def reader(eng, store):
+        got.append((yield ("get_timeout", store("ch"), 5.0)))
+
+    def writer(eng, store):
+        store("ch").drop_filter = lambda item: item == "lost"
+        yield ("sleep", 1.0)
+        store("ch").put("lost")
+        yield ("sleep", 1.0)
+        store("ch").put("kept")
+
+    _, stores = _run(reader, writer)
+    assert got == ["kept"]
+    assert stores["ch"].n_dropped == 1

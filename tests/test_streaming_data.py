@@ -270,3 +270,46 @@ def test_shards_backing_end_to_end(tmp_path):
     assert np.isfinite(r.train.final_metric)
     assert r.data_path["backing"] == "shards"
     assert r.data_path["rows_staged"] > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: background stage-thread failures surface, never hang
+# ---------------------------------------------------------------------------
+class _FailingSource(ArrayFeatures):
+    """Feature source whose reads start failing after `fail_after`
+    gathers — a shard file vanishing mid-epoch."""
+
+    def __init__(self, X, fail_after):
+        super().__init__(X)
+        self.calls = 0
+        self.fail_after = fail_after
+
+    def gather(self, rows):
+        self.calls += 1
+        if self.calls > self.fail_after:
+            raise OSError("injected shard read failure")
+        return super().gather(rows)
+
+    __getitem__ = gather
+
+
+def test_background_staging_failure_surfaces_as_staging_error():
+    """A read error on the staging thread must propagate out of
+    `run_epoch` as `StagingError` naming the window/epoch — not hang the
+    consumer loop or leak as an opaque future exception."""
+    import pytest
+
+    from repro.core.jit_pipeline import StagingError
+
+    cfg = ExperimentConfig(**BASE, **STREAM, stream_window_batches=2)
+    sess = Session(cfg)
+    eng = sess.compile().engine
+    t = sess._make_trainer(*sess._resolve_point(None, None, None))
+    src = _FailingSource(np.asarray(t.Xa), fail_after=1)
+    data = eng.stage_data(src, t.Xp, t.y,
+                          window_batches=t.stream_window_batches)
+    st = eng.init_state(t.theta_a, t.opt_a, t.theta_p, t.opt_p,
+                        t.d_emb, seed=0)
+    with pytest.raises(StagingError, match="background staging"):
+        eng.run_epoch(st, 0, data, t.hyper())
+    assert src.calls > src.fail_after     # it was the injected failure
