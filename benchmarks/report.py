@@ -1,10 +1,14 @@
-"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
-runs/dryrun.jsonl.  Usage:
+"""Generate the EXPERIMENTS.md tables: §Dry-run / §Roofline from
+runs/dryrun.jsonl, §Serving from BENCH_serve.json, and §Faults from
+BENCH_fault.json (each section renders only when its record exists).
+
+Usage:
     PYTHONPATH=src python -m benchmarks.report [runs/dryrun.jsonl]
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 from repro.configs import SHAPES
@@ -15,8 +19,7 @@ def gb(x):
     return f"{x / 1e9:.2f}"
 
 
-def main():
-    path = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun.jsonl"
+def dryrun_tables(path: str) -> None:
     recs = load_records(path)
     by_mesh = {"single": [], "multi": []}
     for r in recs:
@@ -55,6 +58,70 @@ def main():
               f"{t['memory']:.3e} | {t['collective']:.3e} | "
               f"{t['dominant']} | {t['bound_s']:.3e} | "
               f"{t['model_flops']:.3e} | {t['useful_ratio']:.2f} |")
+
+
+def serve_table(path: str = "BENCH_serve.json") -> None:
+    with open(path) as fh:
+        rec = json.load(fh)
+    cfg = rec["config"]
+    print(f"\n### §Serving — continuous batching under Poisson load "
+          f"(slots={cfg['slots']}, gen={cfg['gen']}, "
+          f"n={cfg['n_requests']} requests)\n")
+    print("| arch | offered qps | tok/s | x serial | ttft p50/p99 ms | "
+          "itl p50/p99 ms | occupancy |")
+    print("|---|---|---|---|---|---|---|")
+    for arch, rows in rec["archs"].items():
+        s = rows["serial"]
+        print(f"| {arch} | serial | {s['tokens_per_s']:.1f} | 1.00 | "
+              f"— | — | — |")
+        for p in rows["points"]:
+            print(f"| {arch} | {p['offered_qps']:g} | "
+                  f"{p['tokens_per_s']:.1f} | "
+                  f"{p['speedup_vs_serial']:.2f} | "
+                  f"{p['ttft_p50_ms']:.1f}/{p['ttft_p99_ms']:.1f} | "
+                  f"{p['itl_p50_ms']:.1f}/{p['itl_p99_ms']:.1f} | "
+                  f"{p['occupancy']:.2f} |")
+
+
+def fault_table(path: str = "BENCH_fault.json") -> None:
+    with open(path) as fh:
+        rec = json.load(fh)
+    print("\n### §Faults — accuracy + wall-clock degradation vs each "
+          "method's healthy run\n")
+    print("| method | severity | final | acc drop | slowdown | "
+          "staleness |")
+    print("|---|---|---|---|---|---|")
+    for method in ("pubsub", "vfl_ps"):
+        rows = rec.get(method, {})
+        for sev, row in rows.items():
+            if sev == "healthy":
+                print(f"| {method} | healthy | {row['final']:.4f} | — | "
+                      f"1.00 | — |")
+                continue
+            print(f"| {method} | {sev} | {row['final']:.4f} | "
+                  f"{row['acc_drop']:+.4f} | {row['slowdown']:.2f}x | "
+                  f"{row.get('staleness', 0):.2f} |")
+    p = rec.get("planner_under_straggler")
+    if p:
+        print(f"\nPlanner under severe straggler: acc drop "
+              f"{p['acc_drop']:+.4f}, slowdown {p['slowdown']:.2f}x "
+              f"({p['n_stragglers_p']} passive stragglers).")
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun.jsonl"
+    emitted = False
+    if os.path.exists(path):
+        dryrun_tables(path)
+        emitted = True
+    for render, bench in ((serve_table, "BENCH_serve.json"),
+                          (fault_table, "BENCH_fault.json")):
+        if os.path.exists(bench):
+            render(bench)
+            emitted = True
+    if not emitted:
+        print("# nothing to report: no runs/dryrun.jsonl, "
+              "BENCH_serve.json, or BENCH_fault.json", file=sys.stderr)
 
 
 if __name__ == "__main__":

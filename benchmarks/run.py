@@ -15,7 +15,8 @@ from benchmarks.common import emit_header
 
 SUITES = ("kernels", "replay_throughput", "accuracy", "efficiency",
           "heterogeneity", "privacy", "workers", "batch_size", "ablation",
-          "multiparty", "criteo", "cut_placement", "roofline", "chaos")
+          "multiparty", "criteo", "cut_placement", "roofline", "chaos",
+          "serve_load")
 
 
 def main() -> None:

@@ -1,0 +1,170 @@
+"""Poisson-load serving benchmark (→ BENCH_serve.json).
+
+Open-loop arrivals at swept offered QPS through the continuous-batching
+split-inference engine, per architecture: p50/p99 TTFT, p50/p99
+inter-token latency, generated tokens/s, and slot occupancy — plus a
+serial per-request baseline (slot_count=1, one request at a time) that
+continuous batching must beat on tokens/s at the highest QPS point.
+
+Archs cover the cache zoo the training path never touches: qwen2
+(GQA KV ring), phi4-mini (GQA KV ring, deeper reduced stack),
+recurrentgemma (rglru recurrent state + local-attn KV ring), rwkv6
+(wkv matrix state + token-shift regs).
+
+  PYTHONPATH=src python -m benchmarks.serve_load [--smoke]
+
+--smoke: one arch, two QPS points, few requests; exits non-zero unless
+every request completes, the engine compiled exactly one decode program,
+and the BENCH_serve.json record is well-formed (the CI serve step).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.serve import ServeEngine, open_loop, synthetic_requests
+
+from benchmarks.common import SEED, emit, emit_header
+
+ARCHS = ("qwen2-0.5b", "phi4-mini-3.8b", "recurrentgemma-9b", "rwkv6-1.6b")
+QPS_POINTS = (4.0, 16.0, 64.0)
+N_REQUESTS = int(os.environ.get("REPRO_SERVE_REQUESTS", "24"))
+SLOTS = int(os.environ.get("REPRO_SERVE_SLOTS", "8"))
+GEN = int(os.environ.get("REPRO_SERVE_GEN", "16"))
+PROMPT_LENS = (4, 12)
+CACHE_CAP = PROMPT_LENS[1] + GEN
+
+
+def pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def _requests(vocab: int, n: int):
+    return synthetic_requests(n, vocab, seed=SEED, prompt_lens=PROMPT_LENS,
+                              max_new_tokens=GEN)
+
+
+def _summarize(done, wall_s: float, stats: dict) -> dict:
+    ttft = [c.ttft_s for c in done]
+    itl = [c.per_token_s for c in done if len(c.tokens) > 1]
+    gen_tokens = sum(len(c.tokens) for c in done)
+    return {
+        "completed": len(done),
+        "gen_tokens": gen_tokens,
+        "wall_s": wall_s,
+        "tokens_per_s": gen_tokens / max(wall_s, 1e-9),
+        "ttft_p50_ms": pct(ttft, 50) * 1e3,
+        "ttft_p99_ms": pct(ttft, 99) * 1e3,
+        "itl_p50_ms": pct(itl, 50) * 1e3,
+        "itl_p99_ms": pct(itl, 99) * 1e3,
+        "occupancy": stats["occupancy"],
+        "decode_compiles": stats["decode_compiles"],
+    }
+
+
+def bench_arch(arch: str, qps_points, n_requests: int) -> dict:
+    eng = ServeEngine(arch, slots=SLOTS, cache_cap=CACHE_CAP, seed=SEED)
+    vocab = eng.cfg.vocab_size
+
+    # serial per-request baseline: same request mix, one at a time
+    serial = ServeEngine(arch, slots=1, cache_cap=CACHE_CAP, seed=SEED,
+                         params=eng.params)
+    # warm both programs so measured TTFT is steady-state, not compile
+    for e in (eng, serial):
+        e.serve(_requests(vocab, 1))
+    reqs = _requests(vocab, n_requests)
+    t0 = time.perf_counter()
+    done = []
+    for r in reqs:                      # closed loop, batch of one
+        done.extend(serial.serve([r]))
+    serial_row = _summarize(done, time.perf_counter() - t0,
+                            serial.stats)
+    emit(f"serve/{arch}/serial", serial_row["wall_s"] * 1e6 / n_requests,
+         f"tok_s={serial_row['tokens_per_s']:.1f}")
+
+    points = []
+    for qps in qps_points:
+        reqs = _requests(vocab, n_requests)
+        t0 = time.perf_counter()
+        done = open_loop(eng, reqs, qps, seed=SEED)
+        row = _summarize(done, time.perf_counter() - t0,
+                         eng.last_run_stats)
+        row["offered_qps"] = qps
+        row["speedup_vs_serial"] = (row["tokens_per_s"]
+                                    / max(serial_row["tokens_per_s"], 1e-9))
+        points.append(row)
+        emit(f"serve/{arch}/qps{qps:g}", row["wall_s"] * 1e6 / n_requests,
+             f"tok_s={row['tokens_per_s']:.1f};"
+             f"ttft_p50={row['ttft_p50_ms']:.1f}ms;"
+             f"ttft_p99={row['ttft_p99_ms']:.1f}ms;"
+             f"occ={row['occupancy']:.2f};"
+             f"x_serial={row['speedup_vs_serial']:.2f}")
+
+    return {"serial": serial_row, "points": points,
+            "slots": SLOTS, "cache_cap": CACHE_CAP}
+
+
+def validate(out: dict) -> list:
+    """Well-formedness of the BENCH_serve.json record (CI contract)."""
+    errors = []
+    for arch, rows in out["archs"].items():
+        want = ("tokens_per_s", "ttft_p50_ms", "ttft_p99_ms", "itl_p50_ms",
+                "itl_p99_ms", "occupancy", "offered_qps", "completed",
+                "decode_compiles")
+        for row in rows["points"]:
+            missing = [k for k in want if k not in row]
+            if missing:
+                errors.append(f"{arch}: missing {missing}")
+            if row["completed"] != out["config"]["n_requests"]:
+                errors.append(
+                    f"{arch}@{row['offered_qps']}qps: "
+                    f"{row['completed']}/{out['config']['n_requests']} "
+                    "requests completed")
+            if row["decode_compiles"] != 1:
+                errors.append(
+                    f"{arch}@{row['offered_qps']}qps: "
+                    f"{row['decode_compiles']} decode compiles "
+                    "(want exactly 1 per shape)")
+        top = rows["points"][-1]
+        if top["speedup_vs_serial"] <= 1.0:
+            errors.append(
+                f"{arch}: continuous batching does not beat serial at "
+                f"{top['offered_qps']} qps "
+                f"({top['speedup_vs_serial']:.2f}x)")
+    return errors
+
+
+def run(*, archs=ARCHS, qps_points=QPS_POINTS, n_requests=N_REQUESTS,
+        check: bool = False) -> dict:
+    out = {"config": {
+        "n_requests": n_requests, "slots": SLOTS, "gen": GEN,
+        "prompt_lens": list(PROMPT_LENS), "cache_cap": CACHE_CAP,
+        "qps_points": list(qps_points), "seed": SEED,
+    }, "archs": {}}
+    for arch in archs:
+        out["archs"][arch] = bench_arch(arch, qps_points, n_requests)
+
+    with open("BENCH_serve.json", "w") as fh:
+        json.dump(out, fh, indent=2)
+    emit("serve/bench_json", 0.0,
+         f"wrote={os.path.abspath('BENCH_serve.json')}")
+
+    errors = validate(out)
+    for e in errors:
+        print(f"# serve bench FAIL: {e}", file=sys.stderr)
+    if check and errors:
+        raise SystemExit(1)
+    return out
+
+
+if __name__ == "__main__":
+    emit_header()
+    if "--smoke" in sys.argv:
+        run(archs=("qwen2-0.5b",), qps_points=(8.0, 64.0), n_requests=6,
+            check=True)
+    else:
+        run(check="--check" in sys.argv)

@@ -1,10 +1,9 @@
-"""Split-inference serving example: batched autoregressive decode through
-the two-party split with per-layer KV/recurrent caches.
+"""Split-inference serving example: continuous-batching autoregressive
+decode through the two-party split with per-slot KV/recurrent caches.
 
     PYTHONPATH=src python examples/serve_split.py --arch recurrentgemma-9b
 """
 import argparse
-import subprocess
 import sys
 
 sys.path.insert(0, "src")
@@ -15,12 +14,16 @@ def main():
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--load", type=float, default=None,
+                    help="offered QPS for open-loop mode")
     args = ap.parse_args()
     # delegate to the launch driver (the public serving entry point)
-    sys.argv = ["serve", "--arch", args.arch, "--batch", str(args.batch),
-                "--gen", str(args.gen)]
     from repro.launch.serve import main as serve_main
-    serve_main()
+    argv = ["--arch", args.arch, "--batch", str(args.batch),
+            "--gen", str(args.gen)]
+    if args.load:
+        argv += ["--load", str(args.load)]
+    serve_main(argv)
 
 
 if __name__ == "__main__":

@@ -1,74 +1,100 @@
-"""Split-inference serving driver: batched decode with per-party caches.
+"""Split-inference serving CLI — thin wrapper over `repro.serve`.
 
 The passive party's bottom stack and the active party's top stack run as
-one jitted decode step (the dry-run proves the joint graph lowers); the
-PubSub channels carry the cut activations between pods in deployment.
+one jitted slot-batched decode step; the PubSub channels carry the cut
+activations between pods in deployment.  Two modes:
 
-Example:
+one-shot (legacy):  decode a fixed set of requests and exit
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
       --batch 4 --prompt-len 16 --gen 32
+
+open-loop:          Poisson arrivals at --load QPS through the
+                    continuous-batching scheduler
+  PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-9b \
+      --load 16 --requests 32 --slots 8 --gen 16
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.steps import make_decode_step, make_model
+from repro.serve import (Completion, Request, ServeEngine, open_loop,
+                         synthetic_requests)
 
 
-def main():
+def _parse_prompt(spec: str) -> List[int]:
+    return [int(t) for t in spec.replace(",", " ").split()]
+
+
+def build_requests(args, vocab_size: int) -> List[Request]:
+    if args.prompt:
+        toks = _parse_prompt(args.prompt)
+        return [Request(prompt=toks, max_new_tokens=args.gen,
+                        temperature=args.temperature, seed=args.seed + i)
+                for i in range(args.batch)]
+    # seeded synthetic prompts — drawn ONCE per request and consumed for
+    # real during prefill (the first sampled token conditions on them)
+    n = args.requests if args.load else args.batch
+    return synthetic_requests(
+        n, vocab_size, seed=args.seed,
+        prompt_lens=(args.prompt_len, args.prompt_len),
+        max_new_tokens=args.gen, temperature=args.temperature)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> List[Completion]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of one-shot requests (legacy mode)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="slot count (default: --batch one-shot, 8 open-loop)")
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--prompt", default=None,
+                    help="explicit prompt token ids, e.g. '5,3,17'")
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--cache-cap", type=int, default=None,
+                    help="per-slot cache capacity "
+                         "(default: prompt-len + gen)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+    ap.add_argument("--load", type=float, default=None,
+                    help="open-loop mode: offered Poisson QPS")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="open-loop request count")
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
     if not cfg.supports_decode:
         raise SystemExit(f"{args.arch} is encoder-only: no decode step")
-    model = make_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = model.init(key)
-    decode = jax.jit(make_decode_step(model))
 
-    B = args.batch
-    cap = args.prompt_len + args.gen
-    cache = model.init_cache(B, cap)
-    rng = np.random.default_rng(args.seed)
-    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(B, 1)),
-                      jnp.int32)
-    xa = jnp.zeros((B, 1, cfg.d_active), jnp.float32)
+    requests = build_requests(args, cfg.vocab_size)
+    plen_max = max(r.prompt.size for r in requests)
+    cap = args.cache_cap or (plen_max + args.gen)
+    slots = args.slots or (8 if args.load else args.batch)
+    engine = ServeEngine(cfg, slots=slots, cache_cap=cap, seed=args.seed)
 
-    # prefill token-by-token (reduced model; exercises the cache path)
     t0 = time.time()
-    for i in range(args.prompt_len):
-        tok_in = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(B, 1)),
-                             jnp.int32)
-        logits, cache = decode(params, {"tokens_p": tok_in, "x_a": xa},
-                               cache)
-    out_tokens = []
-    for i in range(args.gen):
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits / args.temperature)[:, None].astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        out_tokens.append(np.asarray(tok)[:, 0])
-        logits, cache = decode(params, {"tokens_p": tok, "x_a": xa}, cache)
+    if args.load:
+        done = open_loop(engine, requests, args.load, seed=args.seed)
+    else:
+        done = engine.serve(requests)
     dt = time.time() - t0
-    total = args.prompt_len + args.gen
-    print(f"arch={cfg.name} batch={B} steps={total} "
-          f"{B * total / dt:.1f} tok/s (CPU, reduced config)")
-    print("sample:", np.stack(out_tokens, 1)[0][:16].tolist())
+
+    stats = engine.last_run_stats
+    n_tok = sum(len(c.tokens) for c in done)
+    ttft = np.asarray([c.ttft_s for c in done])
+    print(f"arch={cfg.name} slots={slots} requests={len(done)} "
+          f"gen_tokens={n_tok} {n_tok / dt:.1f} tok/s "
+          f"occupancy={stats['occupancy']:.2f} "
+          f"decode_compiles={stats['decode_compiles']}")
+    print(f"ttft p50={np.percentile(ttft, 50) * 1e3:.1f}ms "
+          f"p99={np.percentile(ttft, 99) * 1e3:.1f}ms")
+    print("sample:", done[0].tokens[:16])
+    return done
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+"""Continuous-batching split-inference serving.
+
+Request queue → slot-ring KV/recurrent caches → one jitted joint decode
+step per (arch, slot_count, cache_cap).  See docs/architecture.md
+§Split-inference serving.
+"""
+from repro.serve.engine import ServeEngine, reference_decode, slot_programs
+from repro.serve.load import open_loop, synthetic_requests
+from repro.serve.request import Completion, Request, RequestQueue
+from repro.serve.slots import SlotRing, SlotState
+
+__all__ = [
+    "ServeEngine", "Request", "RequestQueue", "Completion", "SlotRing",
+    "SlotState", "open_loop", "synthetic_requests", "reference_decode",
+    "slot_programs",
+]

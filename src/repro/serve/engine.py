@@ -1,0 +1,257 @@
+"""Continuous-batching split-inference engine.
+
+One compiled program per (arch, slot_count, cache_cap): the per-slot
+decode step (``launch.steps.make_decode_step`` — bottom stack | cut
+layer | f_a + top stack, cache-carrying) is vmapped over a fixed slot
+axis and jitted once.  Every slot owns a private KV/recurrent-cache
+region with its own position counter, so co-resident requests sit at
+unrelated sequence offsets; sampling params (temperature, per-request
+key) and the active mask are runtime operands, never recompiles.
+
+The scheduler is a host loop: admit queued requests onto free slots
+(resetting the slot's cache region), feed each active slot its next
+token (real prompt tokens during prefill, the last sampled token during
+decode), run the one compiled step, and evict slots on EOS/max-tokens
+— resolving the request's future with a :class:`Completion`.
+
+Bit-for-bit contract (pinned by tests/test_serve.py): a slot's output
+stream depends only on its own request — not on which slot it landed
+in, how full the batch is, or what traffic shares the batch — because
+the vmapped program computes slots independently and inactive-slot
+writes are masked out.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig, get_config
+from repro.launch.steps import make_decode_step, make_model
+from repro.serve.request import Completion, Request, RequestQueue
+from repro.serve.slots import SlotRing
+
+# process-wide program cache: (cfg, slots, cache_cap) -> _SlotPrograms.
+# Engines sharing a key share ONE jitted step, so a request replayed on a
+# different engine instance of the same shape is bitwise reproducible.
+_PROGRAMS: Dict[Any, "_SlotPrograms"] = {}
+
+
+class _SlotPrograms:
+    def __init__(self, model, n_slots: int, cache_cap: int):
+        decode = make_decode_step(model)
+
+        def one_slot(params, tok, xa, temp, key, active, cache):
+            batch = {"tokens_p": tok[None, None], "x_a": xa[None, None]}
+            logits, new_cache = decode(params, batch, cache)
+            logits = logits[0]                                    # (V,)
+            greedy = jnp.argmax(logits).astype(jnp.int32)
+            key, sub = jax.random.split(key)
+            sampled = jax.random.categorical(
+                sub, logits / jnp.maximum(temp, 1e-6)).astype(jnp.int32)
+            nxt = jnp.where(temp > 0.0, sampled, greedy)
+            nxt = jnp.where(active, nxt, jnp.int32(0))
+            # inactive slots keep their cache frozen (position included)
+            new_cache = jax.tree.map(
+                lambda n, o: jnp.where(active, n, o), new_cache, cache)
+            return nxt, key, new_cache
+
+        def admit(cache, keys, slot, new_key):
+            cache = jax.tree.map(
+                lambda a: a.at[slot].set(jnp.zeros(a.shape[1:], a.dtype)),
+                cache)
+            return cache, keys.at[slot].set(new_key)
+
+        # donation keeps the slot caches in place off-CPU; XLA-CPU cannot
+        # alias them and would warn, so gate like the replay engines do
+        donate = (6,) if jax.default_backend() != "cpu" else ()
+        self.step = jax.jit(
+            jax.vmap(one_slot, in_axes=(None, 0, 0, 0, 0, 0, 0)),
+            donate_argnums=donate)
+        self.admit = jax.jit(admit)
+        self.model = model
+        self.n_slots = n_slots
+        self.cache_cap = cache_cap
+
+    @property
+    def decode_compiles(self) -> int:
+        return self.step._cache_size()
+
+
+def slot_programs(cfg: ArchConfig, n_slots: int, cache_cap: int
+                  ) -> _SlotPrograms:
+    key = (cfg, n_slots, cache_cap)
+    if key not in _PROGRAMS:
+        _PROGRAMS[key] = _SlotPrograms(make_model(cfg), n_slots, cache_cap)
+    return _PROGRAMS[key]
+
+
+class ServeEngine:
+    """Continuous-batching scheduler over one compiled slot program.
+
+    Example::
+
+        eng = ServeEngine("qwen2-0.5b", slots=8, cache_cap=64)
+        outs = eng.serve([Request(prompt=[1, 2, 3], max_new_tokens=16)])
+        print(outs[0].tokens, outs[0].ttft_s)
+    """
+
+    def __init__(self, arch: Union[str, ArchConfig], *, slots: int = 4,
+                 cache_cap: int = 64, params=None, seed: int = 0,
+                 reduced: bool = True):
+        if isinstance(arch, str):
+            cfg = get_config(arch)
+            cfg = cfg.reduced() if reduced else cfg
+        else:
+            cfg = arch
+        if not cfg.supports_decode:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+        self.cfg = cfg
+        self.n_slots = slots
+        self.cache_cap = cache_cap
+        self._progs = slot_programs(cfg, slots, cache_cap)
+        self.model = self._progs.model
+        self.params = (params if params is not None
+                       else self.model.init(jax.random.PRNGKey(seed)))
+
+        self.ring = SlotRing(slots)
+        self._cache = jax.vmap(
+            lambda _: self.model.init_cache(1, cache_cap))(jnp.arange(slots))
+        self._keys = jnp.stack([jax.random.PRNGKey(0)] * slots)
+        self._xa = np.zeros((slots, cfg.d_active), np.float32)
+        self._temps = np.zeros((slots,), np.float32)
+
+        self._steps = 0
+        self._slot_steps = 0
+        self.last_run_stats: Dict[str, Any] = {}
+
+    # -- admission ------------------------------------------------------
+    def _admit(self, req: Request) -> int:
+        slot = self.ring.admit(req)
+        self._cache, self._keys = self._progs.admit(
+            self._cache, self._keys, jnp.int32(slot),
+            jax.random.PRNGKey(req.seed))
+        self._temps[slot] = req.temperature
+        self._xa[slot] = (0.0 if req.x_a is None
+                          else np.asarray(req.x_a, np.float32))
+        return slot
+
+    # -- scheduler loop -------------------------------------------------
+    def run(self, queue: RequestQueue, *, max_steps: Optional[int] = None,
+            idle_wait: float = 0.002) -> List[Completion]:
+        """Drive the slot batch until ``queue`` is closed and drained.
+        Returns the completions in eviction order (each request's future
+        is resolved the moment its slot is evicted)."""
+        done: List[Completion] = []
+        steps0, slot_steps0 = self._steps, self._slot_steps
+        t0 = time.perf_counter()
+        while True:
+            while self.ring.has_free():
+                req = queue.try_get()
+                if req is None:
+                    break
+                self._admit(req)
+            if not self.ring.any_active():
+                if queue.closed and queue.empty():
+                    break
+                queue.wait(idle_wait)
+                continue
+
+            toks = self.ring.feed_tokens()
+            active = self.ring.active_mask()
+            nxt, self._keys, self._cache = self._progs.step(
+                self.params, jnp.asarray(toks), jnp.asarray(self._xa),
+                jnp.asarray(self._temps), self._keys, jnp.asarray(active),
+                self._cache)
+            nxt_host = np.asarray(nxt)          # sync point of the step
+            now = time.perf_counter()
+            self._steps += 1
+            self._slot_steps += self.ring.n_active()
+
+            for slot in list(self.ring.active_slots()):
+                st = self.ring.state(slot)
+                if st.consume(int(nxt_host[slot]), now):
+                    comp = self.ring.evict(slot, now)
+                    done.append(comp)
+                    if st.req.future is not None:
+                        st.req.future.set_result(comp)
+            if max_steps is not None and self._steps - steps0 >= max_steps:
+                raise RuntimeError(
+                    f"scheduler exceeded max_steps={max_steps} with "
+                    f"{self.ring.n_active()} slots still active")
+        steps = self._steps - steps0
+        slot_steps = self._slot_steps - slot_steps0
+        self.last_run_stats = {
+            "steps": steps, "slot_steps": slot_steps,
+            "occupancy": slot_steps / max(steps * self.n_slots, 1),
+            "completed": len(done), "wall_s": time.perf_counter() - t0,
+            "decode_compiles": self._progs.decode_compiles,
+        }
+        return done
+
+    def serve(self, requests: Sequence[Request], **kw) -> List[Completion]:
+        """Closed-loop convenience: submit everything, drain, return
+        completions in submission order."""
+        q = RequestQueue()
+        for r in requests:
+            q.submit(r)
+        q.close()
+        return sorted(self.run(q, **kw), key=lambda c: c.rid)
+
+    # -- observability --------------------------------------------------
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "steps": self._steps, "slot_steps": self._slot_steps,
+            "occupancy": self._slot_steps / max(
+                self._steps * self.n_slots, 1),
+            "admitted": self.ring.admitted, "evicted": self.ring.evicted,
+            "decode_compiles": self._progs.decode_compiles,
+        }
+
+
+# ---------------------------------------------------------------------------
+def reference_decode(cfg: ArchConfig, params, req: Request, *,
+                     cache_cap: int = 64) -> List[int]:
+    """Plain single-request greedy/sampled decode (batch 1, no slot axis)
+    — the token-level oracle the slot-batched path is tested against.
+    XLA specializes B=1 differently, so parity with the slot program is
+    token-exact rather than bitwise (the bitwise contract lives between
+    occupancies of ONE compiled slot program)."""
+    model = make_model(cfg)
+    decode = jax.jit(make_decode_step(model))
+    cache = model.init_cache(1, cache_cap)
+    xa = jnp.asarray(
+        np.zeros((1, 1, cfg.d_active), np.float32) if req.x_a is None
+        else np.asarray(req.x_a, np.float32).reshape(1, 1, -1))
+    key = jax.random.PRNGKey(req.seed)
+    prompt = np.asarray(req.prompt, np.int32)
+    plen = prompt.size
+    pos = 0
+    out: List[int] = []
+    feed = int(prompt[0])
+    # mirror the slot program's step structure exactly: one key split per
+    # step (prefill steps included), sample kept once the prompt is done
+    while True:
+        logits, cache = decode(
+            params,
+            {"tokens_p": jnp.asarray([[feed]], jnp.int32), "x_a": xa},
+            cache)
+        key, sub = jax.random.split(key)
+        if req.temperature > 0:
+            tok = int(jax.random.categorical(
+                sub, logits[0] / max(req.temperature, 1e-6)))
+        else:
+            tok = int(jnp.argmax(logits[0]))
+        pos += 1
+        if pos >= plen:
+            out.append(tok)
+            if req.eos_id is not None and tok == req.eos_id:
+                break
+            if len(out) >= req.max_new_tokens:
+                break
+        feed = int(prompt[pos]) if pos < plen else out[-1]
+    return out

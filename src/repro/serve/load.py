@@ -1,0 +1,57 @@
+"""Open-loop load generation: Poisson arrivals against a ServeEngine.
+
+The generator thread submits requests with exponential inter-arrival
+gaps (offered rate = ``qps``) while the scheduler drains the queue in
+the caller's thread — arrivals never block on any single request, which
+is the serving half of the Pub/Sub decoupling argument.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.engine import ServeEngine
+from repro.serve.request import Completion, Request, RequestQueue
+
+
+def synthetic_requests(n: int, vocab_size: int, *, seed: int = 0,
+                       prompt_lens=(4, 12), max_new_tokens: int = 16,
+                       temperature: float = 0.0) -> List[Request]:
+    """Deterministic request mix: uniform prompt lengths, seeded prompts."""
+    rng = np.random.default_rng(seed)
+    lo, hi = prompt_lens
+    out = []
+    for i in range(n):
+        plen = int(rng.integers(lo, hi + 1))
+        out.append(Request(
+            prompt=rng.integers(0, vocab_size, size=(plen,)),
+            max_new_tokens=max_new_tokens, temperature=temperature,
+            seed=seed + i))
+    return out
+
+
+def open_loop(engine: ServeEngine, requests: Sequence[Request], qps: float,
+              *, seed: int = 0, max_steps: Optional[int] = None
+              ) -> List[Completion]:
+    """Submit ``requests`` at Poisson rate ``qps`` and drain the engine.
+    Returns completions in submission order."""
+    if qps <= 0:
+        raise ValueError("qps must be positive")
+    queue = RequestQueue()
+    gaps = np.random.default_rng(seed).exponential(1.0 / qps,
+                                                   size=len(requests))
+
+    def generator():
+        for req, gap in zip(requests, gaps):
+            time.sleep(gap)
+            queue.submit(req)
+        queue.close()
+
+    t = threading.Thread(target=generator, daemon=True)
+    t.start()
+    done = engine.run(queue, max_steps=max_steps)
+    t.join()
+    return sorted(done, key=lambda c: c.rid)

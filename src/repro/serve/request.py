@@ -1,0 +1,135 @@
+"""Requests, completions, and the thread-safe request queue.
+
+A :class:`Request` is what a client hands the serving engine: a real
+prompt (token ids for the passive party), the active party's private
+feature vector ``x_a``, per-request sampling params (runtime scalars of
+the compiled slot program — never a recompile), and stop conditions.
+``RequestQueue.submit`` stamps the arrival time and returns a
+:class:`concurrent.futures.Future` that resolves to a
+:class:`Completion` when the scheduler evicts the finished slot.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One generation request against the split model.
+
+    prompt          passive-party token ids, length >= 1 (consumed for
+                    real during prefill — the slot's first ``len(prompt)``
+                    steps feed these tokens into the cache)
+    max_new_tokens  decode budget; the slot is evicted when reached
+    temperature     0.0 = greedy argmax; > 0 = categorical sampling
+    seed            per-request sampling key (counter-based jax.random)
+    eos_id          optional stop token; eviction includes it in the output
+    x_a             active party's private feature vector (d_active,);
+                    zeros when omitted
+    """
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    seed: int = 0
+    eos_id: Optional[int] = None
+    x_a: Optional[np.ndarray] = None
+
+    # stamped by RequestQueue.submit
+    rid: int = -1
+    t_submit: float = 0.0
+    future: Optional[Future] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size < 1:
+            raise ValueError("prompt must hold at least one token")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+@dataclass
+class Completion:
+    """Resolved output of one request, with the latency breakdown the
+    load benchmark aggregates (TTFT = t_first - t_submit)."""
+    rid: int
+    prompt_len: int
+    tokens: List[int]
+    t_submit: float
+    t_admit: float
+    t_first: float
+    t_done: float
+    finish_reason: str = "length"          # "length" | "eos"
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first - self.t_submit
+
+    @property
+    def decode_s(self) -> float:
+        return self.t_done - self.t_first
+
+    @property
+    def per_token_s(self) -> float:
+        """Mean inter-token latency after the first token."""
+        n = len(self.tokens)
+        return self.decode_s / (n - 1) if n > 1 else 0.0
+
+
+class RequestQueue:
+    """Thread-safe FIFO between producers (clients / the load generator)
+    and the single scheduler thread.  Producers ``submit``; the scheduler
+    ``try_get``s without blocking while slots are busy and ``wait``s when
+    idle.  ``close`` ends the stream: the scheduler drains what is left
+    and returns."""
+
+    def __init__(self):
+        self._q: deque = deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        self._next_rid = 0
+
+    def submit(self, req: Request) -> Future:
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("queue is closed")
+            req.rid = self._next_rid
+            self._next_rid += 1
+            req.t_submit = time.perf_counter()
+            req.future = Future()
+            self._q.append(req)
+            self._cv.notify()
+        return req.future
+
+    def try_get(self) -> Optional[Request]:
+        with self._cv:
+            return self._q.popleft() if self._q else None
+
+    def wait(self, timeout: float) -> None:
+        """Block until something is queued, the queue closes, or timeout."""
+        with self._cv:
+            if not self._q and not self._closed:
+                self._cv.wait(timeout)
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def empty(self) -> bool:
+        with self._cv:
+            return not self._q
+
+    def __len__(self) -> int:
+        with self._cv:
+            return len(self._q)

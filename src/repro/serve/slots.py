@@ -1,0 +1,122 @@
+"""Slot-ring bookkeeping for continuous batching.
+
+The compiled decode step has a fixed slot axis; this module owns the
+host-side view of it: which slot holds which request, where each request
+is in its prompt/decode lifecycle, and the free-slot ring that admission
+draws from (the same ring discipline as the replay engine's embedding
+rings: free slots recycle in eviction order, so a slot's cache region is
+always either live for exactly one request or reset on admission).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from repro.serve.request import Completion, Request
+
+
+class SlotState:
+    """Lifecycle of one admitted request inside its slot.
+
+    ``pos`` counts tokens fed so far.  While ``pos < len(prompt)`` the slot
+    is prefilling (next feed = the real prompt token; sampled outputs are
+    discarded).  The step that consumes ``prompt[-1]`` produces the first
+    generated token — that transition stamps TTFT.
+    """
+
+    def __init__(self, req: Request, now: float):
+        self.req = req
+        self.pos = 0
+        self.out: List[int] = []
+        self.t_admit = now
+        self.t_first = 0.0
+        self.finish_reason = "length"
+
+    def next_feed(self) -> int:
+        if self.pos < self.req.prompt.size:
+            return int(self.req.prompt[self.pos])
+        return self.out[-1]
+
+    def consume(self, sampled: int, now: float) -> bool:
+        """Advance past the token just fed; record ``sampled`` if the fed
+        token completed the prompt.  Returns True when finished."""
+        self.pos += 1
+        if self.pos < self.req.prompt.size:
+            return False                        # still prefilling
+        if not self.out:
+            self.t_first = now
+        self.out.append(sampled)
+        if self.req.eos_id is not None and sampled == self.req.eos_id:
+            self.finish_reason = "eos"
+            return True
+        return len(self.out) >= self.req.max_new_tokens
+
+    def completion(self, now: float) -> Completion:
+        return Completion(
+            rid=self.req.rid, prompt_len=int(self.req.prompt.size),
+            tokens=list(self.out), t_submit=self.req.t_submit,
+            t_admit=self.t_admit, t_first=self.t_first, t_done=now,
+            finish_reason=self.finish_reason)
+
+
+class SlotRing:
+    """Fixed-size slot pool: admission pops the free ring, eviction pushes
+    back, active slots are iterated for feed/consume each step."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.n_slots = n_slots
+        self._free: deque = deque(range(n_slots))
+        self._state: List[Optional[SlotState]] = [None] * n_slots
+        self.admitted = 0
+        self.evicted = 0
+
+    # -- admission / eviction ------------------------------------------
+    def has_free(self) -> bool:
+        return bool(self._free)
+
+    def admit(self, req: Request, now: Optional[float] = None) -> int:
+        slot = self._free.popleft()
+        self._state[slot] = SlotState(
+            req, time.perf_counter() if now is None else now)
+        self.admitted += 1
+        return slot
+
+    def evict(self, slot: int, now: float) -> Completion:
+        st = self._state[slot]
+        assert st is not None, f"evicting empty slot {slot}"
+        self._state[slot] = None
+        self._free.append(slot)
+        self.evicted += 1
+        return st.completion(now)
+
+    # -- per-step views -------------------------------------------------
+    def any_active(self) -> bool:
+        return len(self._free) < self.n_slots
+
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def active_slots(self) -> Iterator[int]:
+        return (i for i, s in enumerate(self._state) if s is not None)
+
+    def state(self, slot: int) -> SlotState:
+        st = self._state[slot]
+        assert st is not None
+        return st
+
+    def feed_tokens(self) -> np.ndarray:
+        """(n_slots,) int32 next-token feed; inactive slots feed 0 (their
+        compute runs but is masked out of sampling and cache updates)."""
+        toks = np.zeros((self.n_slots,), np.int32)
+        for i, st in enumerate(self._state):
+            if st is not None:
+                toks[i] = st.next_feed()
+        return toks
+
+    def active_mask(self) -> np.ndarray:
+        return np.asarray([s is not None for s in self._state], bool)
