@@ -16,11 +16,12 @@ plus `r.train` (the TrainResult, e.g. `epochs_to_target`) and
 """
 from __future__ import annotations
 
+import json
 import os
 import resource
 import sys
 import time
-from typing import Iterable, List
+from typing import Dict, Iterable, List
 
 from repro.api import ExperimentConfig, RunResult, Session
 
@@ -46,6 +47,23 @@ def run_point(cfg: ExperimentConfig, *, reuse: str = "structural"
     r = Session(cfg, reuse=reuse).run()
     r.metrics["peak_host_mb"] = peak_host_mb()
     return r
+
+
+def merge_bench_json(path: str, updates: Dict) -> Dict:
+    """Update top-level keys of a JSON bench record in place, keeping
+    the keys other suites own (`serve_load` writes config/archs,
+    `serve_chaos` writes chaos — both into BENCH_serve.json)."""
+    rec = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                rec = json.load(fh)
+        except (OSError, json.JSONDecodeError):
+            rec = {}                 # torn/legacy record: start fresh
+    rec.update(updates)
+    with open(path, "w") as fh:
+        json.dump(rec, fh, indent=2)
+    return rec
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

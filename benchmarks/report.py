@@ -60,9 +60,32 @@ def dryrun_tables(path: str) -> None:
               f"{t['model_flops']:.3e} | {t['useful_ratio']:.2f} |")
 
 
+def serve_chaos_table(rec: dict) -> None:
+    cfg = rec["config"]
+    print(f"\n### §Serving under chaos — deadlines, admission control, "
+          f"crash recovery ({cfg['arch']}, qps={cfg['qps']:g}, "
+          f"queue_cap={cfg['queue_cap']}, "
+          f"deadline={cfg['deadline_s']:g}s)\n")
+    print("| severity | goodput | shed rate | restarts | "
+          "recovery p50 ms | replay parity | finish reasons |")
+    print("|---|---|---|---|---|---|---|")
+    for name, row in rec["severities"].items():
+        p = row["replay_parity"]
+        reasons = ", ".join(f"{k}:{v}" for k, v in
+                            sorted(row["by_finish_reason"].items()))
+        print(f"| {name} | {row['goodput']:.2f} | "
+              f"{row['shed_rate']:.2f} | {row['restarts']} | "
+              f"{row['recovery_p50_ms']:.1f} | "
+              f"{p['matched']}/{p['checked']} | {reasons} |")
+
+
 def serve_table(path: str = "BENCH_serve.json") -> None:
     with open(path) as fh:
         rec = json.load(fh)
+    if "chaos" in rec:
+        serve_chaos_table(rec["chaos"])
+    if "config" not in rec:          # chaos-only record: nothing else
+        return
     cfg = rec["config"]
     print(f"\n### §Serving — continuous batching under Poisson load "
           f"(slots={cfg['slots']}, gen={cfg['gen']}, "

@@ -16,7 +16,7 @@ from benchmarks.common import emit_header
 SUITES = ("kernels", "replay_throughput", "accuracy", "efficiency",
           "heterogeneity", "privacy", "workers", "batch_size", "ablation",
           "multiparty", "criteo", "cut_placement", "roofline", "chaos",
-          "serve_load")
+          "serve_load", "serve_chaos")
 
 
 def main() -> None:

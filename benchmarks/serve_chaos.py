@@ -1,0 +1,248 @@
+"""Serve-side chaos benchmark (→ BENCH_serve.json ``"chaos"`` record).
+
+Poisson load through the continuous-batching engine while a
+deterministic `ServeFaultPlan` degrades it — straggler drift, one-off
+stalls, transient step failures, fatal engine crashes and poisoned
+requests — per severity, with a bounded queue and per-request
+deadlines so overload shows up as admission-control shed instead of
+silent latency collapse.  `run_with_recovery` rebuilds the engine after
+each crash and replays the in-flight requests from their prompts.
+
+Recorded per severity (the serving twin of ``benchmarks/chaos.py``):
+goodput (fraction of offered requests finishing "length"/"eos" inside
+their deadline), shed rate (queue rejections + expired), restart count
+and recovery latency, and the **replay-parity assertion** — every
+completed request's tokens must equal the fault-free oracle run,
+crashes included.
+
+  PYTHONPATH=src python -m benchmarks.serve_chaos [--smoke]
+
+--smoke: one crash severity, no deadlines/bounds (every request must
+complete), asserting all futures resolved, >= 1 recovery, exactly one
+compiled decode program, and 100% replay parity; exits non-zero
+otherwise (the CI serve-chaos step).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.serve import (QueueFull, Request, ServeEngine, ServeFaultPlan,
+                         StepStall, StragglerDrift, open_loop,
+                         run_with_recovery, synthetic_requests)
+
+from benchmarks.common import SEED, emit, emit_header, merge_bench_json
+
+ARCH = os.environ.get("REPRO_SERVE_ARCH", "qwen2-0.5b")
+N_REQUESTS = int(os.environ.get("REPRO_SERVE_REQUESTS", "24"))
+SLOTS = int(os.environ.get("REPRO_SERVE_SLOTS", "8"))
+GEN = int(os.environ.get("REPRO_SERVE_GEN", "16"))
+PROMPT_LENS = (4, 12)
+CACHE_CAP = PROMPT_LENS[1] + GEN
+QPS = float(os.environ.get("REPRO_SERVE_QPS", "64"))
+QUEUE_CAP = int(os.environ.get("REPRO_SERVE_QUEUE_CAP", "8"))
+DEADLINE_S = float(os.environ.get("REPRO_SERVE_DEADLINE_S", "2.0"))
+MAX_RESTARTS = 5
+
+# fault severities: drift/stall latency injection grows, transient step
+# failures multiply, then fatal crashes (one per engine incarnation)
+# and a poisoned request join in
+SEVERITIES = {
+    "mild": ServeFaultPlan(
+        drift=StragglerDrift(start_step=0, per_step_s=2e-4, cap_s=0.01),
+        stalls=(StepStall(at_step=5, stall_s=0.05),),
+        step_fails=(7,)),
+    "moderate": ServeFaultPlan(
+        drift=StragglerDrift(start_step=0, per_step_s=5e-4, cap_s=0.02),
+        stalls=(StepStall(at_step=8, stall_s=0.1),),
+        step_fails=(5, 12), crashes=(15,)),
+    "severe": ServeFaultPlan(
+        drift=StragglerDrift(start_step=0, per_step_s=1e-3, cap_s=0.03),
+        stalls=(StepStall(at_step=6, stall_s=0.15),
+                StepStall(at_step=20, stall_s=0.15)),
+        step_fails=(4, 11, 18), crashes=(12, 10), poison_rids=(3,)),
+}
+
+
+def _requests(vocab: int, n: int, deadline_s):
+    return synthetic_requests(n, vocab, seed=SEED, prompt_lens=PROMPT_LENS,
+                              max_new_tokens=GEN, deadline_s=deadline_s)
+
+
+def _oracle(params, vocab: int, n: int) -> dict:
+    """Fault-free tokens per request seed (seeds are unique per request:
+    the stable join key between a chaos completion and its oracle)."""
+    eng = ServeEngine(ARCH, slots=SLOTS, cache_cap=CACHE_CAP, seed=SEED,
+                      params=params)
+    done = eng.serve(_requests(vocab, n, None))
+    reqs = _requests(vocab, n, None)
+    return {reqs[c.rid].seed: c.tokens for c in done}
+
+
+def bench_severity(name: str, plan: ServeFaultPlan, params, vocab: int,
+                   oracle: dict, n: int) -> dict:
+    eng = ServeEngine(ARCH, slots=SLOTS, cache_cap=CACHE_CAP, seed=SEED,
+                      params=params, faults=plan)
+    queue = eng.queue(capacity=QUEUE_CAP, policy="reject")
+    reqs = _requests(vocab, n, DEADLINE_S)
+    gaps = np.random.default_rng(SEED).exponential(1.0 / QPS, size=n)
+    accepted: dict = {}              # rid -> Request
+    counts = {"offered": 0, "rejected": 0}
+
+    def generator():
+        for req, gap in zip(reqs, gaps):
+            time.sleep(gap)
+            counts["offered"] += 1
+            try:
+                queue.submit(req)
+                accepted[req.rid] = req
+            except QueueFull:
+                counts["rejected"] += 1
+        queue.close()
+
+    t = threading.Thread(target=generator, daemon=True)
+    t.start()
+    t0 = time.perf_counter()
+    res = run_with_recovery(eng, queue, max_restarts=MAX_RESTARTS,
+                            backoff_s=0.01)
+    wall = time.perf_counter() - t0
+    t.join()
+
+    done = res.completions
+    by_reason: dict = {}
+    for c in done:
+        by_reason[c.finish_reason] = by_reason.get(c.finish_reason, 0) + 1
+    ok = [c for c in done if c.ok]
+    expired = by_reason.get("expired", 0)
+    parity_ok = sum(c.tokens == oracle[accepted[c.rid].seed] for c in ok)
+    stats = res.engine.last_run_stats
+    row = {
+        "faults": plan.to_dict(),
+        "offered": counts["offered"],
+        "rejected": counts["rejected"],
+        "submitted": counts["offered"] - counts["rejected"],
+        "completed": len(done),
+        "by_finish_reason": by_reason,
+        "goodput": len(ok) / max(counts["offered"], 1),
+        "shed_rate": (counts["rejected"] + expired)
+        / max(counts["offered"], 1),
+        "restarts": res.restarts,
+        "recovery_s": list(res.recovery_s),
+        "recovery_p50_ms": (float(np.median(res.recovery_s)) * 1e3
+                            if res.recovery_s else 0.0),
+        "replay_parity": {"checked": len(ok), "matched": parity_ok},
+        "wall_s": wall,
+        "gen_tokens": sum(len(c.tokens) for c in done),
+        "decode_compiles": stats["decode_compiles"],
+    }
+    emit(f"serve_chaos/{ARCH}/{name}", wall * 1e6 / max(n, 1),
+         f"goodput={row['goodput']:.2f};shed={row['shed_rate']:.2f};"
+         f"restarts={res.restarts};"
+         f"parity={parity_ok}/{len(ok)}")
+    return row
+
+
+def validate(rows: dict) -> list:
+    """Hard contract of the chaos record: every future resolved, every
+    completed request token-for-token equal to the fault-free run."""
+    errors = []
+    for name, row in rows.items():
+        if row["completed"] != row["submitted"]:
+            errors.append(
+                f"{name}: {row['completed']}/{row['submitted']} "
+                "submitted requests resolved (futures hang?)")
+        p = row["replay_parity"]
+        if p["matched"] != p["checked"]:
+            errors.append(
+                f"{name}: replay parity broke "
+                f"({p['matched']}/{p['checked']} token-identical)")
+        if row["decode_compiles"] != 1:
+            errors.append(f"{name}: {row['decode_compiles']} decode "
+                          "compiles (want exactly 1 per shape)")
+    return errors
+
+
+def run(*, severities=None, n_requests: int = N_REQUESTS,
+        check: bool = False) -> dict:
+    severities = severities or SEVERITIES
+    probe = ServeEngine(ARCH, slots=SLOTS, cache_cap=CACHE_CAP, seed=SEED)
+    vocab, params = probe.cfg.vocab_size, probe.params
+    probe.serve(_requests(vocab, 1, None))        # warm the slot program
+    oracle = _oracle(params, vocab, n_requests)
+
+    rows = {}
+    for name, plan in severities.items():
+        rows[name] = bench_severity(name, plan, params, vocab, oracle,
+                                    n_requests)
+
+    out = {"config": {
+        "arch": ARCH, "n_requests": n_requests, "slots": SLOTS,
+        "gen": GEN, "prompt_lens": list(PROMPT_LENS),
+        "cache_cap": CACHE_CAP, "qps": QPS, "queue_cap": QUEUE_CAP,
+        "deadline_s": DEADLINE_S, "max_restarts": MAX_RESTARTS,
+        "seed": SEED,
+    }, "severities": rows}
+    merge_bench_json("BENCH_serve.json", {"chaos": out})
+    emit("serve_chaos/bench_json", 0.0,
+         f"wrote={os.path.abspath('BENCH_serve.json')}")
+
+    errors = validate(rows)
+    for e in errors:
+        print(f"# serve chaos FAIL: {e}", file=sys.stderr)
+    if check and errors:
+        raise SystemExit(1)
+    return out
+
+
+def smoke() -> None:
+    """CI leg: crash mid-batch, recover, and prove nothing was lost —
+    no deadlines and an unbounded queue, so EVERY offered request must
+    come back ok and token-identical to the fault-free oracle."""
+    n = 6
+    probe = ServeEngine(ARCH, slots=SLOTS, cache_cap=CACHE_CAP, seed=SEED)
+    vocab, params = probe.cfg.vocab_size, probe.params
+    probe.serve(_requests(vocab, 1, None))
+    oracle = _oracle(params, vocab, n)
+
+    plan = ServeFaultPlan(step_fails=(3,), crashes=(8,))
+    eng = ServeEngine(ARCH, slots=SLOTS, cache_cap=CACHE_CAP, seed=SEED,
+                      params=params, faults=plan)
+    reqs = _requests(vocab, n, None)
+    events: dict = {}
+    done = open_loop(eng, reqs, qps=200.0, seed=SEED,
+                     queue=eng.queue(), recover=True,
+                     max_restarts=MAX_RESTARTS, events=events)
+
+    failures = []
+    if len(done) != n:
+        failures.append(f"{len(done)}/{n} futures resolved")
+    if not all(c.ok for c in done):
+        failures.append("non-ok completion under recoverable faults: "
+                        f"{[c.finish_reason for c in done]}")
+    if events.get("restarts", 0) < 1:
+        failures.append("injected crash did not trigger a recovery")
+    bad = [c.rid for c in done
+           if c.tokens != oracle[reqs[c.rid].seed]]
+    if bad:
+        failures.append(f"replay parity broke for rids {bad}")
+    stats = eng.last_run_stats or {}
+    if stats.get("decode_compiles", 1) != 1:
+        failures.append(f"{stats['decode_compiles']} decode compiles")
+    for f in failures:
+        print(f"# serve chaos smoke FAIL: {f}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+    emit("serve_chaos/smoke", 0.0,
+         f"restarts={events['restarts']};parity={n}/{n}")
+
+
+if __name__ == "__main__":
+    emit_header()
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        run(check="--check" in sys.argv)

@@ -19,7 +19,6 @@ and the BENCH_serve.json record is well-formed (the CI serve step).
 """
 from __future__ import annotations
 
-import json
 import os
 import sys
 import time
@@ -28,7 +27,7 @@ import numpy as np
 
 from repro.serve import ServeEngine, open_loop, synthetic_requests
 
-from benchmarks.common import SEED, emit, emit_header
+from benchmarks.common import SEED, emit, emit_header, merge_bench_json
 
 ARCHS = ("qwen2-0.5b", "phi4-mini-3.8b", "recurrentgemma-9b", "rwkv6-1.6b")
 QPS_POINTS = (4.0, 16.0, 64.0)
@@ -148,8 +147,8 @@ def run(*, archs=ARCHS, qps_points=QPS_POINTS, n_requests=N_REQUESTS,
     for arch in archs:
         out["archs"][arch] = bench_arch(arch, qps_points, n_requests)
 
-    with open("BENCH_serve.json", "w") as fh:
-        json.dump(out, fh, indent=2)
+    # merge, don't overwrite: serve_chaos.py owns the "chaos" key
+    merge_bench_json("BENCH_serve.json", out)
     emit("serve/bench_json", 0.0,
          f"wrote={os.path.abspath('BENCH_serve.json')}")
 

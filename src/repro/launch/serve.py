@@ -12,6 +12,17 @@ open-loop:          Poisson arrivals at --load QPS through the
                     continuous-batching scheduler
   PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-9b \
       --load 16 --requests 32 --slots 8 --gen 16
+
+Robustness knobs (docs/architecture.md §Robustness & overload):
+``--deadline S`` sheds/preempts requests past their latency budget,
+``--queue-cap N`` bounds the backlog (``--queue-policy reject|block``),
+and ``--crash-step K`` injects a fatal engine crash at scheduler step K
+— served through `run_with_recovery`, which rebuilds the engine and
+replays the in-flight requests token-for-token:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+      --load 32 --requests 24 --deadline 2.0 --queue-cap 8 \
+      --crash-step 12
 """
 from __future__ import annotations
 
@@ -22,8 +33,8 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.configs import get_config
-from repro.serve import (Completion, Request, ServeEngine, open_loop,
-                         synthetic_requests)
+from repro.serve import (Completion, Request, ServeEngine, ServeFaultPlan,
+                         open_loop, run_with_recovery, synthetic_requests)
 
 
 def _parse_prompt(spec: str) -> List[int]:
@@ -34,7 +45,8 @@ def build_requests(args, vocab_size: int) -> List[Request]:
     if args.prompt:
         toks = _parse_prompt(args.prompt)
         return [Request(prompt=toks, max_new_tokens=args.gen,
-                        temperature=args.temperature, seed=args.seed + i)
+                        temperature=args.temperature, seed=args.seed + i,
+                        deadline_s=args.deadline)
                 for i in range(args.batch)]
     # seeded synthetic prompts — drawn ONCE per request and consumed for
     # real during prefill (the first sampled token conditions on them)
@@ -42,7 +54,8 @@ def build_requests(args, vocab_size: int) -> List[Request]:
     return synthetic_requests(
         n, vocab_size, seed=args.seed,
         prompt_lens=(args.prompt_len, args.prompt_len),
-        max_new_tokens=args.gen, temperature=args.temperature)
+        max_new_tokens=args.gen, temperature=args.temperature,
+        deadline_s=args.deadline)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> List[Completion]:
@@ -65,6 +78,16 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Completion]:
                     help="open-loop mode: offered Poisson QPS")
     ap.add_argument("--requests", type=int, default=32,
                     help="open-loop request count")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request latency budget in seconds "
+                         "(expired requests shed/preempted)")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="bound the request queue (admission control)")
+    ap.add_argument("--queue-policy", choices=("reject", "block"),
+                    default="reject")
+    ap.add_argument("--crash-step", type=int, default=None,
+                    help="inject a fatal engine crash at this scheduler "
+                         "step; served under run_with_recovery")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
@@ -75,25 +98,53 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Completion]:
     plen_max = max(r.prompt.size for r in requests)
     cap = args.cache_cap or (plen_max + args.gen)
     slots = args.slots or (8 if args.load else args.batch)
-    engine = ServeEngine(cfg, slots=slots, cache_cap=cap, seed=args.seed)
+    faults = (ServeFaultPlan(crashes=(args.crash_step,))
+              if args.crash_step is not None else None)
+    engine = ServeEngine(cfg, slots=slots, cache_cap=cap, seed=args.seed,
+                         faults=faults)
+    recover = faults is not None
 
     t0 = time.time()
+    events: dict = {}
     if args.load:
-        done = open_loop(engine, requests, args.load, seed=args.seed)
+        queue = engine.queue(capacity=args.queue_cap,
+                             policy=args.queue_policy)
+        done = open_loop(engine, requests, args.load, seed=args.seed,
+                         queue=queue, recover=recover, events=events)
+    elif recover:
+        queue = engine.queue()
+        for r in requests:
+            queue.submit(r)
+        queue.close()
+        res = run_with_recovery(engine, queue)
+        events["restarts"] = res.restarts
+        done = res.completions
     else:
         done = engine.serve(requests)
     dt = time.time() - t0
 
     stats = engine.last_run_stats
+    ok = [c for c in done if c.ok]
     n_tok = sum(len(c.tokens) for c in done)
-    ttft = np.asarray([c.ttft_s for c in done])
     print(f"arch={cfg.name} slots={slots} requests={len(done)} "
           f"gen_tokens={n_tok} {n_tok / dt:.1f} tok/s "
           f"occupancy={stats['occupancy']:.2f} "
           f"decode_compiles={stats['decode_compiles']}")
-    print(f"ttft p50={np.percentile(ttft, 50) * 1e3:.1f}ms "
-          f"p99={np.percentile(ttft, 99) * 1e3:.1f}ms")
-    print("sample:", done[0].tokens[:16])
+    if ok:
+        ttft = np.asarray([c.ttft_s for c in ok])
+        print(f"ttft p50={np.percentile(ttft, 50) * 1e3:.1f}ms "
+              f"p99={np.percentile(ttft, 99) * 1e3:.1f}ms")
+    reasons: dict = {}
+    for c in done:
+        reasons[c.finish_reason] = reasons.get(c.finish_reason, 0) + 1
+    if events or len(reasons) > 1:
+        parts = [f"{k}:{v}" for k, v in sorted(reasons.items())]
+        if "rejected" in events:
+            parts.append(f"queue_rejected:{events['rejected']}")
+        if "restarts" in events:
+            parts.append(f"restarts:{events['restarts']}")
+        print("robustness:", " ".join(parts))
+    print("sample:", done[0].tokens[:16] if done else [])
     return done
 
 

@@ -1,16 +1,32 @@
 """Continuous-batching split-inference serving.
 
 Request queue → slot-ring KV/recurrent caches → one jitted joint decode
-step per (arch, slot_count, cache_cap).  See docs/architecture.md
-§Split-inference serving.
+step per (arch, slot_count, cache_cap), with admission control,
+deadlines, deterministic fault injection and crash recovery.  See
+docs/architecture.md §Split-inference serving and §Robustness &
+overload.
 """
-from repro.serve.engine import ServeEngine, reference_decode, slot_programs
+from repro.serve.engine import (EngineCrashed, RecoveryGaveUp,
+                                RecoveryResult, SchedulerAborted,
+                                ServeEngine, reference_decode,
+                                run_with_recovery, slot_programs)
+from repro.serve.faults import (InjectedCrash, InjectedStepFailure,
+                                ServeFaultPlan, StepStall, StragglerDrift)
 from repro.serve.load import open_loop, synthetic_requests
-from repro.serve.request import Completion, Request, RequestQueue
+from repro.serve.request import (FINISH_REASONS, Completion, QueueClosed,
+                                 QueueFull, Request, RequestQueue,
+                                 RequestRejected, fail_future,
+                                 resolve_future, terminal_completion)
 from repro.serve.slots import SlotRing, SlotState
 
 __all__ = [
     "ServeEngine", "Request", "RequestQueue", "Completion", "SlotRing",
     "SlotState", "open_loop", "synthetic_requests", "reference_decode",
     "slot_programs",
+    # robustness layer
+    "FINISH_REASONS", "QueueClosed", "QueueFull", "RequestRejected",
+    "SchedulerAborted", "EngineCrashed", "RecoveryGaveUp",
+    "RecoveryResult", "run_with_recovery", "ServeFaultPlan", "StepStall",
+    "StragglerDrift", "InjectedCrash", "InjectedStepFailure",
+    "resolve_future", "fail_future", "terminal_completion",
 ]

@@ -19,11 +19,36 @@ stream depends only on its own request — not on which slot it landed
 in, how full the batch is, or what traffic shares the batch — because
 the vmapped program computes slots independently and inactive-slot
 writes are masked out.
+
+Robustness contract (pinned by tests/test_serve_robustness.py, see
+docs/architecture.md §Robustness & overload):
+
+* **no exit path hangs a client** — normal drain resolves futures at
+  eviction; a ``max_steps`` abort resolves every in-flight and queued
+  future with ``finish_reason="aborted"`` before raising; any exception
+  escaping the step loop either fails every future
+  (``Future.set_exception``, the default) or — under
+  :func:`run_with_recovery` — re-queues the in-flight requests for
+  replay and raises :class:`EngineCrashed`;
+* **per-request validation never kills the batch** — an oversized
+  request (``prompt_len + max_new_tokens > cache_cap``), a misshapen
+  ``x_a``, or a fault-plan-poisoned rid fails only its own future
+  (``finish_reason="error"``) while the rest of the batch keeps
+  decoding;
+* **deadlines are enforced on both sides of admission** — queued
+  requests past ``deadline_s`` are shed un-run, running slots are
+  preempted at the first step past it (partial tokens kept,
+  ``finish_reason="expired"``);
+* **crash recovery replays bit-for-bit** — engines of one
+  (arch, slot_count, cache_cap) share ONE jitted program (the
+  process-wide ``_PROGRAMS`` cache) and admission re-seeds the slot key
+  from ``PRNGKey(req.seed)``, so a request replayed from its prompt on
+  a rebuilt engine emits token-for-token the fault-free stream.
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional, Sequence, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,13 +56,38 @@ import numpy as np
 
 from repro.configs import ArchConfig, get_config
 from repro.launch.steps import make_decode_step, make_model
-from repro.serve.request import Completion, Request, RequestQueue
+from repro.serve.faults import InjectedStepFailure, ServeFaultPlan
+from repro.serve.request import (Completion, Request, RequestQueue,
+                                 RequestRejected, fail_future,
+                                 resolve_future, terminal_completion)
 from repro.serve.slots import SlotRing
 
 # process-wide program cache: (cfg, slots, cache_cap) -> _SlotPrograms.
 # Engines sharing a key share ONE jitted step, so a request replayed on a
 # different engine instance of the same shape is bitwise reproducible.
 _PROGRAMS: Dict[Any, "_SlotPrograms"] = {}
+
+
+class SchedulerAborted(RuntimeError):
+    """The scheduler gave up (``max_steps`` exhausted with work still
+    pending).  Every in-flight and queued future has already been
+    resolved with ``finish_reason="aborted"`` when this reaches the
+    caller."""
+
+
+class EngineCrashed(RuntimeError):
+    """The scheduler loop died mid-batch (injected crash or real bug).
+    ``completed`` holds the completions finished before the crash (their
+    futures are already resolved); the unfinished requests were either
+    failed (``fail_futures=True``) or put back at the front of the queue
+    for replay (``fail_futures=False`` — the `run_with_recovery`
+    path)."""
+
+    def __init__(self, msg: str, *, step: int,
+                 completed: List[Completion]):
+        super().__init__(msg)
+        self.step = step
+        self.completed = completed
 
 
 class _SlotPrograms:
@@ -101,7 +151,9 @@ class ServeEngine:
 
     def __init__(self, arch: Union[str, ArchConfig], *, slots: int = 4,
                  cache_cap: int = 64, params=None, seed: int = 0,
-                 reduced: bool = True):
+                 reduced: bool = True,
+                 faults: Optional[ServeFaultPlan] = None,
+                 max_step_retries: int = 3):
         if isinstance(arch, str):
             cfg = get_config(arch)
             cfg = cfg.reduced() if reduced else cfg
@@ -112,6 +164,9 @@ class ServeEngine:
         self.cfg = cfg
         self.n_slots = slots
         self.cache_cap = cache_cap
+        self._seed = seed
+        self._faults = faults
+        self.max_step_retries = max_step_retries
         self._progs = slot_programs(cfg, slots, cache_cap)
         self.model = self._progs.model
         self.params = (params if params is not None
@@ -128,7 +183,55 @@ class ServeEngine:
         self._slot_steps = 0
         self.last_run_stats: Dict[str, Any] = {}
 
+    def respawn(self) -> "ServeEngine":
+        """A fresh engine of the same shape/params/fault plan — the
+        crash-recovery rebuild.  Same ``_PROGRAMS`` key, so the replayed
+        requests go through the very same compiled step."""
+        return ServeEngine(self.cfg, slots=self.n_slots,
+                           cache_cap=self.cache_cap, params=self.params,
+                           seed=self._seed, faults=self._faults,
+                           max_step_retries=self.max_step_retries)
+
     # -- admission ------------------------------------------------------
+    def _reject_reason(self, req: Request, *, at_admit: bool = False
+                       ) -> Optional[RequestRejected]:
+        """Why this request cannot run on this engine, or None.  Poison
+        faults only manifest at admit (the request *looks* valid to
+        submit-side validation, the point of that fault mode)."""
+        need = int(req.prompt.size) + req.max_new_tokens
+        if need > self.cache_cap:
+            return RequestRejected(
+                "overflow",
+                f"prompt_len + max_new_tokens = {need} exceeds the "
+                f"slot cache capacity {self.cache_cap} (the KV ring "
+                "would wrap and emit garbage)")
+        if req.x_a is not None:
+            xa = np.asarray(req.x_a, np.float32).reshape(-1)
+            if xa.size != self.cfg.d_active:
+                return RequestRejected(
+                    "bad_x_a",
+                    f"x_a has {xa.size} features, engine expects "
+                    f"d_active={self.cfg.d_active}")
+        if (at_admit and self._faults is not None
+                and self._faults.poisoned(req.rid)):
+            return RequestRejected(
+                "poisoned", f"rid {req.rid} poisoned by the fault plan")
+        return None
+
+    def validate(self, req: Request) -> None:
+        """Submit-side validation: raise :class:`RequestRejected` for a
+        request this engine can never serve."""
+        err = self._reject_reason(req)
+        if err is not None:
+            raise err
+
+    def queue(self, *, capacity: Optional[int] = None,
+              policy: str = "reject") -> RequestQueue:
+        """A request queue wired to this engine: submit-side shape
+        validation plus optional bounded-capacity admission control."""
+        return RequestQueue(capacity=capacity, policy=policy,
+                            validate=self.validate)
+
     def _admit(self, req: Request) -> int:
         slot = self.ring.admit(req)
         self._cache, self._keys = self._progs.admit(
@@ -136,65 +239,177 @@ class ServeEngine:
             jax.random.PRNGKey(req.seed))
         self._temps[slot] = req.temperature
         self._xa[slot] = (0.0 if req.x_a is None
-                          else np.asarray(req.x_a, np.float32))
+                          else np.asarray(req.x_a, np.float32).reshape(-1))
         return slot
+
+    def _reset_slots(self) -> None:
+        """Drop all slot state after a crash — the rebuilt/reused engine
+        starts from an empty ring and zeroed host-side operands."""
+        self.ring = SlotRing(self.n_slots)
+        self._cache = jax.vmap(
+            lambda _: self.model.init_cache(1, self.cache_cap))(
+                jnp.arange(self.n_slots))
+        self._keys = jnp.stack([jax.random.PRNGKey(0)] * self.n_slots)
+        self._xa = np.zeros((self.n_slots, self.cfg.d_active), np.float32)
+        self._temps = np.zeros((self.n_slots,), np.float32)
 
     # -- scheduler loop -------------------------------------------------
     def run(self, queue: RequestQueue, *, max_steps: Optional[int] = None,
-            idle_wait: float = 0.002) -> List[Completion]:
+            idle_wait: float = 0.002, fail_futures: bool = True
+            ) -> List[Completion]:
         """Drive the slot batch until ``queue`` is closed and drained.
         Returns the completions in eviction order (each request's future
-        is resolved the moment its slot is evicted)."""
+        is resolved the moment its slot is evicted; shed/errored
+        requests get terminal completions in the same list).
+
+        fail_futures   what an escaping exception does to unfinished
+                       requests: True (default) fails every future so no
+                       client ever hangs; False re-queues the in-flight
+                       requests at the front of ``queue`` and leaves
+                       futures pending — ONLY for a caller that commits
+                       to retrying (`run_with_recovery`) or failing them
+                       itself."""
         done: List[Completion] = []
+        counters = {"shed_expired": 0, "preempted": 0, "rejected": 0,
+                    "step_retries": 0, "injected_stall_s": 0.0}
         steps0, slot_steps0 = self._steps, self._slot_steps
         t0 = time.perf_counter()
-        while True:
-            while self.ring.has_free():
-                req = queue.try_get()
-                if req is None:
-                    break
-                self._admit(req)
-            if not self.ring.any_active():
-                if queue.closed and queue.empty():
-                    break
-                queue.wait(idle_wait)
-                continue
+        try:
+            while True:
+                # admit: validate / shed / place queued requests
+                while self.ring.has_free():
+                    req = queue.try_get()
+                    if req is None:
+                        break
+                    now = time.perf_counter()
+                    err = self._reject_reason(req, at_admit=True)
+                    if err is not None:
+                        comp = terminal_completion(
+                            req, "error", now, error=str(err))
+                        counters["rejected"] += 1
+                        done.append(comp)
+                        resolve_future(req.future, comp)
+                        continue
+                    if req.expired(now):
+                        comp = terminal_completion(req, "expired", now)
+                        counters["shed_expired"] += 1
+                        done.append(comp)
+                        resolve_future(req.future, comp)
+                        continue
+                    self._admit(req)
+                if not self.ring.any_active():
+                    if queue.closed and queue.empty():
+                        break
+                    queue.wait(idle_wait)
+                    continue
+                if (max_steps is not None
+                        and self._steps - steps0 >= max_steps):
+                    raise SchedulerAborted(
+                        f"scheduler exceeded max_steps={max_steps} with "
+                        f"{self.ring.n_active()} slots still active")
 
-            toks = self.ring.feed_tokens()
-            active = self.ring.active_mask()
-            nxt, self._keys, self._cache = self._progs.step(
-                self.params, jnp.asarray(toks), jnp.asarray(self._xa),
-                jnp.asarray(self._temps), self._keys, jnp.asarray(active),
-                self._cache)
-            nxt_host = np.asarray(nxt)          # sync point of the step
+                # fault hooks: stall/drift, transient step failure
+                # (retried — nothing was mutated yet), fatal crash
+                try:
+                    if self._faults is not None:
+                        dt = self._faults.stall_s_at(self._steps)
+                        if dt > 0:
+                            counters["injected_stall_s"] += dt
+                            time.sleep(dt)
+                        if self._faults.take_step_failure(self._steps):
+                            raise InjectedStepFailure(self._steps)
+                        self._faults.maybe_crash(self._steps)
+                except InjectedStepFailure:
+                    counters["step_retries"] += 1
+                    if counters["step_retries"] > self.max_step_retries:
+                        raise RuntimeError(
+                            "step retry budget exhausted "
+                            f"({self.max_step_retries})")
+                    continue                   # retry: inputs untouched
+
+                toks = self.ring.feed_tokens()
+                active = self.ring.active_mask()
+                nxt, self._keys, self._cache = self._progs.step(
+                    self.params, jnp.asarray(toks), jnp.asarray(self._xa),
+                    jnp.asarray(self._temps), self._keys,
+                    jnp.asarray(active), self._cache)
+                nxt_host = np.asarray(nxt)      # sync point of the step
+                now = time.perf_counter()
+                self._steps += 1
+                self._slot_steps += self.ring.n_active()
+
+                for slot in list(self.ring.active_slots()):
+                    st = self.ring.state(slot)
+                    if st.consume(int(nxt_host[slot]), now):
+                        comp = self.ring.evict(slot, now)
+                        done.append(comp)
+                        resolve_future(st.req.future, comp)
+                    elif st.expired(now):
+                        # deadline preemption: partial tokens kept
+                        st.finish_reason = "expired"
+                        comp = self.ring.evict(slot, now)
+                        counters["preempted"] += 1
+                        done.append(comp)
+                        resolve_future(st.req.future, comp)
+        except SchedulerAborted:
+            # resolve EVERYTHING before surfacing: in-flight slots keep
+            # their partial tokens, queued requests abort un-run
             now = time.perf_counter()
-            self._steps += 1
-            self._slot_steps += self.ring.n_active()
-
             for slot in list(self.ring.active_slots()):
                 st = self.ring.state(slot)
-                if st.consume(int(nxt_host[slot]), now):
-                    comp = self.ring.evict(slot, now)
-                    done.append(comp)
-                    if st.req.future is not None:
-                        st.req.future.set_result(comp)
-            if max_steps is not None and self._steps - steps0 >= max_steps:
-                raise RuntimeError(
-                    f"scheduler exceeded max_steps={max_steps} with "
-                    f"{self.ring.n_active()} slots still active")
+                st.finish_reason = "aborted"
+                comp = self.ring.evict(slot, now)
+                done.append(comp)
+                resolve_future(st.req.future, comp)
+            for req in queue.drain(close=True):
+                comp = terminal_completion(req, "aborted", now)
+                done.append(comp)
+                resolve_future(req.future, comp)
+            self._finish_stats(done, counters, steps0, slot_steps0, t0)
+            raise
+        except BaseException as cause:
+            inflight = sorted(
+                (self.ring.state(s).req for s in self.ring.active_slots()),
+                key=lambda r: r.rid)
+            self._reset_slots()
+            crash = EngineCrashed(
+                f"serve engine crashed at step {self._steps}: {cause!r}",
+                step=self._steps, completed=list(done))
+            # KeyboardInterrupt/SystemExit are process kills, not
+            # engine faults: fail the futures (no hangs) but propagate
+            # the original so recovery never "retries" a Ctrl-C
+            if fail_futures or not isinstance(cause, Exception):
+                for req in inflight:
+                    fail_future(req.future, crash)
+                for req in queue.drain(close=True):
+                    fail_future(req.future, crash)
+            else:
+                queue.requeue(inflight)
+            self._finish_stats(done, counters, steps0, slot_steps0, t0)
+            if not isinstance(cause, Exception):
+                raise
+            raise crash from cause
+        self._finish_stats(done, counters, steps0, slot_steps0, t0)
+        return done
+
+    def _finish_stats(self, done, counters, steps0, slot_steps0,
+                      t0) -> None:
         steps = self._steps - steps0
         slot_steps = self._slot_steps - slot_steps0
         self.last_run_stats = {
             "steps": steps, "slot_steps": slot_steps,
             "occupancy": slot_steps / max(steps * self.n_slots, 1),
-            "completed": len(done), "wall_s": time.perf_counter() - t0,
+            "completed": len(done),
+            "completed_ok": sum(c.ok for c in done),
+            "wall_s": time.perf_counter() - t0,
             "decode_compiles": self._progs.decode_compiles,
+            **counters,
         }
-        return done
 
     def serve(self, requests: Sequence[Request], **kw) -> List[Completion]:
         """Closed-loop convenience: submit everything, drain, return
-        completions in submission order."""
+        completions in submission order (invalid requests come back as
+        ``finish_reason="error"`` completions, not exceptions)."""
         q = RequestQueue()
         for r in requests:
             q.submit(r)
@@ -211,6 +426,72 @@ class ServeEngine:
             "admitted": self.ring.admitted, "evicted": self.ring.evicted,
             "decode_compiles": self._progs.decode_compiles,
         }
+
+
+# ---------------------------------------------------------------------------
+class RecoveryGaveUp(RuntimeError):
+    """`run_with_recovery` exhausted ``max_restarts``.  Every still-
+    unfinished future has been failed with the final `EngineCrashed`
+    before this raises — clients never hang."""
+
+
+class RecoveryResult:
+    """Outcome of `run_with_recovery`: the merged completions (crash
+    survivors + replays), how many times the engine was rebuilt, the
+    per-recovery latency, and the engine that finished the run."""
+
+    def __init__(self, completions: List[Completion], restarts: int,
+                 recovery_s: List[float], engine: ServeEngine):
+        self.completions = completions
+        self.restarts = restarts
+        self.recovery_s = recovery_s
+        self.engine = engine
+
+
+def run_with_recovery(engine: ServeEngine, queue: RequestQueue, *,
+                      max_restarts: int = 3, backoff_s: float = 0.01,
+                      rebuild: Optional[Callable[[ServeEngine],
+                                                 ServeEngine]] = None,
+                      **run_kw) -> RecoveryResult:
+    """Drive ``engine.run(queue)`` under a crash watchdog: whenever the
+    scheduler dies (`EngineCrashed`), rebuild the engine (default:
+    ``engine.respawn()`` — same shape, same params, same compiled
+    program) after exponential backoff and keep serving the SAME queue.
+    The crashed run has already put its in-flight requests back at the
+    front of the queue, so they replay from their prompts —
+    token-for-token identical to a fault-free run, because admission
+    re-seeds the slot from ``PRNGKey(req.seed)`` and the slot program is
+    shared process-wide (`tests/test_serve_robustness.py` pins this).
+
+    Completions finished before each crash are kept (their futures
+    resolved at eviction); after ``max_restarts`` recoveries every
+    still-pending future is failed and `RecoveryGaveUp` raises."""
+    rebuild = rebuild or (lambda old: old.respawn())
+    done: List[Completion] = []
+    recovery_s: List[float] = []
+    restarts = 0
+    eng = engine
+    while True:
+        try:
+            done += eng.run(queue, fail_futures=False, **run_kw)
+            return RecoveryResult(sorted(done, key=lambda c: c.rid),
+                                  restarts, recovery_s, eng)
+        except EngineCrashed as crash:
+            done += crash.completed
+            restarts += 1
+            if restarts > max_restarts:
+                gave_up = RecoveryGaveUp(
+                    f"engine crashed {restarts} times "
+                    f"(max_restarts={max_restarts}): {crash}")
+                gave_up.__cause__ = crash
+                for req in queue.drain(close=True):
+                    fail_future(req.future, gave_up)
+                raise gave_up
+            t_rec = time.perf_counter()
+            if backoff_s > 0:
+                time.sleep(backoff_s * (2 ** (restarts - 1)))
+            eng = rebuild(eng)
+            recovery_s.append(time.perf_counter() - t_rec)
 
 
 # ---------------------------------------------------------------------------

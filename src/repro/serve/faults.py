@@ -1,0 +1,170 @@
+"""Declarative fault plans for the serving scheduler — `core/faults.py`'s
+twin on the inference side.
+
+A :class:`ServeFaultPlan` describes *what goes wrong* while the engine
+serves: scheduler-step stalls and straggler drift (wall-clock latency
+injected before the compiled step), transient step failures (the step
+"fails" once and is retried — same inputs, same compiled program, so
+the retry is bitwise the step that should have run), fatal engine
+crashes (the in-memory slot caches are lost; only
+`engine.run_with_recovery` brings the requests back), and poisoned
+requests (admission blows up for a specific rid).
+
+Everything is indexed by the engine's **scheduler step counter** or a
+request's **rid**, never by wall-clock time or a host RNG — so a plan
+replays identically under the run seed, which is what lets
+`benchmarks/serve_chaos.py` assert token-for-token replay parity across
+a crash.  One-shot faults (step failures, crashes) fire once per plan
+instance: a recovered engine sharing the plan does not re-crash at the
+same step, mirroring `api.callbacks.Watchdog`'s `_fired` discipline.
+Crashes are consumed in tuple order against each engine incarnation's
+own step counter, so ``crashes=(10, 30)`` means "first engine dies at
+step 10, its replacement dies at step 30".
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Set, Tuple
+
+
+class InjectedStepFailure(RuntimeError):
+    """Transient failure of one scheduler step.  The scheduler retries
+    the step (inputs untouched — nothing was mutated), so a plan with
+    step failures still produces bit-identical output."""
+
+    def __init__(self, step: int):
+        super().__init__(f"injected transient step failure at step {step}")
+        self.step = step
+
+
+class InjectedCrash(RuntimeError):
+    """Fatal engine crash: slot caches and in-flight decode state are
+    gone.  `ServeEngine.run` wraps this (like any other scheduler-loop
+    exception) in `EngineCrashed` after re-queueing the in-flight
+    requests for replay."""
+
+    def __init__(self, step: int):
+        super().__init__(f"injected engine crash at step {step}")
+        self.step = step
+
+
+@dataclass(frozen=True)
+class StepStall:
+    """One-off stall: the scheduler sleeps `stall_s` seconds before
+    executing step `at_step` (an operator pause, a GC spike, a
+    preempted VM — anything that stops the world once)."""
+    at_step: int
+    stall_s: float
+
+
+@dataclass(frozen=True)
+class StragglerDrift:
+    """Cadence drift: every step >= `start_step` pays an extra
+    ``min(cap_s, (step - start_step) * per_step_s)`` seconds — the
+    serving-side analogue of `core.faults.StragglerFault`'s ramp (a
+    slowly degrading accelerator or a noisy neighbour)."""
+    start_step: int = 0
+    per_step_s: float = 0.0
+    cap_s: float = math.inf
+
+
+@dataclass
+class ServeFaultPlan:
+    """The full failure scenario of one serving run.
+
+    stalls       one-off `StepStall`s
+    drift        optional `StragglerDrift`
+    step_fails   step indices that fail transiently once (retried)
+    crashes      engine-lifetime step indices that kill the engine, one
+                 per engine incarnation, consumed in order
+    poison_rids  rids whose admission fails (the request *looks* valid
+                 at submit but breaks the engine-side admit — only that
+                 request's future fails, serving continues)
+    """
+    stalls: Tuple[StepStall, ...] = ()
+    drift: Optional[StragglerDrift] = None
+    step_fails: Tuple[int, ...] = ()
+    crashes: Tuple[int, ...] = ()
+    poison_rids: Tuple[int, ...] = ()
+
+    # one-shot bookkeeping (never serialized, never compared)
+    _fired_fails: Set[int] = field(default_factory=set, repr=False,
+                                   compare=False)
+    _crashes_taken: int = field(default=0, repr=False, compare=False)
+
+    def __post_init__(self):
+        self.stalls = tuple(self.stalls)
+        self.step_fails = tuple(self.step_fails)
+        self.crashes = tuple(self.crashes)
+        self.poison_rids = tuple(self.poison_rids)
+        for s in self.stalls:
+            if s.at_step < 0 or s.stall_s < 0:
+                raise ValueError("StepStall needs at_step >= 0, "
+                                 "stall_s >= 0")
+        if self.drift is not None:
+            d = self.drift
+            if d.start_step < 0 or d.per_step_s < 0 or d.cap_s < 0:
+                raise ValueError("StragglerDrift fields must be >= 0")
+        if any(k < 0 for k in self.step_fails + self.crashes):
+            raise ValueError("step indices must be >= 0")
+        if any(r < 0 for r in self.poison_rids):
+            raise ValueError("poison rids must be >= 0")
+
+    @property
+    def empty(self) -> bool:
+        return not (self.stalls or self.step_fails or self.crashes
+                    or self.poison_rids
+                    or (self.drift is not None
+                        and self.drift.per_step_s > 0))
+
+    # -- scheduler-side hooks ------------------------------------------
+    def stall_s_at(self, step: int) -> float:
+        """Injected latency before `step` runs (stalls + drift)."""
+        dt = sum(s.stall_s for s in self.stalls if s.at_step == step)
+        if self.drift is not None and step >= self.drift.start_step:
+            dt += min(self.drift.cap_s,
+                      (step - self.drift.start_step)
+                      * self.drift.per_step_s)
+        return dt
+
+    def take_step_failure(self, step: int) -> bool:
+        """True exactly once for each step index in `step_fails`."""
+        if step in self.step_fails and step not in self._fired_fails:
+            self._fired_fails.add(step)
+            return True
+        return False
+
+    def maybe_crash(self, step: int) -> None:
+        """Raise `InjectedCrash` when this engine incarnation's step
+        counter reaches the next unconsumed crash index."""
+        if self._crashes_taken >= len(self.crashes):
+            return
+        at = self.crashes[self._crashes_taken]
+        if step >= at:
+            self._crashes_taken += 1
+            raise InjectedCrash(step)
+
+    def poisoned(self, rid: int) -> bool:
+        return rid in self.poison_rids
+
+    # -- JSON round trip (benchmarks, CLI) ------------------------------
+    def to_dict(self) -> Dict:
+        return {
+            "stalls": [s.__dict__.copy() for s in self.stalls],
+            "drift": (None if self.drift is None
+                      else self.drift.__dict__.copy()),
+            "step_fails": list(self.step_fails),
+            "crashes": list(self.crashes),
+            "poison_rids": list(self.poison_rids),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ServeFaultPlan":
+        drift = d.get("drift")
+        return cls(
+            stalls=tuple(StepStall(**s) for s in d.get("stalls", ())),
+            drift=None if drift is None else StragglerDrift(**drift),
+            step_fails=tuple(d.get("step_fails", ())),
+            crashes=tuple(d.get("crashes", ())),
+            poison_rids=tuple(d.get("poison_rids", ())))

@@ -4,22 +4,33 @@ The generator thread submits requests with exponential inter-arrival
 gaps (offered rate = ``qps``) while the scheduler drains the queue in
 the caller's thread — arrivals never block on any single request, which
 is the serving half of the Pub/Sub decoupling argument.
+
+Robustness hooks: pass an engine-wired bounded ``queue``
+(`ServeEngine.queue(capacity=..., policy="reject")`) and the generator
+absorbs admission-control rejections (`QueueFull` / `RequestRejected`)
+instead of dying — rejected offers are counted in ``events``;
+``recover=True`` drives the scheduler through
+`engine.run_with_recovery` so an engine crash mid-load is rebuilt and
+the in-flight requests replay from their prompts.
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.serve.engine import ServeEngine
-from repro.serve.request import Completion, Request, RequestQueue
+from repro.serve.engine import ServeEngine, run_with_recovery
+from repro.serve.request import (Completion, QueueClosed, QueueFull,
+                                 Request, RequestQueue, RequestRejected)
 
 
 def synthetic_requests(n: int, vocab_size: int, *, seed: int = 0,
                        prompt_lens=(4, 12), max_new_tokens: int = 16,
-                       temperature: float = 0.0) -> List[Request]:
+                       temperature: float = 0.0,
+                       deadline_s: Optional[float] = None
+                       ) -> List[Request]:
     """Deterministic request mix: uniform prompt lengths, seeded prompts."""
     rng = np.random.default_rng(seed)
     lo, hi = prompt_lens
@@ -29,29 +40,50 @@ def synthetic_requests(n: int, vocab_size: int, *, seed: int = 0,
         out.append(Request(
             prompt=rng.integers(0, vocab_size, size=(plen,)),
             max_new_tokens=max_new_tokens, temperature=temperature,
-            seed=seed + i))
+            seed=seed + i, deadline_s=deadline_s))
     return out
 
 
 def open_loop(engine: ServeEngine, requests: Sequence[Request], qps: float,
-              *, seed: int = 0, max_steps: Optional[int] = None
+              *, seed: int = 0, max_steps: Optional[int] = None,
+              queue: Optional[RequestQueue] = None, recover: bool = False,
+              max_restarts: int = 3, events: Optional[Dict] = None
               ) -> List[Completion]:
     """Submit ``requests`` at Poisson rate ``qps`` and drain the engine.
-    Returns completions in submission order."""
+    Returns completions in submission order.  ``events`` (if given) is
+    filled with offered/rejected counts and — under ``recover=True`` —
+    restart count and per-recovery latency."""
     if qps <= 0:
         raise ValueError("qps must be positive")
-    queue = RequestQueue()
+    queue = queue if queue is not None else RequestQueue()
     gaps = np.random.default_rng(seed).exponential(1.0 / qps,
                                                    size=len(requests))
+    counts = {"offered": 0, "rejected": 0}
 
     def generator():
         for req, gap in zip(requests, gaps):
             time.sleep(gap)
-            queue.submit(req)
+            counts["offered"] += 1
+            try:
+                queue.submit(req)
+            except (QueueFull, RequestRejected):
+                counts["rejected"] += 1       # admission control said no
+            except QueueClosed:
+                break                         # engine died / run aborted
         queue.close()
 
     t = threading.Thread(target=generator, daemon=True)
     t.start()
-    done = engine.run(queue, max_steps=max_steps)
+    if recover:
+        res = run_with_recovery(engine, queue, max_steps=max_steps,
+                                max_restarts=max_restarts)
+        done = res.completions
+        if events is not None:
+            events["restarts"] = res.restarts
+            events["recovery_s"] = list(res.recovery_s)
+    else:
+        done = engine.run(queue, max_steps=max_steps)
     t.join()
+    if events is not None:
+        events.update(counts)
     return sorted(done, key=lambda c: c.rid)

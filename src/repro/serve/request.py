@@ -1,12 +1,28 @@
-"""Requests, completions, and the thread-safe request queue.
+"""Requests, completions, and the thread-safe bounded request queue.
 
 A :class:`Request` is what a client hands the serving engine: a real
 prompt (token ids for the passive party), the active party's private
 feature vector ``x_a``, per-request sampling params (runtime scalars of
-the compiled slot program — never a recompile), and stop conditions.
-``RequestQueue.submit`` stamps the arrival time and returns a
-:class:`concurrent.futures.Future` that resolves to a
-:class:`Completion` when the scheduler evicts the finished slot.
+the compiled slot program — never a recompile), stop conditions, and an
+optional ``deadline_s`` latency budget.  ``RequestQueue.submit`` stamps
+the arrival time and returns a :class:`concurrent.futures.Future` that
+resolves to a :class:`Completion` when the scheduler evicts the
+finished slot.
+
+Robustness contract (docs/architecture.md §Robustness & overload):
+
+* the queue is optionally **bounded** — ``RequestQueue(capacity=N,
+  policy="reject")`` raises :class:`QueueFull` at submit when the
+  backlog is at capacity, ``policy="block"`` parks the producer until a
+  slot frees or the queue closes;
+* every completion carries a ``finish_reason`` from the closed taxonomy
+  ``"length" | "eos" | "expired" | "aborted" | "error"`` — a client
+  checks :attr:`Completion.ok` instead of parsing strings;
+* a future handed out by ``submit`` is ALWAYS resolved, whatever the
+  scheduler does — normal eviction, deadline expiry, abort, per-request
+  validation failure, or engine crash (``set_exception``).  The
+  ``resolve_future`` / ``fail_future`` helpers make resolution
+  idempotent so racing exit paths never raise ``InvalidStateError``.
 """
 from __future__ import annotations
 
@@ -14,10 +30,54 @@ import threading
 import time
 from collections import deque
 from concurrent.futures import Future
-from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
+
+FINISH_REASONS = ("length", "eos", "expired", "aborted", "error")
+
+
+class QueueClosed(RuntimeError):
+    """Submit against a closed queue (also raised to producers parked on
+    a full ``policy="block"`` queue when it closes under them)."""
+
+
+class QueueFull(RuntimeError):
+    """Submit against a bounded queue at capacity under
+    ``policy="reject"`` — the admission-control signal a client backs
+    off on."""
+
+    def __init__(self, capacity: int):
+        super().__init__(f"request queue is at capacity ({capacity})")
+        self.capacity = capacity
+
+
+class RequestRejected(ValueError):
+    """Structured per-request validation failure.  ``reason`` is a
+    stable machine-checkable code (``"overflow" | "bad_x_a" |
+    "poisoned"``); ``detail`` is the human explanation."""
+
+    def __init__(self, reason: str, detail: str):
+        super().__init__(f"{reason}: {detail}")
+        self.reason = reason
+        self.detail = detail
+
+
+def resolve_future(fut: Optional[Future], result) -> bool:
+    """Idempotent ``set_result`` — no-op on None or already-done."""
+    if fut is not None and not fut.done():
+        fut.set_result(result)
+        return True
+    return False
+
+
+def fail_future(fut: Optional[Future], exc: BaseException) -> bool:
+    """Idempotent ``set_exception`` — no-op on None or already-done."""
+    if fut is not None and not fut.done():
+        fut.set_exception(exc)
+        return True
+    return False
 
 
 @dataclass
@@ -33,6 +93,11 @@ class Request:
     eos_id          optional stop token; eviction includes it in the output
     x_a             active party's private feature vector (d_active,);
                     zeros when omitted
+    deadline_s      optional latency budget measured from submission:
+                    queued requests past it are shed un-run
+                    (finish_reason="expired", no tokens), running slots
+                    are preempted at the first step past it (partial
+                    tokens kept)
     """
     prompt: Sequence[int]
     max_new_tokens: int = 16
@@ -40,6 +105,7 @@ class Request:
     seed: int = 0
     eos_id: Optional[int] = None
     x_a: Optional[np.ndarray] = None
+    deadline_s: Optional[float] = None
 
     # stamped by RequestQueue.submit
     rid: int = -1
@@ -52,6 +118,21 @@ class Request:
             raise ValueError("prompt must hold at least one token")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.temperature < 0.0:
+            raise ValueError("temperature must be >= 0")
+        if self.deadline_s is not None and self.deadline_s <= 0.0:
+            raise ValueError("deadline_s must be > 0 when given")
+
+    @property
+    def deadline(self) -> Optional[float]:
+        """Absolute deadline on the submit clock, None when unbounded."""
+        if self.deadline_s is None:
+            return None
+        return self.t_submit + self.deadline_s
+
+    def expired(self, now: float) -> bool:
+        d = self.deadline
+        return d is not None and now > d
 
 
 @dataclass
@@ -65,7 +146,13 @@ class Completion:
     t_admit: float
     t_first: float
     t_done: float
-    finish_reason: str = "length"          # "length" | "eos"
+    finish_reason: str = "length"  # "length"|"eos"|"expired"|"aborted"|"error"
+    error: Optional[str] = None    # detail when finish_reason == "error"
+
+    @property
+    def ok(self) -> bool:
+        """True when the request ran to a normal stop condition."""
+        return self.finish_reason in ("length", "eos")
 
     @property
     def ttft_s(self) -> float:
@@ -82,40 +169,113 @@ class Completion:
         return self.decode_s / (n - 1) if n > 1 else 0.0
 
 
+def terminal_completion(req: Request, reason: str, now: float, *,
+                        tokens: Optional[List[int]] = None,
+                        error: Optional[str] = None) -> Completion:
+    """A completion for a request that never (fully) ran: shed expired,
+    aborted-at-exit, or failed validation."""
+    return Completion(
+        rid=req.rid, prompt_len=int(req.prompt.size),
+        tokens=list(tokens or []), t_submit=req.t_submit, t_admit=now,
+        t_first=0.0, t_done=now, finish_reason=reason, error=error)
+
+
 class RequestQueue:
     """Thread-safe FIFO between producers (clients / the load generator)
     and the single scheduler thread.  Producers ``submit``; the scheduler
     ``try_get``s without blocking while slots are busy and ``wait``s when
     idle.  ``close`` ends the stream: the scheduler drains what is left
-    and returns."""
+    and returns.
 
-    def __init__(self):
+    capacity   None = unbounded (the PR-8 behaviour); an int bounds the
+               backlog — admission control instead of silent latency
+               collapse under overload
+    policy     "reject": submit at capacity raises :class:`QueueFull`;
+               "block": submit parks until space frees or the queue
+               closes (:class:`QueueClosed`)
+    validate   optional callable run against each submitted request
+               BEFORE it is queued (raise :class:`RequestRejected`) —
+               `ServeEngine.queue()` wires its shape checks in here so
+               oversized/misshapen requests bounce at submit instead of
+               poisoning the scheduler
+    """
+
+    POLICIES = ("reject", "block")
+
+    def __init__(self, capacity: Optional[int] = None,
+                 policy: str = "reject",
+                 validate: Optional[Callable[[Request], None]] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError("capacity must be >= 1 (None = unbounded)")
+        if policy not in self.POLICIES:
+            raise ValueError(f"policy {policy!r} not in {self.POLICIES}")
+        self.capacity = capacity
+        self.policy = policy
+        self._validate = validate
         self._q: deque = deque()
         self._cv = threading.Condition()
         self._closed = False
         self._next_rid = 0
 
+    # -- producer side --------------------------------------------------
+    def _full(self) -> bool:
+        return self.capacity is not None and len(self._q) >= self.capacity
+
     def submit(self, req: Request) -> Future:
+        if self._validate is not None:
+            self._validate(req)                 # raises RequestRejected
         with self._cv:
+            if self.policy == "block":
+                while self._full() and not self._closed:
+                    self._cv.wait()
             if self._closed:
-                raise RuntimeError("queue is closed")
+                raise QueueClosed("queue is closed")
+            if self._full():
+                raise QueueFull(self.capacity)
             req.rid = self._next_rid
             self._next_rid += 1
             req.t_submit = time.perf_counter()
             req.future = Future()
             self._q.append(req)
-            self._cv.notify()
+            self._cv.notify_all()
         return req.future
 
+    def requeue(self, reqs: Sequence[Request]) -> None:
+        """Put already-admitted requests back at the FRONT of the queue,
+        keeping their rid/future/t_submit stamps.  Crash-recovery path:
+        bypasses capacity, validation and the closed flag (the requests
+        were admitted once; their clients still hold live futures)."""
+        with self._cv:
+            self._q.extendleft(reversed(list(reqs)))
+            self._cv.notify_all()
+
+    # -- scheduler side -------------------------------------------------
     def try_get(self) -> Optional[Request]:
         with self._cv:
-            return self._q.popleft() if self._q else None
+            if not self._q:
+                return None
+            req = self._q.popleft()
+            self._cv.notify_all()       # wake producers parked on "block"
+            return req
 
     def wait(self, timeout: float) -> None:
         """Block until something is queued, the queue closes, or timeout."""
         with self._cv:
             if not self._q and not self._closed:
                 self._cv.wait(timeout)
+
+    def drain(self, close: bool = True) -> List[Request]:
+        """Pop everything still queued (optionally closing the queue so
+        late producers get :class:`QueueClosed` instead of a black
+        hole).  The engine's abort/crash exit paths use this to resolve
+        every outstanding future."""
+        with self._cv:
+            reqs = list(self._q)
+            self._q.clear()
+            if close:
+                self._closed = True
+            self._cv.notify_all()
+        return reqs
 
     def close(self) -> None:
         with self._cv:

@@ -34,6 +34,12 @@ class SlotState:
         self.t_admit = now
         self.t_first = 0.0
         self.finish_reason = "length"
+        self.deadline = req.deadline          # absolute, None = unbounded
+
+    def expired(self, now: float) -> bool:
+        """Past the request's deadline — the scheduler preempts the slot
+        (partial tokens are kept, finish_reason becomes "expired")."""
+        return self.deadline is not None and now > self.deadline
 
     def next_feed(self) -> int:
         if self.pos < self.req.prompt.size:

@@ -1,0 +1,412 @@
+"""Robustness layer of the serving subsystem (ISSUE 10).
+
+Pins the overload/fault contracts of `src/repro/serve/`:
+  * no scheduler exit path leaves a future unresolved — normal drain,
+    max_steps abort, per-request validation failure, engine crash;
+  * admission control: bounded queue reject/block semantics, submit-side
+    shape validation, queue-side deadline shedding, running-slot
+    deadline preemption (finish_reason taxonomy);
+  * deterministic serve-side faults (`serve/faults.py`): stalls/drift,
+    transient step failures (retried, bit-identical output), fatal
+    crashes;
+  * crash recovery (`run_with_recovery`): the engine is rebuilt, the
+    in-flight requests replay from their prompts, and the outputs are
+    token-for-token identical to the fault-free run — the acceptance
+    criterion of the PR.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve import (EngineCrashed, QueueClosed, QueueFull,
+                         RecoveryGaveUp, Request, RequestQueue,
+                         RequestRejected, SchedulerAborted, ServeEngine,
+                         ServeFaultPlan, StepStall, StragglerDrift,
+                         run_with_recovery)
+
+
+def make_requests(vocab, n, *, gen=6, seed0=0, **kw):
+    rng = np.random.default_rng(7)
+    return [
+        Request(prompt=rng.integers(0, vocab, size=(int(rng.integers(3, 9)),)),
+                max_new_tokens=gen, seed=seed0 + i, **kw)
+        for i in range(n)
+    ]
+
+
+def clone(req, **kw):
+    base = dict(prompt=np.asarray(req.prompt),
+                max_new_tokens=req.max_new_tokens,
+                temperature=req.temperature, seed=req.seed,
+                eos_id=req.eos_id, x_a=req.x_a, deadline_s=req.deadline_s)
+    base.update(kw)
+    return Request(**base)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    """Warmed engine: the (qwen2, 4, 32) slot program is compiled before
+    any timing-sensitive (deadline) test runs."""
+    eng = ServeEngine("qwen2-0.5b", slots=4, cache_cap=32, seed=0)
+    eng.serve([Request(prompt=[1, 2, 3], max_new_tokens=2)])
+    return eng
+
+
+def fresh(qwen, **kw):
+    """Engine sharing qwen's params + compiled program (same shape)."""
+    return ServeEngine("qwen2-0.5b", slots=4, cache_cap=32,
+                       params=qwen.params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# request / fault-plan validation units
+# ---------------------------------------------------------------------------
+def test_request_validation():
+    with pytest.raises(ValueError):
+        Request(prompt=[1], temperature=-0.1)
+    with pytest.raises(ValueError):
+        Request(prompt=[1], deadline_s=0.0)
+    r = Request(prompt=[1], deadline_s=2.0)
+    assert r.deadline == r.t_submit + 2.0
+    assert not r.expired(r.t_submit + 1.0)
+    assert r.expired(r.t_submit + 2.5)
+    assert Request(prompt=[1]).deadline is None
+
+
+def test_fault_plan_validation_and_roundtrip():
+    with pytest.raises(ValueError):
+        ServeFaultPlan(stalls=(StepStall(at_step=-1, stall_s=0.1),))
+    with pytest.raises(ValueError):
+        ServeFaultPlan(drift=StragglerDrift(per_step_s=-1e-3))
+    with pytest.raises(ValueError):
+        ServeFaultPlan(crashes=(-2,))
+    plan = ServeFaultPlan(
+        stalls=(StepStall(at_step=3, stall_s=0.01),),
+        drift=StragglerDrift(start_step=2, per_step_s=1e-4, cap_s=0.05),
+        step_fails=(5,), crashes=(9, 20), poison_rids=(1,))
+    assert not plan.empty
+    assert ServeFaultPlan().empty
+    back = ServeFaultPlan.from_dict(plan.to_dict())
+    assert back == plan
+    # stall accounting: one-off + capped drift
+    assert plan.stall_s_at(3) == pytest.approx(0.01 + 1e-4)
+    assert plan.stall_s_at(1000) == pytest.approx(0.05)
+    # one-shot semantics
+    assert plan.take_step_failure(5) and not plan.take_step_failure(5)
+    assert back.poisoned(1) and not back.poisoned(0)
+
+
+# ---------------------------------------------------------------------------
+# RequestQueue: bounded capacity + concurrency
+# ---------------------------------------------------------------------------
+def test_queue_bounded_reject():
+    q = RequestQueue(capacity=2, policy="reject")
+    q.submit(Request(prompt=[1]))
+    q.submit(Request(prompt=[2]))
+    with pytest.raises(QueueFull) as ei:
+        q.submit(Request(prompt=[3]))
+    assert ei.value.capacity == 2
+    assert len(q) == 2                       # rejected offer not queued
+    q.try_get()
+    q.submit(Request(prompt=[4]))            # space freed -> accepted
+
+
+def test_queue_bounded_block_unblocks_on_pop():
+    q = RequestQueue(capacity=1, policy="block")
+    q.submit(Request(prompt=[1]))
+    submitted = []
+
+    def producer():
+        submitted.append(q.submit(Request(prompt=[2])))
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    assert not submitted                     # parked on the full queue
+    assert q.try_get() is not None
+    t.join(timeout=5.0)
+    assert not t.is_alive() and len(submitted) == 1
+
+
+def test_queue_bounded_block_raises_on_close():
+    q = RequestQueue(capacity=1, policy="block")
+    q.submit(Request(prompt=[1]))
+    err = []
+
+    def producer():
+        try:
+            q.submit(Request(prompt=[2]))
+        except QueueClosed as e:
+            err.append(e)
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    q.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and len(err) == 1
+
+
+def test_queue_multi_producer_rids_unique():
+    q = RequestQueue()
+    n_threads, per = 8, 25
+
+    def producer(k):
+        for i in range(per):
+            q.submit(Request(prompt=[k, i]))
+
+    ts = [threading.Thread(target=producer, args=(k,))
+          for k in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    rids = []
+    while True:
+        r = q.try_get()
+        if r is None:
+            break
+        rids.append(r.rid)
+    assert sorted(rids) == list(range(n_threads * per))
+
+
+def test_queue_submit_close_race():
+    """Racing submits against close: every submit either lands in the
+    queue or raises QueueClosed — nothing is lost or duplicated."""
+    q = RequestQueue()
+    outcomes = {"ok": 0, "closed": 0}
+    lock = threading.Lock()
+
+    def producer():
+        for i in range(50):
+            try:
+                q.submit(Request(prompt=[i + 1]))
+                with lock:
+                    outcomes["ok"] += 1
+            except QueueClosed:
+                with lock:
+                    outcomes["closed"] += 1
+
+    ts = [threading.Thread(target=producer) for _ in range(4)]
+    for t in ts:
+        t.start()
+    time.sleep(0.002)
+    q.close()
+    for t in ts:
+        t.join()
+    assert outcomes["ok"] + outcomes["closed"] == 200
+    assert len(q) == outcomes["ok"]
+
+
+def test_queue_wait_close_race():
+    """A scheduler parked in wait() returns promptly when the queue
+    closes under it (no deadlock, no full timeout burn)."""
+    q = RequestQueue()
+    waited = []
+
+    def scheduler():
+        t0 = time.perf_counter()
+        q.wait(30.0)
+        waited.append(time.perf_counter() - t0)
+
+    t = threading.Thread(target=scheduler, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    q.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    assert waited and waited[0] < 5.0
+
+
+def test_queue_requeue_preserves_stamps():
+    q = RequestQueue()
+    f0 = q.submit(Request(prompt=[1]))
+    f1 = q.submit(Request(prompt=[2]))
+    a, b = q.try_get(), q.try_get()
+    q.requeue([a, b])
+    a2, b2 = q.try_get(), q.try_get()
+    assert (a2.rid, b2.rid) == (0, 1)        # front, original order
+    assert a2.future is f0 and b2.future is f1
+
+
+# ---------------------------------------------------------------------------
+# per-request validation: reject at submit, fail-only-that-future at admit
+# ---------------------------------------------------------------------------
+def test_overflow_rejected_at_submit(qwen):
+    q = qwen.queue()
+    with pytest.raises(RequestRejected) as ei:
+        q.submit(Request(prompt=list(range(1, 30)), max_new_tokens=8))
+    assert ei.value.reason == "overflow"
+    assert q.empty()
+    # boundary: exactly cache_cap fits
+    q.submit(Request(prompt=list(range(1, 25)), max_new_tokens=8))
+
+
+def test_overflow_caught_at_admit(qwen):
+    """An oversized request through a plain (unvalidated) queue used to
+    silently wrap the slot's KV ring and emit garbage — now it comes
+    back as a structured error completion, and the batch survives."""
+    good = Request(prompt=[3, 1, 4, 1], max_new_tokens=4)
+    big = Request(prompt=list(range(1, 30)), max_new_tokens=8)
+    out = qwen.serve([clone(good), big, clone(good)])
+    assert [c.finish_reason for c in out] == ["length", "error", "length"]
+    assert "overflow" in out[1].error and out[1].tokens == []
+    assert out[0].tokens == out[2].tokens
+
+
+def test_bad_xa_fails_only_that_request(qwen):
+    solo = qwen.serve([Request(prompt=[3, 1, 4, 1], max_new_tokens=4)])[0]
+    bad = Request(prompt=[5, 5], max_new_tokens=4,
+                  x_a=np.zeros(qwen.cfg.d_active + 3, np.float32))
+    out = qwen.serve([Request(prompt=[3, 1, 4, 1], max_new_tokens=4),
+                      bad,
+                      Request(prompt=[3, 1, 4, 1], max_new_tokens=4)])
+    assert [c.finish_reason for c in out] == ["length", "error", "length"]
+    assert "bad_x_a" in out[1].error
+    assert out[0].tokens == solo.tokens == out[2].tokens
+    # the same request is also rejected synchronously at a wired queue
+    with pytest.raises(RequestRejected):
+        qwen.queue().submit(clone(bad))
+
+
+def test_poisoned_request_fails_only_its_future(qwen):
+    eng = fresh(qwen, faults=ServeFaultPlan(poison_rids=(1,)))
+    reqs = make_requests(eng.cfg.vocab_size, 3, gen=4)
+    out = eng.serve(reqs)
+    assert [c.finish_reason for c in out] == ["length", "error", "length"]
+    assert "poisoned" in out[1].error
+    assert out[0].tokens == qwen.serve([clone(reqs[0])])[0].tokens
+
+
+# ---------------------------------------------------------------------------
+# deadlines: queue-side shed + running-slot preemption
+# ---------------------------------------------------------------------------
+def test_deadline_shed_from_queue(qwen):
+    normal = Request(prompt=[3, 1, 4, 1], max_new_tokens=4)
+    doomed = Request(prompt=[2, 7, 1], max_new_tokens=4, deadline_s=1e-9)
+    out = qwen.serve([clone(normal), doomed])
+    assert out[0].finish_reason == "length"
+    assert out[1].finish_reason == "expired" and out[1].tokens == []
+    assert qwen.last_run_stats["shed_expired"] == 1
+
+
+def test_deadline_preempts_running_slot(qwen):
+    """A stall fault pushes wall-clock past the deadline mid-decode: the
+    slot is preempted with its partial tokens, finish_reason="expired".
+    Deterministic: the 0.3 s injected stall always overshoots the
+    0.15 s deadline, while the healthy steps before it stay ~ms."""
+    ref = qwen.serve([Request(prompt=[3, 1, 4, 1], max_new_tokens=20,
+                              seed=5)])[0]
+    eng = fresh(qwen, faults=ServeFaultPlan(
+        stalls=(StepStall(at_step=6, stall_s=0.3),)))
+    out = eng.serve([Request(prompt=[3, 1, 4, 1], max_new_tokens=20,
+                             seed=5, deadline_s=0.15)])[0]
+    assert out.finish_reason == "expired"
+    assert 0 < len(out.tokens) < 20
+    assert out.tokens == ref.tokens[:len(out.tokens)]   # prefix parity
+    assert eng.last_run_stats["preempted"] == 1
+
+
+# ---------------------------------------------------------------------------
+# exit paths: no future is ever left hanging
+# ---------------------------------------------------------------------------
+def test_max_steps_abort_resolves_everything(qwen):
+    """Regression for the PR-8 behaviour where exceeding max_steps
+    raised with every in-flight and queued future unresolved forever."""
+    eng = fresh(qwen)
+    q = RequestQueue()
+    futs = [q.submit(r) for r in
+            make_requests(eng.cfg.vocab_size, 6, gen=20)]
+    q.close()
+    with pytest.raises(SchedulerAborted):
+        eng.run(q, max_steps=5)
+    assert all(f.done() for f in futs)       # nobody hangs
+    reasons = [f.result().finish_reason for f in futs]
+    assert all(r == "aborted" for r in reasons)
+    # queued-but-never-admitted requests abort with no tokens
+    assert any(len(f.result().tokens) == 0 for f in futs)
+    assert q.closed
+
+
+def test_crash_fails_futures_by_default(qwen):
+    eng = fresh(qwen, faults=ServeFaultPlan(crashes=(5,)))
+    q = RequestQueue()
+    futs = [q.submit(r) for r in
+            make_requests(eng.cfg.vocab_size, 6, gen=6)]
+    q.close()
+    with pytest.raises(EngineCrashed):
+        eng.run(q)
+    assert all(f.done() for f in futs)
+    assert all(isinstance(f.exception(), EngineCrashed) for f in futs)
+
+
+# ---------------------------------------------------------------------------
+# deterministic faults: transient step failure, crash + recovery replay
+# ---------------------------------------------------------------------------
+def test_step_failure_retried_bit_identical(qwen):
+    reqs = make_requests(qwen.cfg.vocab_size, 5, gen=6)
+    ref = qwen.serve([clone(r) for r in reqs])
+    eng = fresh(qwen, faults=ServeFaultPlan(step_fails=(2, 7)))
+    out = eng.serve([clone(r) for r in reqs])
+    assert [c.tokens for c in out] == [c.tokens for c in ref]
+    assert eng.last_run_stats["step_retries"] == 2
+    assert all(c.ok for c in out)
+
+
+def test_crash_recovery_replays_token_for_token(qwen):
+    """THE acceptance criterion: an engine crash mid-batch, recovered by
+    run_with_recovery, completes every submitted request with outputs
+    token-for-token identical to the fault-free run."""
+    reqs = make_requests(qwen.cfg.vocab_size, 6, gen=6, seed0=20)
+    ref = qwen.serve([clone(r) for r in reqs])
+
+    eng = fresh(qwen, faults=ServeFaultPlan(crashes=(10,)))
+    q = eng.queue()
+    futs = [q.submit(clone(r)) for r in reqs]
+    q.close()
+    res = run_with_recovery(eng, q, max_restarts=3, backoff_s=0.0)
+    assert res.restarts == 1 and len(res.recovery_s) == 1
+    assert all(f.done() for f in futs)
+    out = res.completions
+    assert len(out) == len(reqs)
+    assert [c.tokens for c in out] == [c.tokens for c in ref]
+    assert all(c.ok for c in out)
+    # the futures resolve to the same completions
+    assert [f.result().tokens for f in futs] == [c.tokens for c in ref]
+
+
+def test_recovery_survives_multiple_crashes(qwen):
+    reqs = make_requests(qwen.cfg.vocab_size, 6, gen=6, seed0=40)
+    ref = qwen.serve([clone(r) for r in reqs])
+    eng = fresh(qwen, faults=ServeFaultPlan(crashes=(8, 6)))
+    q = eng.queue()
+    for r in reqs:
+        q.submit(clone(r))
+    q.close()
+    res = run_with_recovery(eng, q, max_restarts=4, backoff_s=0.0)
+    assert res.restarts == 2
+    assert [c.tokens for c in res.completions] == [c.tokens for c in ref]
+
+
+def test_recovery_gives_up_and_fails_futures(qwen):
+    eng = fresh(qwen, faults=ServeFaultPlan(crashes=(0, 0, 0, 0, 0)))
+    q = eng.queue()
+    futs = [q.submit(r) for r in
+            make_requests(eng.cfg.vocab_size, 4, gen=4, seed0=60)]
+    q.close()
+    with pytest.raises(RecoveryGaveUp):
+        run_with_recovery(eng, q, max_restarts=2, backoff_s=0.0)
+    assert all(f.done() for f in futs)
+    assert all(isinstance(f.exception(), (RecoveryGaveUp, EngineCrashed))
+               for f in futs)
+
+
+def test_drift_and_stall_accounted(qwen):
+    eng = fresh(qwen, faults=ServeFaultPlan(
+        stalls=(StepStall(at_step=1, stall_s=0.02),),
+        drift=StragglerDrift(start_step=0, per_step_s=1e-4, cap_s=0.002)))
+    out = eng.serve([Request(prompt=[3, 1, 4, 1], max_new_tokens=4)])
+    assert out[0].ok
+    assert eng.last_run_stats["injected_stall_s"] >= 0.02
